@@ -1,0 +1,52 @@
+"""Paper §3.7 (FC batching) in the LM-decode regime.
+
+Analytical tokens/s vs decode batch (weight streaming amortization — the
+saturating curve of eq. 6), plus a measured CPU curve from the serving
+engine on a reduced config (relative shape is backend-independent).
+"""
+from .common import emit, time_us
+
+
+def rows():
+    from repro.core import dse
+    inp = dse.TPUModelInput(n_active=15e9, n_total=15e9, seq_len=32768,
+                            global_batch=1, kind="decode", d_model=6144,
+                            num_layers=40,
+                            cache_bytes_per_token=40 * 2 * 4 * 128 * 2)
+    curve = dse.decode_batch_curve(inp, data=16, model=16)
+    out = []
+    for r in curve:
+        out.append({"name": f"decode_batch/model_b{r['batch']}",
+                    "us_per_call": r["step_time"] * 1e6,
+                    "derived": (f"tokens_s={r['throughput_tokens_s']:.0f}"
+                                f";bound={r['bound']}"
+                                f";mfu={r['mfu']*100:.2f}%")})
+
+    # measured engine curve (reduced config, CPU)
+    import numpy as np
+    from repro.configs import get_config
+    from repro.serving import Engine, Request, ServeConfig
+    cfg = get_config("smollm-360m").reduced()
+
+    def run(n):
+        eng = Engine(cfg, ServeConfig(max_batch=8, max_len=64,
+                                      prefill_bucket=8), seed=0)
+        for _ in range(n):
+            eng.submit(Request(prompt=[1, 2, 3, 4, 5, 6, 7, 8], max_new=16))
+        eng.run_until_done()
+        return eng._t_decode / max(eng.decode_steps, 1)
+
+    t1, t8 = run(1), run(8)
+    out.append({"name": "decode_batch/engine_measured",
+                "us_per_call": t8 * 1e6,
+                "derived": (f"t_step_b1={t1*1e3:.2f}ms;t_step_b8={t8*1e3:.2f}ms"
+                            f";amortization={8*t1/t8:.1f}x_of_8x")})
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

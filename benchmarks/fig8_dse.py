@@ -1,0 +1,49 @@
+"""Paper Fig. 8: expected throughput over (C_vec, K_vec) — DSE surface.
+
+Reproduces the sweep with the resource constraints of the Arria-10 1150;
+the paper's chosen 8x48 must rank among the peak points.  Also runs the TPU
+analog: (data, model) mesh factorization sweep for an LM cell.
+"""
+from .common import emit, time_us
+
+
+def rows():
+    from repro.core import dse
+    sweep = dse.explore_fpga()
+    t = time_us(dse.explore_fpga, iters=1)
+    feasible = [r for r in sweep if r["img_per_s"] > 0]
+    best = max(feasible, key=lambda r: r["img_per_s"])
+    p848 = next(r for r in sweep if (r["c_vec"], r["k_vec"]) == (8, 48))
+    out = [{
+        "name": "fig8/fpga_sweep",
+        "us_per_call": t,
+        "derived": (f"points={len(sweep)};feasible={len(feasible)}"
+                    f";best=({best['c_vec']}x{best['k_vec']},"
+                    f"{best['img_per_s']:.0f}img/s)"
+                    f";paper_848={p848['img_per_s']:.0f}img/s"
+                    f";within={(p848['img_per_s']/best['img_per_s'])*100:.1f}%"),
+    }]
+    for r in sorted(feasible, key=lambda r: -r["img_per_s"])[:5]:
+        out.append({"name": f"fig8/c{r['c_vec']}_k{r['k_vec']}",
+                    "us_per_call": 0.0,
+                    "derived": f"img_per_s={r['img_per_s']:.0f}"})
+    # TPU analog: mesh factorization sweep for llama3.2-3b train
+    inp = dse.TPUModelInput(n_active=3.2e9, n_total=3.2e9, seq_len=4096,
+                            global_batch=256, kind="train", d_model=3072,
+                            num_layers=28)
+    tpu = dse.explore_tpu(inp, chips=256)
+    bt = max(tpu, key=lambda r: r["mfu"])
+    out.append({"name": "fig8/tpu_mesh_sweep",
+                "us_per_call": 0.0,
+                "derived": (f"best=(data{bt['data']}xmodel{bt['model']})"
+                            f";mfu={bt['mfu']*100:.1f}%"
+                            f";bound={bt['bound']}")})
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

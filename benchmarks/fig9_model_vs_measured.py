@@ -1,0 +1,65 @@
+"""Paper Fig. 9: analytical model vs measurement.
+
+Two validations (no FPGA / TPU silicon in this container):
+  1. FPGA side — our eq. 2-7 model (with the paper's measured 16% system
+     overhead) vs the paper's published measured points (1020 img/s @ 8x48).
+  2. TPU side — the DSE cost model's FLOP counts vs XLA's compiled
+     cost_analysis for the AlexNet forward pass (model vs "measured" on the
+     artifact we *can* measure here: the compiled HLO).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_us
+
+
+def rows():
+    from repro.core.dse import (ALEXNET_CONV, ALEXNET_FC, DLAConfig,
+                                alexnet_throughput)
+    out = []
+    for cvec, kvec, paper_meas in [(8, 48, 1020.0)]:
+        r = alexnet_throughput(DLAConfig(c_vec=cvec, k_vec=kvec),
+                               system_overhead=0.16)
+        dev = (r["img_per_s"] - paper_meas) / paper_meas
+        out.append({"name": f"fig9/model_vs_paper_{cvec}x{kvec}",
+                    "us_per_call": 1e6 / r["img_per_s"],
+                    "derived": (f"model={r['img_per_s']:.0f}img/s"
+                                f";paper_measured={paper_meas:.0f}"
+                                f";deviation={dev*100:+.1f}%")})
+
+    # TPU: model FLOPs vs compiled HLO FLOPs for AlexNet fwd (batch 16)
+    from repro.configs import get_config
+    from repro.models import alexnet
+    cfg = get_config("alexnet")
+    B = 16
+    params = jax.eval_shape(lambda k: alexnet.init(k, cfg),
+                            jax.random.PRNGKey(0))
+    imgs = jax.ShapeDtypeStruct((B, 227, 227, 3), jnp.float32)
+    import dataclasses
+    for wino in (False, True):
+        c = dataclasses.replace(cfg, use_winograd=wino)
+        compiled = jax.jit(
+            lambda p, x: alexnet.apply(p, c, x)).lower(params, imgs).compile()
+        ca = compiled.cost_analysis()
+        hlo_flops = float(ca.get("flops", 0))
+        model_macs = sum(2 * k * (ci // g) * p * q * r * s
+                         for (_, ci, k, p, q, r, s, _, g) in ALEXNET_CONV)
+        model_macs += sum(2 * ci * k for (_, ci, k) in ALEXNET_FC)
+        model_flops = model_macs * B
+        out.append({
+            "name": f"fig9/tpu_hlo_vs_model_wino={int(wino)}",
+            "us_per_call": 0.0,
+            "derived": (f"hlo_gflops={hlo_flops/1e9:.1f}"
+                        f";model_gflops={model_flops/1e9:.1f}"
+                        f";ratio={hlo_flops/model_flops:.2f}"),
+        })
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp twin vs oracle.
+
+CPU wall times are for harness sanity/relative comparison only (the kernels
+target TPU); `derived` carries the arithmetic-intensity facts that transfer.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import emit, time_us
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+
+    # winograd 1d (mamba conv shape: d_inner=1024 slice)
+    from repro.core.winograd import conv1d_depthwise_causal as jnp1d
+    from repro.kernels.winograd.ref import conv1d_depthwise_causal_ref
+    x = jnp.asarray(rng.standard_normal((4, 2048, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 512)), jnp.float32)
+    t_ref = time_us(jax.jit(conv1d_depthwise_causal_ref), x, w)
+    t_wg = time_us(jax.jit(jnp1d), x, w)
+    out.append({"name": "kernels/wino1d_f34",
+                "us_per_call": t_wg,
+                "derived": (f"direct_us={t_ref:.0f};mults_ratio=2.0"
+                            f";shape=4x2048x512xk4")})
+
+    # winograd 2d (alexnet conv3)
+    from repro.core.winograd import conv2d_direct, conv2d_winograd
+    x2 = jnp.asarray(rng.standard_normal((8, 13, 13, 256)), jnp.float32)
+    w2 = jnp.asarray(rng.standard_normal((3, 3, 256, 384)) * .05, jnp.float32)
+    t_d = time_us(jax.jit(lambda a, b: conv2d_direct(a, b)), x2, w2)
+    t_w = time_us(jax.jit(lambda a, b: conv2d_winograd(a, b)), x2, w2)
+    out.append({"name": "kernels/wino2d_f43_conv3",
+                "us_per_call": t_w,
+                "derived": f"direct_us={t_d:.0f};speedup={t_d/t_w:.2f}x"})
+
+    # bfp matmul (decode weight-streaming shape)
+    from repro.core.bfp import bfp_matmul
+    xm = jnp.asarray(rng.standard_normal((8, 4096)), jnp.float32)
+    wm = jnp.asarray(rng.standard_normal((4096, 1024)), jnp.float32)
+    t_bf = time_us(lambda a, b: bfp_matmul(a, b, block=32, bits=8), xm, wm)
+    t_ex = time_us(jax.jit(lambda a, b: a @ b), xm, wm)
+    out.append({"name": "kernels/bfp_matmul_8b",
+                "us_per_call": t_bf,
+                "derived": (f"exact_us={t_ex:.0f};wire_bytes=0.53x_bf16"
+                            f";rel_err<1.6e-2")})
+
+    # ssd chunked scan (pallas interpret vs jnp twin)
+    from repro.kernels.ssd.ssd import ssd_chunked_pallas
+    from repro.nn.ssd import ssd_chunked as jnp_ssd
+    B, L, H, P, G, N = 2, 1024, 8, 64, 1, 64
+    xs = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dts = jnp.asarray(rng.uniform(0.001, 0.1, (B, L, H)), jnp.float32)
+    As = jnp.asarray(-rng.uniform(0.5, 2, (H,)), jnp.float32)
+    Bs = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    Cs = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    t_j = time_us(jax.jit(lambda *a: jnp_ssd(*a, 128)), xs, dts, As, Bs, Cs)
+    t_p = time_us(lambda *a: ssd_chunked_pallas(*a, chunk=128,
+                                                interpret=True),
+                  xs, dts, As, Bs, Cs, iters=1)
+    out.append({"name": "kernels/ssd_chunk128",
+                "us_per_call": t_j,
+                "derived": (f"pallas_interpret_us={t_p:.0f}"
+                            f";vmem_per_step=(Q*P+2QN+NP)*4B"
+                            f"={(128*64+2*128*64+64*64)*4//1024}KiB")})
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""§Roofline source: per (arch x shape x mesh) roofline terms from the
+dry-run JSONL (results/dryrun.jsonl)."""
+import json
+import os
+
+from .common import emit
+
+DRYRUN = os.environ.get("DRYRUN_JSONL", "results/dryrun.jsonl")
+
+
+def load(path=DRYRUN):
+    recs = {}
+    if not os.path.exists(path):
+        return recs
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            # keep the latest record per cell
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def rows():
+    recs = load()
+    out = []
+    if not recs:
+        return [{"name": "roofline/missing", "us_per_call": 0,
+                 "derived": f"no dry-run data at {DRYRUN}; run "
+                            "python -m repro.launch.dryrun first"}]
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            out.append({"name": f"roofline/{arch}/{shape}/{mesh}",
+                        "us_per_call": 0,
+                        "derived": f"SKIPPED:{r['reason'][:40]}"})
+            continue
+        if r["status"] != "ok":
+            out.append({"name": f"roofline/{arch}/{shape}/{mesh}",
+                        "us_per_call": 0,
+                        "derived": f"ERROR:{r.get('error','')[:60]}"})
+            continue
+        t = r["roofline"]
+        out.append({
+            "name": f"roofline/{arch}/{shape}/{mesh}",
+            "us_per_call": t["step_time"] * 1e6,
+            "derived": (f"t_comp={t['t_compute']*1e3:.2f}ms"
+                        f";t_mem={t['t_memory']*1e3:.2f}ms"
+                        f";t_coll={t['t_collective']*1e3:.2f}ms"
+                        f";bound={t['bound']}"
+                        f";useful_flops={t['useful_flops_ratio']*100:.0f}%"
+                        f";roofline_frac={t['roofline_fraction']*100:.1f}%"),
+        })
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

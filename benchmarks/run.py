@@ -1,0 +1,33 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  CPU wall times are for relative
+comparison / harness sanity (TPU v5e is the target, not the runtime);
+``derived`` fields carry the model numbers compared against the paper.
+"""
+from . import (decode_batching, fig8_dse, fig9_model_vs_measured,
+               kernels_bench, roofline_table, table2_layers,
+               table5_fpga_comparison, table6_efficiency)
+
+MODULES = [
+    ("table2", table2_layers),
+    ("fig8", fig8_dse),
+    ("fig9", fig9_model_vs_measured),
+    ("table5", table5_fpga_comparison),
+    ("table6", table6_efficiency),
+    ("decode_batching", decode_batching),
+    ("kernels", kernels_bench),
+    ("roofline", roofline_table),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, mod in MODULES:
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness running; surface the error
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 6: throughput and power efficiency vs GPU baselines.
+
+img/s from our analytical model; power numbers are the published board
+figures (45 W A10 dev-kit, 227 W TitanX, 58 W M4, 25 W KU060) — power is a
+property of the hardware, not reproducible in software.
+"""
+from .common import emit
+
+PUBLISHED = {
+    "dla_paper": (1020, 45.0),
+    "ku060": (104, 25.0),
+    "titanx": (5120, 227.0),
+    "m4": (1150, 58.0),
+}
+
+
+def rows():
+    from repro.core.dse import DLAConfig, alexnet_throughput
+    r = alexnet_throughput(DLAConfig(c_vec=8, k_vec=48),
+                           system_overhead=0.16)
+    ours = r["img_per_s"] / 45.0
+    out = [{"name": "table6/dla_img_s_per_w",
+            "us_per_call": 0.0,
+            "derived": (f"model={ours:.1f}img/s/W;paper=23"
+                        f";board_w=45")}]
+    for name, (imgs, watts) in PUBLISHED.items():
+        out.append({"name": f"table6/{name}",
+                    "us_per_call": 0.0,
+                    "derived": (f"img_s={imgs};watts={watts}"
+                                f";img_s_per_w={imgs/watts:.1f}"
+                                f";dla_ratio={ours/(imgs/watts):.2f}x")})
+    return out
+
+
+def main():
+    emit(rows())
+
+
+if __name__ == "__main__":
+    main()

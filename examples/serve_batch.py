@@ -1,0 +1,68 @@
+"""Continuous-batching serving demo (paper §3.7 FC-batching, decode regime).
+
+    PYTHONPATH=src python examples/serve_batch.py [--arch llama3.2-3b]
+
+Submits a stream of mixed-length requests to the slot-based engine and
+reports the batching amortization (per-step decode time vs occupancy) —
+the LM analogue of the paper's S_batch=96 FC batching.
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np                                         # noqa: E402
+
+from repro.configs import ASSIGNED, get_config             # noqa: E402
+from repro.serving import Engine, Request, ServeConfig     # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b", choices=ASSIGNED)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    scfg = ServeConfig(max_batch=args.max_batch, max_len=160,
+                       prefill_bucket=16,
+                       cross_len=64 if cfg.family == "audio" else 0)
+    eng = Engine(cfg, scfg, seed=0)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 48))
+        req = Request(prompt=list(rng.integers(1, cfg.vocab_size, plen)),
+                      max_new=args.max_new)
+        if cfg.family == "audio":
+            req.frames = (rng.standard_normal((64, cfg.d_model)) * 0.1
+                          ).astype(np.float32)
+        if cfg.family == "vlm":
+            req.patches = (rng.standard_normal((cfg.num_patches, 1024)) * 0.1
+                           ).astype(np.float32)
+        reqs.append(req)
+        eng.submit(req)
+
+    t0 = time.perf_counter()
+    eng.run_until_done()
+    wall = time.perf_counter() - t0
+    done = sum(r.done for r in reqs)
+    print(f"arch={args.arch}  finished {done}/{len(reqs)} requests "
+          f"in {wall:.1f}s")
+    print(f"tokens generated: {eng.tokens_generated} "
+          f"({eng.decode_steps} batched decode steps, "
+          f"avg occupancy "
+          f"{eng.tokens_generated/max(eng.decode_steps,1):.2f}/step)")
+    print(f"decode throughput: {eng.decode_tokens_per_s:.1f} tok/s "
+          f"(weight stream amortized over the batch — paper §3.7)")
+    assert done == len(reqs)
+    print("serve_batch OK")
+
+
+if __name__ == "__main__":
+    main()

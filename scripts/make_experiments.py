@@ -1,0 +1,102 @@
+"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from dry-run JSONL.
+
+    PYTHONPATH=src python scripts/make_experiments.py results/dryrun.jsonl
+"""
+import json
+import sys
+from collections import OrderedDict
+
+HW = "v5e-class: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI"
+
+
+def load(path):
+    recs = OrderedDict()
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(recs):
+    out = ["| arch | shape | mesh | status | compile s | args GiB/dev | "
+           "temp GiB/dev | HLO flops/dev | HBM bytes/dev | coll bytes/dev | "
+           "#colls (in-loop) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in recs.items():
+        if r["status"] != "ok":
+            why = r.get("reason", r.get("error", ""))[:60]
+            out.append(f"| {a} | {s} | {m} | {r['status']}: {why} "
+                       "| | | | | | | |")
+            continue
+        t = r["roofline"]
+        cb = t["coll_breakdown"]
+        out.append(
+            f"| {a} | {s} | {m} | ok | {r['t_compile_s']} "
+            f"| {fmt_bytes(r['memory']['argument_size'])} "
+            f"| {fmt_bytes(r['memory']['temp_size'])} "
+            f"| {t['flops_per_device']:.2e} "
+            f"| {t['hbm_bytes_per_device']:.2e} "
+            f"| {t['coll_bytes_per_device']:.2e} "
+            f"| {cb.get('count',0)} ({cb.get('in_loop_count',0)}) |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+           "bound | MODEL_FLOPS | useful/HLO | roofline frac | "
+           "what would move the dominant term |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in recs.items():
+        if r["status"] != "ok":
+            continue
+        t = r["roofline"]
+        hint = _hint(t, r)
+        out.append(
+            f"| {a} | {s} | {m} "
+            f"| {t['t_compute']*1e3:.2f} | {t['t_memory']*1e3:.2f} "
+            f"| {t['t_collective']*1e3:.2f} | **{t['bound']}** "
+            f"| {t['model_flops']:.2e} "
+            f"| {t['useful_flops_ratio']*100:.0f}% "
+            f"| {t['roofline_fraction']*100:.1f}% | {hint} |")
+    return "\n".join(out)
+
+
+def _hint(t, r):
+    b = t["bound"]
+    if b == "memory":
+        if r["kind"] == "decode":
+            return "BFP-int8 weight/cache streaming (~2x fewer bytes)"
+        return "reduce remat re-reads / fuse transients (smaller MoE groups, bf16 dispatch)"
+    if b == "collective":
+        return "BFP-compressed grad reduce-scatter; fewer per-layer all-gathers (SP rules)"
+    return "Winograd-style arithmetic reduction / skip masked attention tiles"
+
+
+def main(path):
+    recs = load(path)
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    sk = sum(1 for r in recs.values() if r["status"] == "skipped")
+    er = len(recs) - ok - sk
+    print(f"## §Dry-run\n")
+    print(f"Hardware model: {HW}.  Meshes: 16x16 (256 chips/pod) and "
+          f"2x16x16 (512 chips, multi-pod).  Cells: {ok} ok, {sk} skipped "
+          f"(documented), {er} errors.\n")
+    print(dryrun_table(recs))
+    print(f"\n## §Roofline\n")
+    print("Terms per the assignment: compute = HLO_FLOPs/(chips*peak); "
+          "memory = HLO_bytes/(chips*HBM_bw); collective = "
+          "coll_bytes/(chips*link_bw).  FLOPs/bytes are re-derived "
+          "loop-aware from the partitioned HLO (XLA cost_analysis counts "
+          "while bodies once; see core/roofline.analyze_hlo).  All values "
+          "are per-device (the partitioned module), so the chips factor is "
+          "already applied.\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.jsonl")

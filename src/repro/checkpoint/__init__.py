@@ -1,0 +1,2 @@
+from .checkpoint import (AsyncCheckpointer, latest_step, restore,  # noqa: F401
+                         save)

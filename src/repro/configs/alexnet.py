@@ -1,0 +1,10 @@
+"""AlexNet — the paper's own benchmark topology (Krizhevsky 2012).
+
+Drives the paper-table benchmarks: Table 2 (per-layer GFLOPS/efficiency),
+Fig. 8 (DSE surface), Fig. 9 (model vs measured), Tables 5/6 (throughput).
+"""
+from repro.models.alexnet import AlexNetConfig
+
+
+def config() -> AlexNetConfig:
+    return AlexNetConfig()

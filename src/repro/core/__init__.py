@@ -1,0 +1,9 @@
+"""The paper's contribution as composable modules:
+
+  winograd  — general Cook-Toom F(m,r) transforms (paper §3.3)
+  bfp       — shared-exponent block floating point (paper §3.6)
+  dse       — analytical resource/throughput models + exploration (paper §4)
+  roofline  — compute/memory/collective terms from compiled HLO
+  streambuf — double-buffered host->device prefetch (paper §3.5 analog)
+"""
+from . import bfp, dse, roofline, streambuf, winograd  # noqa: F401

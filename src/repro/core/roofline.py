@@ -1,0 +1,546 @@
+"""Roofline-term extraction from compiled XLA artifacts (no silicon needed).
+
+Three terms per (arch x shape x mesh), per the assignment:
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * link_bw)
+
+``compiled.cost_analysis()`` yields FLOPs/bytes of the *partitioned*
+(per-device) module; we rescale to the global convention the formulas above
+expect (x chips) so both conventions are recorded explicitly.
+
+collective_bytes is not in cost_analysis, so the (post-SPMD) HLO text is
+parsed: for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute we take the result shape (per-device) and convert to
+*wire bytes per device* with ring-algorithm factors:
+
+  all-gather:        R*(g-1)/g        (R = result bytes, g = group size)
+  all-reduce:        2*R*(g-1)/g      (ring RS + AG)
+  reduce-scatter:    R*(g-1)          (operand = R*g)
+  all-to-all:        R*(g-1)/g
+  collective-permute R
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+# --- TPU v5e-class hardware constants (per assignment) ----------------------
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9\[\],\s{}()]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+# "%name = TYPE op(args...)": TYPE parsed lazily up to the space before the
+# op token (TYPE may be a tuple and contain parens/spaces itself).
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s([a-z][a-z0-9\-]*)\(")
+_ARGS_RE = re.compile(r"%([\w.\-]+)")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _split_computations(hlo_text: str):
+    """-> (computation name -> list of op lines, entry computation name)."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    return comps, entry
+
+
+def _dims(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, ()
+    dt, dims = m.groups()
+    return dt, tuple(int(d) for d in dims.split(",") if d)
+
+
+def analyze_hlo(hlo_text: str, default_trip: int = 1) -> dict:
+    """Loop-aware static analysis of post-partitioning HLO text.
+
+    XLA's ``compiled.cost_analysis()`` counts while bodies ONCE (measured:
+    scan-over-layers FLOPs come out ~n_layers too small), so we re-derive:
+
+      * per-computation execution multipliers: while bodies multiply by the
+        ``known_trip_count`` backend_config (fallback ``default_trip``),
+        nested loops compose multiplicatively via the call graph;
+      * FLOPs: 2 * prod(result dims) * prod(lhs contracting dims) per dot;
+      * HBM bytes: operand+result bytes of ops in non-fused computations
+        (fusion bodies touch VMEM/registers, not HBM), with slice-aware
+        special cases for dynamic-(update-)slice and zero-cost ops skipped;
+      * collective wire bytes by kind (ring-algorithm factors).
+    """
+    comps, entry = _split_computations(hlo_text)
+
+    # ---- symbol table: op name -> (dtype, dims) of its result -------------
+    shapes = {}
+    kinds = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                name, type_str, op = m.groups()
+                shapes[name] = type_str
+                kinds[name] = op
+
+    # ---- call graph with multipliers ---------------------------------------
+    fused: set = set()
+    edges: dict = {c: [] for c in comps}          # comp -> [(callee, mult)]
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                mb = _WHILE_BODY_RE.search(line)
+                if mb:
+                    mt = _TRIP_RE.search(line)
+                    trip = int(mt.group(1)) if mt else default_trip
+                    edges[cname].append((mb.group(1), trip))
+                mc = re.search(r"condition=%?([\w.\-]+)", line)
+                if mc:
+                    edges[cname].append((mc.group(1), 1))
+                continue
+            for key in ("calls=", "to_apply=", "branch_computations={",
+                        "true_computation=", "false_computation="):
+                if key in line:
+                    for callee in re.findall(key.rstrip("{") + r"\{?%?([\w.\-]+)",
+                                             line):
+                        edges[cname].append((callee, 1))
+                        if "fusion(" in line:
+                            fused.add(callee)
+
+    mult = {c: 0.0 for c in comps}
+    if entry in mult:
+        mult[entry] = 1.0
+    # propagate along the DAG (bounded passes; HLO has no recursion)
+    for _ in range(64):
+        changed = False
+        new = {c: 0.0 for c in comps}
+        new[entry] = 1.0
+        for c in comps:
+            for callee, m in edges[c]:
+                if callee in new:
+                    new[callee] += mult.get(c, 0.0) * m
+        for c in comps:
+            tot = new[c]
+            if abs(tot - mult[c]) > 1e-9:
+                changed = True
+            mult[c] = tot
+        if not changed:
+            break
+
+    # fusion bodies inherit "fused" through nested fusion calls
+    frontier = list(fused)
+    while frontier:
+        c = frontier.pop()
+        for callee, _ in edges.get(c, []):
+            if callee not in fused:
+                fused.add(callee)
+                frontier.append(callee)
+
+    SKIP_BYTES = {"get-tuple-element", "tuple", "parameter", "constant",
+                  "bitcast", "while", "conditional", "after-all",
+                  "opt-barrier"}
+
+    _PARAM_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*.*?\sparameter\((\d+)\)")
+
+    def _fusion_traffic(callee: str, result_bytes: int, fname: str) -> float:
+        """HBM traffic of one fusion call: per-parameter slice-aware reads +
+        root-aware writes (DUS roots are in-place; convert roots fuse into
+        consumers on TPU)."""
+        lines = comps.get(callee)
+        if lines is None:
+            return None
+        params = {}
+        for line in lines:
+            mp = _PARAM_RE.match(line)
+            if mp:
+                params[mp.group(1)] = _shape_bytes(shapes.get(mp.group(1), ""))
+        traffic = 0.0
+        root_line = ""
+        for line in lines:
+            if re.match(r"^\s*ROOT\s", line):
+                root_line = line
+        for pname, pbytes in params.items():
+            consumer = None
+            for line in lines:
+                if re.search(r"\(%" + re.escape(pname) + r"[,)]", line) or \
+                   re.search(r",\s*%" + re.escape(pname) + r"[,)]", line):
+                    consumer = line
+                    break
+            if consumer is not None:
+                mc_ = _DEF_RE.match(consumer)
+                cop = mc_.group(3) if mc_ else ""
+                if cop == "dynamic-slice":
+                    traffic += _shape_bytes(mc_.group(2))   # slice read only
+                    continue
+                if cop == "dynamic-update-slice":
+                    args_ = _ARGS_RE.findall(consumer.split("(", 1)[1])
+                    if args_ and args_[0] == pname:
+                        continue                            # in-place buffer
+                    traffic += 2 * pbytes                   # update r/w
+                    continue
+            traffic += pbytes
+        if "dynamic-update-slice" in root_line:
+            pass                                            # in-place write
+        elif "convert" in fname and result_bytes > sum(params.values()):
+            pass                                            # fuses on TPU
+        else:
+            traffic += result_bytes
+        return traffic
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+            "all-to-all": 0.0, "collective-permute": 0.0, "count": 0,
+            "in_loop_count": 0}
+
+    for cname, lines in comps.items():
+        m_c = mult.get(cname, 0.0)
+        if m_c <= 0:
+            continue
+        in_fusion = cname in fused
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            name, type_str, op = md.groups()
+            # --- flops: dots (anywhere, incl. fusion bodies) ---------------
+            if op == "dot":
+                args = _ARGS_RE.findall(line.split("(", 1)[1])
+                cd = _CDIMS_RE.search(line)
+                _, rdims = _dims(type_str)
+                lhs_dims = ()
+                if args:
+                    _, lhs_dims = _dims(shapes.get(args[0], ""))
+                csize = 1
+                if cd:
+                    for i in cd.group(1).split(","):
+                        if i and int(i) < len(lhs_dims):
+                            csize *= lhs_dims[int(i)]
+                f = 2.0
+                for d in rdims:
+                    f *= d
+                flops += f * csize * m_c
+            # --- collectives ------------------------------------------------
+            kw = _line_wire_bytes(line)
+            if kw is not None:
+                kind, wire = kw
+                # TPU-width projection: the CPU backend upcasts bf16 dot
+                # inputs to f32, so collectives of convert-fusion outputs are
+                # counted at the narrow source width (on TPU they stay bf16).
+                args_c = _ARGS_RE.findall(line.split("(", 1)[1])
+                if args_c:
+                    src = args_c[0]
+                    sdt, _ = _dims(shapes.get(src, ""))
+                    if kinds.get(src) == "fusion" and sdt == "f32":
+                        mcall2 = None
+                        for l2 in lines:
+                            if re.match(r"^\s*(?:ROOT\s+)?%" + re.escape(src)
+                                        + r"\s*=", l2):
+                                mcall2 = re.search(r"calls=%?([\w.\-]+)", l2)
+                                break
+                        if mcall2 and any(
+                                ("bf16[" in pl and
+                                 ("parameter(" in pl or " convert(" in pl))
+                                for pl in comps.get(mcall2.group(1), [])):
+                            wire *= 0.5
+                coll[kind] += wire * m_c
+                coll["count"] += 1
+                if m_c > 1:
+                    coll["in_loop_count"] += 1
+            # --- bytes (non-fused computations only) -----------------------
+            if in_fusion or op in SKIP_BYTES:
+                continue
+            rbytes = _shape_bytes(type_str)
+            args = _ARGS_RE.findall(line.split("(", 1)[1])
+            opbytes = [(_shape_bytes(shapes.get(a, "")), a) for a in args
+                       if kinds.get(a) not in ("constant",)]
+            total_ops = sum(b for b, _ in opbytes)
+            if op == "dynamic-slice":
+                bytes_hbm += 2 * rbytes * m_c
+            elif op == "dynamic-update-slice":
+                upd = total_ops - max((b for b, _ in opbytes), default=0)
+                bytes_hbm += 2 * max(upd, 0) * m_c
+            elif op == "fusion":
+                callee = None
+                mcall = re.search(r"calls=%?([\w.\-]+)", line)
+                if mcall:
+                    callee = mcall.group(1)
+                t = _fusion_traffic(callee, rbytes, name) if callee else None
+                bytes_hbm += (t if t is not None
+                              else rbytes + total_ops) * m_c
+            else:
+                bytes_hbm += (rbytes + total_ops) * m_c
+
+    return {"flops": flops, "bytes": bytes_hbm, "collectives": coll}
+
+
+def _line_wire_bytes(line: str):
+    m = _COLL_RE.search(line)
+    if not m:
+        return None
+    kind = m.group(2).lower()
+    rbytes = _shape_bytes(m.group(1))
+    if rbytes == 0:
+        rbytes = _shape_bytes(line.split("(", 1)[-1])
+    g = _group_size(line)
+    if kind == "all-gather":
+        wire = rbytes * (g - 1) / max(g, 1)
+    elif kind == "all-reduce":
+        wire = 2 * rbytes * (g - 1) / max(g, 1)
+    elif kind == "reduce-scatter":
+        wire = rbytes * (g - 1)
+    elif kind == "all-to-all":
+        wire = rbytes * (g - 1) / max(g, 1)
+    else:
+        wire = rbytes
+    return kind, wire
+
+
+def collective_wire_bytes(hlo_text: str, loop_trip_count: int = 1) -> dict:
+    """Per-device wire bytes by collective kind, from partitioned HLO text.
+
+    Collectives inside ``while`` bodies (scan-over-layers and friends)
+    execute once per iteration; ``loop_trip_count`` (the layer-group count)
+    multiplies them.  Nested loops inside a while body inherit the same
+    multiplier (under-counts deeper nesting; documented in EXPERIMENTS.md).
+    """
+    comps, _entry = _split_computations(hlo_text)
+    # find while bodies (+ their transitive callees)
+    loop_comps: set = set()
+    for lines in comps.values():
+        for line in lines:
+            if " while(" in line or "= while(" in line or " while " in line:
+                mb = _WHILE_BODY_RE.search(line)
+                if mb:
+                    loop_comps.add(mb.group(1))
+    # transitive closure over called computations
+    call_re = re.compile(r"(?:calls=|to_apply=|body=|condition=)%?([\w.\-]+)")
+    frontier = list(loop_comps)
+    while frontier:
+        c = frontier.pop()
+        for line in comps.get(c, []):
+            for callee in call_re.findall(line):
+                if callee not in loop_comps:
+                    loop_comps.add(callee)
+                    frontier.append(callee)
+
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0,
+           "in_loop_count": 0}
+    for name, lines in comps.items():
+        mult = loop_trip_count if name in loop_comps else 1
+        for line in lines:
+            kw = _line_wire_bytes(line)
+            if kw is None:
+                continue
+            kind, wire = kw
+            out[kind] += wire * mult
+            out["count"] += 1
+            if mult > 1:
+                out["in_loop_count"] += 1
+    return out
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).strip("{}").split(","))
+    return 2
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (as reported by the partitioned module)
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    coll_bytes_per_device: float
+    coll_breakdown: dict = field(default_factory=dict)
+    peak_memory_bytes: float = 0.0
+    # analytical reference
+    model_flops: float = 0.0          # 6*N*D (dense) / 6*N_active*D (MoE)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_device / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO FLOPs (catches remat/redundancy waste)."""
+        tot = self.flops_per_device * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step time: max of the three terms (overlap assumed)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of roofline: how close the *useful* work
+        comes to peak if the step ran at the modeled step time."""
+        if self.step_time == 0 or self.chips == 0:
+            return 0.0
+        useful_per_dev = self.model_flops / self.chips
+        return useful_per_dev / (self.step_time * PEAK_FLOPS_BF16)
+
+    def to_json(self) -> dict:
+        d = asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bound=self.bound,
+                 useful_flops_ratio=self.useful_flops_ratio,
+                 step_time=self.step_time,
+                 roofline_fraction=self.roofline_fraction)
+        return d
+
+
+def from_compiled(compiled, hlo_text: str, *, arch: str, shape: str,
+                  mesh: str, chips: int, model_flops: float,
+                  loop_trip_count: int = 1) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    # loop-aware re-derivation (XLA's cost_analysis counts while bodies once)
+    an = analyze_hlo(hlo_text, default_trip=loop_trip_count)
+    coll = dict(an["collectives"])
+    coll["xla_flops_raw"] = float(ca.get("flops", 0.0))
+    coll["xla_bytes_raw"] = float(ca.get("bytes accessed", 0.0))
+    coll_total = sum(v for k, v in an["collectives"].items()
+                     if k not in ("count", "in_loop_count"))
+    mem = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        mem = float(getattr(ma, "temp_size_in_bytes", 0) +
+                    getattr(ma, "argument_size_in_bytes", 0) +
+                    getattr(ma, "output_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops_per_device=float(an["flops"]),
+        hbm_bytes_per_device=float(an["bytes"]),
+        coll_bytes_per_device=float(coll_total),
+        coll_breakdown=coll,
+        peak_memory_bytes=mem,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6*N*D with N = active params (excl. embeddings' readout is included
+    as in common MFU practice: use all matmul params actually touched)."""
+    from ..nn.module import count_params  # lazy
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def active_param_count(cfg) -> float:
+    """Analytical active (per-token) matmul parameter count."""
+    d, L, V = cfg.d_model, cfg.num_layers, cfg.vocab_size
+    total = V * d  # embedding (readout counted below if untied)
+    if not cfg.tie_embeddings:
+        total += V * d
+    for i in range(L):
+        mixer, ffn = cfg.layer_kind(i)
+        if mixer == "attn":
+            if cfg.mla is not None:
+                m = cfg.mla
+                H = cfg.num_heads
+                total += d * H * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                total += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+                total += m.kv_lora_rank * H * (m.qk_nope_head_dim + m.v_head_dim)
+                total += H * m.v_head_dim * d
+            else:
+                hd, H, KV = cfg.d_head, cfg.num_heads, cfg.num_kv_heads
+                total += d * hd * (H + 2 * KV) + H * hd * d
+        else:
+            s = cfg.ssm
+            di, G, N, Hs = cfg.d_inner, s.ngroups, s.d_state, cfg.ssm_heads
+            total += d * (2 * di + 2 * G * N + Hs) + di * d
+        if ffn == "mlp":
+            mult = 3 if cfg.mlp_type == "swiglu" else 2
+            total += mult * d * cfg.d_ff
+        elif ffn == "moe":
+            mo = cfg.moe
+            total += d * mo.num_experts  # router
+            total += 3 * d * mo.d_ff * (mo.top_k + mo.num_shared)
+    if cfg.encoder_layers:
+        hd, H = cfg.d_head, cfg.num_heads
+        per_enc = d * hd * H * 4 + 2 * d * cfg.d_ff
+        total += cfg.encoder_layers * per_enc
+        # decoder cross-attention
+        total += cfg.num_layers * (d * hd * H * 4)
+    return float(total)

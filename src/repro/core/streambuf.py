@@ -1,0 +1,51 @@
+"""Host->device stream buffer (paper §3.5 at the input-pipeline level).
+
+The DLA's stream buffers double-buffer feature maps so the PEs never stall on
+DDR.  The JAX training analogue at the host boundary: while step N computes,
+batch N+1 is already being transferred, so the accelerator never waits on the
+data pipeline.  (Inside the chip, the same role is played by the Pallas grid
+pipeline's automatic double-buffered HBM->VMEM DMA and by XLA's latency
+hiding scheduler for collectives.)
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class StreamBuffer:
+    """Wrap a host batch iterator with ``depth``-deep async device prefetch."""
+
+    def __init__(self, it: Iterator, *, depth: int = 2,
+                 put_fn: Optional[Callable] = None):
+        self._it = it
+        self._put = put_fn or jax.device_put
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._fill, daemon=True)
+        self._thread.start()
+
+    def _fill(self):
+        try:
+            for batch in self._it:
+                # device_put is async: the transfer overlaps compute.
+                self._q.put(self._put(batch))
+        except BaseException as e:   # surfaced on next()
+            self._err = e
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

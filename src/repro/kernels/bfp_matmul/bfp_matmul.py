@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: shared-exponent block-FP matmul (paper §3.6).
+
+The paper fractures Arria-10 DSPs into 18x18 integer multipliers by aligning
+each operand group to its max exponent.  TPU adaptation: the MXU natively
+multiplies int8, so shared-exponent int8 mantissas let the *weight stream*
+(the decode/FC-regime bottleneck) move at 1 byte/value — the bandwidth
+benefit survives even though bf16 compute is free.
+
+Dataflow per (Mb, Nb) output block: activations are quantized **in-kernel**
+per K-block (exponent of the block max — exactly the paper's scheme);
+pre-quantized weight mantissas/exponents stream in; each K-block contributes
+an int8 x int8 -> int32 MXU matmul rescaled by 2^(ex + ew) into an f32
+accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core import bfp
+
+
+def _bfp_kernel(x_ref, wm_ref, we_ref, out_ref, *, block: int, bits: int):
+    x = x_ref[...].astype(jnp.float32)              # (Mb, K)
+    Mb, K = x.shape
+    KB = K // block
+    qmax = float(2 ** (bits - 1) - 1)
+
+    # in-kernel shared-exponent quantization of the activation K-blocks
+    xb = x.reshape(Mb, KB, block)
+    amax = jnp.max(jnp.abs(xb), axis=-1)            # (Mb, KB)
+    e = jnp.where(amax > 0,
+                  jnp.floor(jnp.log2(jnp.where(amax > 0, amax, 1.0))) + 1.0,
+                  0.0)                              # exponent of max (2^(e-1)<=amax<2^e)
+    scale = jnp.exp2((bits - 1.0) - e)
+    mx = jnp.clip(jnp.round(xb * scale[..., None]), -qmax, qmax)
+
+    wm = wm_ref[...]                                # (KB, block, Nb) int8
+    we = we_ref[...].astype(jnp.float32)            # (KB, Nb)
+    Nb = wm.shape[-1]
+
+    def body(kb, acc):
+        a = mx[:, kb, :].astype(jnp.int8)           # (Mb, block)
+        b = wm[kb]                                  # (block, Nb) int8
+        prod = jax.lax.dot_general(
+            a, b, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        s = jnp.exp2(e[:, kb][:, None] + we[kb][None, :]
+                     - 2.0 * (bits - 1.0))
+        return acc + prod * s
+
+    acc = jax.lax.fori_loop(0, KB, body,
+                            jnp.zeros((Mb, Nb), jnp.float32))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "bits", "m_block",
+                                             "n_block", "interpret"))
+def bfp_matmul_pallas(x, wm, we, *, block: int = 32, bits: int = 8,
+                      m_block: int = 128, n_block: int = 256,
+                      interpret: bool = True):
+    """x (M,K) f32/bf16; wm (KB,block,N) int8 mantissas; we (KB,N) int8
+    exponents (from repro.core.bfp.quantize(w, axis=0)).  -> (M,N) f32."""
+    M, K = x.shape
+    KB, blk, N = wm.shape
+    assert blk == block and KB * block == K, (wm.shape, x.shape)
+    Mb = min(m_block, M)
+    Nb = min(n_block, N)
+    padm, padn = (-M) % Mb, (-N) % Nb
+    if padm:
+        x = jnp.pad(x, ((0, padm), (0, 0)))
+    if padn:
+        wm = jnp.pad(wm, ((0, 0), (0, 0), (0, padn)))
+        we = jnp.pad(we, ((0, 0), (0, padn)))
+    Mp, Np = M + padm, N + padn
+
+    out = pl.pallas_call(
+        functools.partial(_bfp_kernel, block=block, bits=bits),
+        grid=(Mp // Mb, Np // Nb),
+        in_specs=[
+            pl.BlockSpec((Mb, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((KB, block, Nb), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((KB, Nb), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((Mb, Nb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        interpret=interpret,
+    )(x, wm, we)
+    return out[:M, :N]
+
+
+def quantize_weights(w, *, block: int = 32, bits: int = 8):
+    """Host-side weight quantization -> (mantissa (KB,block,N) int8,
+    exponent (KB,N) int8).  Done once; decode steps stream 1B/value."""
+    m, e, _ = bfp.quantize(w, block=block, bits=bits, axis=0)
+    return m, e

@@ -1,0 +1,19 @@
+"""Public entry for the shared-exponent BFP matmul."""
+from __future__ import annotations
+
+import jax
+
+from ...core import bfp
+from . import bfp_matmul as _k
+
+
+def bfp_matmul(x, w, *, block: int = 32, bits: int = 8, pallas: bool = True,
+               interpret: bool | None = None):
+    """(M,K) @ (K,N) in shared-exponent block floating point."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not pallas:
+        return bfp.bfp_matmul(x, w, block=block, bits=bits)
+    wm, we = _k.quantize_weights(w, block=block, bits=bits)
+    return _k.bfp_matmul_pallas(x, wm, we, block=block, bits=bits,
+                                interpret=interpret)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the BFP matmul kernel — repro.core.bfp.bfp_matmul is
+itself pure jnp and bit-matches the kernel's quantize->int-MAC->rescale
+semantics; exact-f32 matmul is also provided for error-bound checks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.bfp import bfp_matmul as bfp_matmul_ref  # noqa: F401
+
+
+def exact_matmul(x, w):
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

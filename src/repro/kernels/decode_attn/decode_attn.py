@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: batched single-token decode attention (GQA).
+
+The serving engine's hot spot — the paper's FC regime: the KV cache streams
+from HBM once per step while the tiny q block stays resident; batched slots
+amortize nothing here (unlike weights) but share the grid.  Online softmax
+over sequence chunks keeps VMEM at one (Sc, D) cache tile per head.
+
+Grid: (B, KV, nS) with the sequence dimension sequential; scratch carries the
+running (max, denom, acc) per (batch, kv-head).  Per-slot valid lengths are
+prefetched to SMEM so padded cache tail and empty slots contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, s_chunk: int, n_s: int):
+    b = pl.program_id(0)
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, D) pre-scaled
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (Sc, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    length = len_ref[b]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, Sc)
+    pos = si * s_chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=1)
+    acc_new = acc_prev * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc_new
+
+    @pl.when(si == n_s - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_new / jnp.maximum(l_new, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("s_chunk", "interpret"))
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            s_chunk: int = 512, interpret: bool = True):
+    """q (B,1,H,D); caches (B,S,KV,D); lengths (B,) int32 -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    s_chunk = min(s_chunk, S)
+    pad = (-S) % s_chunk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_s = (S + pad) // s_chunk
+    qg = (q.reshape(B, KV, G, D) * (D ** -0.5)).astype(q.dtype)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, s_chunk=s_chunk, n_s=n_s),
+        grid=(B, KV, n_s),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # lengths (prefetched)
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, s_chunk, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, s_chunk, 1, D), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G,), jnp.float32),
+                        pltpu.VMEM((G, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
+    return out.reshape(B, 1, H, D)

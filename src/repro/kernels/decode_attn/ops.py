@@ -1,0 +1,20 @@
+"""Public entry for batched decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attn as _k
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, pallas: bool = True,
+                     interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if jnp.ndim(lengths) == 0:
+        lengths = jnp.full((q.shape[0],), lengths, jnp.int32)
+    if pallas:
+        return _k.decode_attention_pallas(q, k_cache, v_cache, lengths,
+                                          interpret=interpret)
+    return decode_attention_ref(q, k_cache, v_cache, lengths)

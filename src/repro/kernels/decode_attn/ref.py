@@ -1,0 +1,3 @@
+"""Oracle for the decode-attention kernel: the pure-jnp grouped-einsum
+implementation used inside the models (nn.flash.decode_attention)."""
+from ...nn.flash import decode_attention as decode_attention_ref  # noqa: F401

@@ -1,0 +1,18 @@
+"""Public entry for the SSD scan: Pallas kernel (interpret on CPU) or the
+pure-jnp chunked implementation from repro.nn.ssd (same math, no kernel)."""
+from __future__ import annotations
+
+import jax
+
+from . import ssd as _k
+
+
+def ssd_chunked(x, dt, A, B_, C_, *, chunk: int = 256, pallas: bool = True,
+                interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if pallas:
+        return _k.ssd_chunked_pallas(x, dt, A, B_, C_, chunk=chunk,
+                                     interpret=interpret)
+    from ...nn.ssd import ssd_chunked as jnp_impl
+    return jnp_impl(x, dt, A, B_, C_, chunk)

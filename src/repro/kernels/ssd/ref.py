@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SSD kernel: token-by-token recurrence.
+
+h_t = h_{t-1} * exp(dt_t * A) + B_t^T (dt_t x_t);   y_t = C_t h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, dt, A, B_, C_):
+    """x (B,L,H,P); dt (B,L,H); A (H,); B_,C_ (B,L,G,N) ->
+    (y (B,L,H,P), final_state (B,H,N,P)).  O(L) sequential scan."""
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Hg = H // G
+
+    def head_group(h):
+        return h // Hg
+
+    gmap = jnp.arange(H) // Hg
+
+    def step(h_state, inp):
+        xt, dtt, bt, ct = inp                       # (H,P),(H,),(G,N),(G,N)
+        dA = jnp.exp(dtt * A)                       # (H,)
+        bh = bt[gmap]                               # (H,N)
+        ch = ct[gmap]
+        h_state = h_state * dA[:, None, None] + \
+            jnp.einsum("hn,hp->hnp", bh, dtt[:, None] * xt)
+        y = jnp.einsum("hn,hnp->hp", ch, h_state)
+        return h_state, y
+
+    def per_batch(xb, dtb, bb, cb):
+        h0 = jnp.zeros((H, N, P), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0,
+                              (xb.astype(jnp.float32),
+                               dtb.astype(jnp.float32),
+                               bb.astype(jnp.float32),
+                               cb.astype(jnp.float32)))
+        return ys, hT
+
+    ys, hT = jax.vmap(per_batch)(x, dt, B_, C_)
+    return ys.astype(x.dtype), hT

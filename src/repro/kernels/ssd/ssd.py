@@ -1,0 +1,117 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Stream-buffer dataflow (paper §3.5 adapted): one (Q, P) chunk of tokens per
+head is the VMEM working set; the (N, P) recurrent state lives in VMEM
+scratch and persists across the sequential chunk dimension of the grid, so
+HBM traffic is exactly one read of the inputs and one write of the outputs —
+the SSM analogue of "all intermediate feature maps stay on chip".
+
+Grid: (B, H, nc); (B, H) are PARALLEL, nc is ARBITRARY (sequential, carries
+the state).  Intra-chunk work is two MXU matmuls (C·Bᵀ and M·x) plus the
+state update/emission matmuls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
+                state_scratch, *, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)                # scalar A_h (negative)
+    bm = b_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    Q = x.shape[0]
+
+    dta = dt * a                                     # (Q,) <= 0
+    cums = jnp.cumsum(dta)                           # (Q,)
+    # intra-chunk: M[q,k] = (C_q . B_k) * exp(cums_q - cums_k) * dt_k, k<=q
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q,Q)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    dec = jnp.exp(jnp.clip(cums[:, None] - cums[None, :], -60.0, 0.0))
+    m = jnp.where(qi >= ki, cb * dec, 0.0) * dt[None, :]
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)          # (Q,P)
+
+    # inter-chunk: y += (C ⊙ exp(cums)) @ state
+    state = state_scratch[...]
+    c_dec = cm * jnp.exp(jnp.clip(cums, -60.0, 0.0))[:, None]
+    y = y + jnp.dot(c_dec, state, preferred_element_type=jnp.float32)
+
+    # state update: state = lam * state + B_decᵀ @ x
+    lam = jnp.exp(jnp.clip(cums[-1], -60.0, 0.0))
+    b_dec = bm * (jnp.exp(jnp.clip(cums[-1] - cums, -60.0, 0.0)) * dt)[:, None]
+    new_state = lam * state + jax.lax.dot_general(
+        b_dec, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)          # (N, P)
+    state_scratch[...] = new_state
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    state_ref[0, 0] = new_state
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_chunked_pallas(x, dt, A, B_, C_, *, chunk: int = 256,
+                       interpret: bool = True):
+    """x (B,L,H,P); dt (B,L,H) post-softplus; A (H,); B_,C_ (B,L,G,N).
+    Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Hg = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+
+    xr = x.reshape(Bb, nc, Q, H, P).transpose(0, 3, 1, 2, 4)    # (B,H,nc,Q,P)
+    dtr = dt.reshape(Bb, nc, Q, H).transpose(0, 3, 1, 2)        # (B,H,nc,Q)
+    br = B_.reshape(Bb, nc, Q, G, N).transpose(0, 3, 1, 2, 4)   # (B,G,nc,Q,N)
+    cr = C_.reshape(Bb, nc, Q, G, N).transpose(0, 3, 1, 2, 4)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(Bb, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h // Hg, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Q, N), lambda b, h, c: (b, h // Hg, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, Q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, H, nc, Q, P), x.dtype),
+            jax.ShapeDtypeStruct((Bb, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        interpret=interpret,
+    )(xr, dtr, A.astype(jnp.float32), br, cr)
+
+    y = y.transpose(0, 2, 3, 1, 4).reshape(Bb, nc * Q, H, P)[:, :L]
+    return y, state

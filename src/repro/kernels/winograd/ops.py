@@ -1,0 +1,75 @@
+"""Public entry points for the Winograd conv kernels.
+
+``pallas=True`` routes to the Pallas TPU kernels in ``winograd.py``
+(interpret mode on CPU); ``pallas=False`` uses the pure-jnp Winograd path in
+``repro.core.winograd`` (same transforms, no kernel).
+
+The depthwise-causal op carries a custom VJP (Pallas kernels have no
+autodiff rule): dx is the same Winograd kernel run on the time-reversed
+cotangent, so the backward pass also hits the MXU kernel; dw/db are cheap
+shifted reductions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import winograd as wg
+from . import winograd as _k
+
+
+def _interp(interpret):
+    return jax.default_backend() != "tpu" if interpret is None else interpret
+
+
+# ---------------------------------------------------------------------------
+# depthwise causal conv1d
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _dw1d(x, w, b, interpret):
+    return _k.conv1d_depthwise_causal(x, w, b, interpret=interpret)
+
+
+def _dw1d_fwd(x, w, b, interpret):
+    return _dw1d(x, w, b, interpret), (x, w)
+
+
+def _dw1d_bwd(interpret, res, dy):
+    x, w = res
+    r = w.shape[0]
+    # dx[s] = sum_k w[k] dy[s + r-1-k]  == reverse(conv(reverse(dy), w))
+    dy_rev = dy[:, ::-1, :]
+    dx = _k.conv1d_depthwise_causal(dy_rev, w, None,
+                                    interpret=interpret)[:, ::-1, :]
+    # dw[k] = sum_{b,t} dy[t] * x[t - r + 1 + k]
+    xp = jnp.pad(x, ((0, 0), (r - 1, 0), (0, 0)))
+    L = x.shape[1]
+    dw = jnp.stack([jnp.einsum("blc,blc->c", dy.astype(jnp.float32),
+                               xp[:, k:k + L, :].astype(jnp.float32))
+                    for k in range(r)], axis=0).astype(w.dtype)
+    db = dy.sum(axis=(0, 1)).astype(w.dtype)
+    return dx.astype(x.dtype), dw, db
+
+
+_dw1d.defvjp(_dw1d_fwd, _dw1d_bwd)
+
+
+def conv1d_depthwise_causal(x, w, b=None, *, pallas: bool = True,
+                            interpret: bool | None = None):
+    if pallas:
+        bb = jnp.zeros((w.shape[1],), w.dtype) if b is None else b
+        return _dw1d(x, w, bb, _interp(interpret))
+    return wg.conv1d_depthwise_causal(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# 2D conv (inference path; training uses the differentiable jnp route)
+# ---------------------------------------------------------------------------
+def conv2d(x, w, *, m: int = 4, padding: str = "SAME", pallas: bool = True,
+           interpret: bool | None = None):
+    if pallas:
+        return _k.conv2d_winograd(x, w, m=m, padding=padding,
+                                  interpret=_interp(interpret))
+    return wg.conv2d_winograd(x, w, m=m, padding=padding)

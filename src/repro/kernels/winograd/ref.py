@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the Winograd kernels: direct convolution."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv1d_depthwise_causal_ref(x, w, b=None):
+    """Direct (shift-multiply) causal depthwise conv; x (B,L,C), w (r,C)."""
+    r = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (r - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(r))
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
+    """lax direct conv; x (B,H,W,C), w (r,r,C,K)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)

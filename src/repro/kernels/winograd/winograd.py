@@ -1,0 +1,163 @@
+"""Pallas TPU kernels for Winograd-domain convolution (paper §3.3).
+
+Hardware adaptation (DESIGN.md): the paper's PEs do scalar Winograd-domain
+dot products on DSP blocks; on TPU the Winograd-domain multiply must feed the
+MXU, so we use the Lavin formulation — the 2D kernel turns each of the n^2
+transform positions into an independent (tiles x C) @ (C x K) GEMM, and the
+1D depthwise kernel maps channels onto VPU lanes.  Tiles are extracted
+host-side (XLA gather); the kernel owns transforms + multiply + inverse
+transform so the Winograd-domain tensor U never round-trips HBM.
+
+VMEM budget per grid step (2D): Tb*n^2*C*4 + n^2*C*Kb*4 + Tb*n^2*Kb*4 bytes —
+Tb/Kb defaults keep this < 16 MB for AlexNet-sized C.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.winograd import winograd_transform
+
+
+# ---------------------------------------------------------------------------
+# 1D depthwise causal (Mamba conv, k=4 -> F(3,4))
+# ---------------------------------------------------------------------------
+def _dw1d_kernel(tiles_ref, w_ref, bt_ref, g_ref, at_ref, out_ref):
+    tiles = tiles_ref[0].astype(jnp.float32)        # (Tb, n, Cb)
+    w = w_ref[...].astype(jnp.float32)              # (r, Cb)
+    BT = bt_ref[...]                                # (n, n)
+    G = g_ref[...]                                  # (n, r)
+    AT = at_ref[...]                                # (m, n)
+    u = jnp.einsum("tn,jnc->jtc", BT, tiles)        # input transform
+    v = jnp.einsum("tr,rc->tc", G, w)               # filter transform
+    y = jnp.einsum("mt,jtc->jmc", AT, u * v[None])  # winograd mult + inverse
+    out_ref[0] = y.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "tile_block", "interpret"))
+def conv1d_depthwise_causal(x, w, b=None, *, m: int | None = None,
+                            tile_block: int = 128, interpret: bool = True):
+    """x (B,L,C); w (r,C); left-padded causal depthwise conv via F(m,r)."""
+    r = w.shape[0]
+    m = m or {3: 4, 4: 3}.get(r, 2)
+    t = winograd_transform(m, r)
+    B, L, C = x.shape
+    nt = -(-L // t.m)
+    # host-side tile extraction (overlap r-1); kernel owns the transforms
+    xp = jnp.pad(x, ((0, 0), (r - 1, nt * t.m - L + (t.n - t.m) - (r - 1)),
+                     (0, 0)))
+    idx = (jnp.arange(nt) * t.m)[:, None] + jnp.arange(t.n)[None, :]
+    tiles = jnp.take(xp, idx, axis=1)               # (B, nt, n, C)
+
+    Tb = min(tile_block, nt)
+    padt = (-nt) % Tb
+    if padt:
+        tiles = jnp.pad(tiles, ((0, 0), (0, padt), (0, 0), (0, 0)))
+    ntp = nt + padt
+
+    out = pl.pallas_call(
+        _dw1d_kernel,
+        grid=(B, ntp // Tb),
+        in_specs=[
+            pl.BlockSpec((1, Tb, t.n, C), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((r, C), lambda b, j: (0, 0)),
+            pl.BlockSpec((t.n, t.n), lambda b, j: (0, 0)),
+            pl.BlockSpec((t.n, r), lambda b, j: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda b, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Tb, t.m, C), lambda b, j: (b, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, ntp, t.m, C), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        interpret=interpret,
+    )(tiles, w, jnp.asarray(t.BT, jnp.float32), jnp.asarray(t.G, jnp.float32),
+      jnp.asarray(t.AT, jnp.float32))
+
+    y = out.reshape(B, ntp * t.m, C)[:, :L]
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# 2D conv (AlexNet 3x3 -> F(4,3) x F(4,3))
+# ---------------------------------------------------------------------------
+def _conv2d_kernel(tiles_ref, wt_ref, bt_ref, at_ref, out_ref):
+    d = tiles_ref[...].astype(jnp.float32)          # (Tb, n, n, C)
+    v = wt_ref[...].astype(jnp.float32)             # (n, n, C, Kb)
+    BT = bt_ref[...]
+    AT = at_ref[...]
+    u = jnp.einsum("in,tnmc->timc", BT, d)
+    u = jnp.einsum("timc,jm->tijc", u, BT)          # (Tb, n, n, C)
+    # n^2 batched GEMMs on the MXU: (Tb, C) @ (C, Kb) per (i, j)
+    yw = jnp.einsum("tijc,ijck->tijk", u, v)
+    y = jnp.einsum("pi,tijk->tpjk", AT, yw)
+    y = jnp.einsum("tpjk,qj->tpqk", y, AT)          # (Tb, m, m, Kb)
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "padding", "tile_block",
+                                             "k_block", "interpret"))
+def conv2d_winograd(x, w, *, m: int = 4, padding: str = "SAME",
+                    tile_block: int = 128, k_block: int = 128,
+                    interpret: bool = True):
+    """x (B,H,W,C); w (r,r,C,K); stride-1 conv via F(m,r) x F(m,r)."""
+    r = w.shape[0]
+    t = winograd_transform(m, r)
+    B, H, W, C = x.shape
+    K = w.shape[-1]
+    if padding == "SAME":
+        ph = r // 2
+        out_h, out_w = H, W
+    else:
+        ph = 0
+        out_h, out_w = H - r + 1, W - r + 1
+    th, tw = -(-out_h // t.m), -(-out_w // t.m)
+    xp = jnp.pad(x, ((0, 0), (ph, th * t.m + r - 1 - H - ph),
+                     (ph, tw * t.m + r - 1 - W - ph), (0, 0)))
+    ih = (jnp.arange(th) * t.m)[:, None] + jnp.arange(t.n)[None, :]
+    iw = (jnp.arange(tw) * t.m)[:, None] + jnp.arange(t.n)[None, :]
+    tiles = jnp.take(xp, ih, axis=1)
+    tiles = jnp.take(tiles, iw, axis=3)             # (B,th,n,tw,n,C)
+    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(B * th * tw, t.n, t.n, C)
+
+    # filter transform host-side (tiny): V = G w G^T
+    Gj = jnp.asarray(t.G, jnp.float32)
+    wt = jnp.einsum("in,nmck,jm->ijck", Gj, w.astype(jnp.float32), Gj)
+
+    T = tiles.shape[0]
+    Tb = min(tile_block, T)
+    padt = (-T) % Tb
+    if padt:
+        tiles = jnp.pad(tiles, ((0, padt), (0, 0), (0, 0), (0, 0)))
+    Kb = min(k_block, K)
+    padk = (-K) % Kb
+    if padk:
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padk)))
+    Tp, Kp = T + padt, K + padk
+
+    out = pl.pallas_call(
+        _conv2d_kernel,
+        grid=(Tp // Tb, Kp // Kb),
+        in_specs=[
+            pl.BlockSpec((Tb, t.n, t.n, C), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((t.n, t.n, C, Kb), lambda i, j: (0, 0, 0, j)),
+            pl.BlockSpec((t.n, t.n), lambda i, j: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((Tb, t.m, t.m, Kb), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, t.m, t.m, Kp), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
+                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        interpret=interpret,
+    )(tiles, wt, jnp.asarray(t.BT, jnp.float32), jnp.asarray(t.AT, jnp.float32))
+
+    y = out[:T, :, :, :K].reshape(B, th, tw, t.m, t.m, K)
+    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(B, th * t.m, tw * t.m, K)
+    return y[:, :out_h, :out_w]

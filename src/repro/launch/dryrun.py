@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax ----------------------------------------
+import argparse        # noqa: E402
+import json            # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..config import SHAPES, shape_applicable          # noqa: E402
+from ..configs import ASSIGNED, get_config             # noqa: E402
+from ..core import roofline as rl                      # noqa: E402
+from ..nn.blocks import stack_pattern                  # noqa: E402
+from ..parallel import sharding as shlib               # noqa: E402
+from . import specs as sp                              # noqa: E402
+from .mesh import make_production_mesh                 # noqa: E402
+
+"""Multi-pod dry run: .lower().compile() every (arch x shape x mesh) cell on
+the production mesh (16x16 single-pod / 2x16x16 multi-pod forced host
+devices) and record memory analysis, cost analysis, and the collective
+schedule for §Dry-run / §Roofline of EXPERIMENTS.md.  No arrays are ever
+allocated at model scale — inputs are ShapeDtypeStructs."""
+
+
+def _layer_trips(cfg) -> int:
+    _, kinds, n_groups = stack_pattern(cfg)
+    return max(n_groups, 1)
+
+
+def apply_cfg_overrides(cfg, overrides: dict | None):
+    """dataclasses.replace on ArchConfig; 'moe.x'/'ssm.x' reach sub-configs."""
+    if not overrides:
+        return cfg
+    import dataclasses
+    top, nested = {}, {}
+    for k, v in overrides.items():
+        if "." in k:
+            head, tail = k.split(".", 1)
+            nested.setdefault(head, {})[tail] = v
+        else:
+            top[k] = v
+    for head, kv in nested.items():
+        sub = getattr(cfg, head)
+        if sub is not None:
+            top[head] = dataclasses.replace(sub, **kv)
+    return dataclasses.replace(cfg, **top)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             rules: dict | None = None, zero1: bool = True,
+             fsdp: bool = False, keep_hlo: bool = False,
+             serve_dtype: str = "bf16",
+             cfg_overrides: dict | None = None) -> dict:
+    cfg = apply_cfg_overrides(get_config(arch), cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    base = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "kind": shape.kind}
+    if not ok:
+        return dict(base, status="skipped", reason=why)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    try:
+        with shlib.use_mesh_rules(mesh, rules):
+            if shape.kind == "train":
+                state_spec = sp.state_specs(cfg)
+                batch_spec = sp.batch_specs(cfg, shape)
+                in_sh = (sp.state_shardings(cfg, state_spec, mesh,
+                                            zero1=zero1, fsdp=fsdp),
+                         sp.batch_shardings(cfg, shape, mesh, batch_spec))
+                out_sh = (in_sh[0], None)
+                step = sp.make_train_step(cfg)
+                jitted = jax.jit(step, in_shardings=in_sh,
+                                 out_shardings=out_sh, donate_argnums=(0,))
+                lowered = jitted.lower(state_spec, batch_spec)
+            else:
+                params_spec = sp.serve_param_specs(cfg, serve_dtype)
+                batch_spec = sp.batch_specs(cfg, shape)
+                cache_spec = sp.cache_specs(cfg, shape)
+                p_sh = shlib.param_shardings(params_spec, mesh)
+                b_sh = sp.batch_shardings(cfg, shape, mesh, batch_spec)
+                c_sh = sp.cache_shardings(cfg, cache_spec, mesh)
+                step = (sp.make_prefill_step(cfg) if shape.kind == "prefill"
+                        else sp.make_decode_step(cfg, shape))
+                jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                                 out_shardings=(None, c_sh),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_spec, batch_spec, cache_spec)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        hlo = compiled.as_text()
+        terms = rl.from_compiled(
+            compiled, hlo, arch=arch, shape=shape_name, mesh=mesh_name,
+            chips=chips,
+            model_flops=rl.model_flops_estimate(cfg, shape),
+            loop_trip_count=_layer_trips(cfg))
+        mem = compiled.memory_analysis()
+        rec = dict(base, status="ok", t_lower_s=round(t_lower, 1),
+                   t_compile_s=round(t_compile, 1),
+                   hlo_bytes=len(hlo), chips=chips,
+                   memory={
+                       "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+                       "output_size": getattr(mem, "output_size_in_bytes", 0),
+                       "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+                       "alias_size": getattr(mem, "alias_size_in_bytes", 0),
+                       "generated_code_size": getattr(
+                           mem, "generated_code_size_in_bytes", 0),
+                   },
+                   roofline=terms.to_json())
+        if keep_hlo:
+            rec["hlo_path"] = _dump_hlo(arch, shape_name, mesh_name, hlo)
+        return rec
+    except Exception as e:  # a failure here is a bug in the system
+        return dict(base, status="error", error=f"{type(e).__name__}: {e}",
+                    traceback=traceback.format_exc()[-2000:])
+
+
+def _dump_hlo(arch, shape_name, mesh_name, hlo) -> str:
+    d = os.path.join("results", "hlo")
+    os.makedirs(d, exist_ok=True)
+    p = os.path.join(d, f"{arch}_{shape_name}_{mesh_name}.hlo.txt")
+    with open(p, "w") as f:
+        f.write(hlo)
+    return p
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ASSIGNED} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {list(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--rules", default="",
+                    help="JSON dict of logical-axis rule overrides")
+    ap.add_argument("--no-zero1", action="store_true")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--serve-dtype", default="bf16",
+                    choices=["f32", "bf16", "bfp8"],
+                    help="weight stream dtype for prefill/decode cells")
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    rules = json.loads(args.rules) if args.rules else None
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    rec = run_cell(arch, shape, multi_pod=mp, rules=rules,
+                                   keep_hlo=args.keep_hlo,
+                                   serve_dtype=args.serve_dtype,
+                                   zero1=not args.no_zero1)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    st = rec["status"]
+                    n_ok += st == "ok"
+                    n_skip += st == "skipped"
+                    n_err += st == "error"
+                    if st == "ok":
+                        r = rec["roofline"]
+                        print(f"[{st:7s}] {arch:22s} {shape:12s} "
+                              f"{rec['mesh']:8s} "
+                              f"compile={rec['t_compile_s']:6.1f}s "
+                              f"bound={r['bound']:10s} "
+                              f"step={r['step_time']*1e3:8.2f}ms "
+                              f"mem/dev={rec['memory']['argument_size']/2**30:6.2f}+"
+                              f"{rec['memory']['temp_size']/2**30:5.2f}GiB",
+                              flush=True)
+                    else:
+                        print(f"[{st:7s}] {arch:22s} {shape:12s} "
+                              f"{rec['mesh']:8s} "
+                              f"{rec.get('reason') or rec.get('error','')}",
+                              flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

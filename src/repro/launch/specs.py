@@ -1,0 +1,209 @@
+"""Abstract input specs + step functions for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the inputs of the step that the cell lowers:
+train -> train_step(state, batch); prefill/decode -> serve steps over caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..config import ArchConfig, ShapeCfg
+from ..models import model_for
+from ..optim import adamw_step, lr_schedule
+from ..parallel import sharding as shlib
+
+AUDIO_FRAMES = 1500      # whisper 30s encoder length (stub embeddings)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        out = {"inputs": jax.ShapeDtypeStruct((B, S), i32),
+               "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                 jnp.float32)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, 1024),
+                                                  jnp.float32)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "audio":
+            # encoder consumes its natural frame count (cross cache size);
+            # the 32k prefill stresses the DECODER token length.
+            out["frames"] = jax.ShapeDtypeStruct((B, AUDIO_FRAMES, cfg.d_model),
+                                                 jnp.float32)
+        if cfg.family == "vlm":
+            out["patches"] = jax.ShapeDtypeStruct((B, cfg.num_patches, 1024),
+                                                  jnp.float32)
+        return out
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    mod = model_for(cfg)
+    kw = {}
+    if cfg.family == "audio":
+        kw["cross_len"] = AUDIO_FRAMES
+    return mod.cache_shape(cfg, shape.global_batch, shape.seq_len, **kw)
+
+
+def state_specs(cfg: ArchConfig, seed: int = 0) -> dict:
+    mod = model_for(cfg)
+    params = jax.eval_shape(lambda k: mod.init(k, cfg), jax.random.PRNGKey(seed))
+    f32 = lambda t: jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32), t)
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32), "params": params,
+            "m": f32(params), "v": f32(params)}
+
+
+def serve_param_specs(cfg: ArchConfig, serve_dtype: str = "bf16",
+                      seed: int = 0):
+    """Abstract serving weights: f32 master copies, bf16 inference copies,
+    or BFP-int8 shared-exponent streams (paper §3.6)."""
+    mod = model_for(cfg)
+    params = jax.eval_shape(lambda k: mod.init(k, cfg),
+                            jax.random.PRNGKey(seed))
+    if serve_dtype == "f32":
+        return params
+    if serve_dtype == "bf16":
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating)
+                else x.dtype), params)
+    if serve_dtype == "bfp8":
+        from ..core.bfp import quantize_linear_tree
+        bf16 = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, jnp.bfloat16 if jnp.issubdtype(x.dtype, jnp.floating)
+                else x.dtype), params)
+        return jax.eval_shape(quantize_linear_tree, bf16)
+    raise ValueError(serve_dtype)
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+def _data_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_shardings(cfg, shape, mesh, specs):
+    da = _data_axes(mesh)
+    dspec = da if len(da) > 1 else (da[0] if da else None)
+
+    def one(leaf):
+        spec = [None] * len(leaf.shape)
+        if leaf.shape and leaf.shape[0] % max(
+                1, _prod(mesh.shape[a] for a in da)) == 0:
+            spec[0] = dspec
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map(one, specs)
+
+
+def _prod(it):
+    n = 1
+    for v in it:
+        n *= v
+    return n
+
+
+_CACHE_AXES = {
+    "k": ("batch", "cache_seq", "cache_kv_heads", "head_dim"),
+    "v": ("batch", "cache_seq", "cache_kv_heads", "head_dim"),
+    "ck": ("batch", "cache_seq", "cache_kv_heads", "head_dim"),
+    "cv": ("batch", "cache_seq", "cache_kv_heads", "head_dim"),
+    "ckv": ("batch", "cache_seq", "kv_lora"),
+    "kpe": ("batch", "cache_seq", None),
+    "conv_x": ("batch", None, "ssm_inner"),
+    "conv_b": ("batch", None, None),
+    "conv_c": ("batch", None, None),
+    "state": ("batch", "ssm_heads", "state", None),
+}
+
+
+def cache_shardings(cfg, cache_spec, mesh):
+    def one(path, leaf):
+        name = shlib.path_str(path).split("/")[-1]
+        axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
+        pad = leaf.ndim - len(axes)
+        axes = ("layers",) * pad + tuple(axes)
+        return shlib.logical_sharding(leaf.shape, axes, mesh)
+    with shlib.use_mesh_rules(mesh, None):
+        return jax.tree_util.tree_map_with_path(one, cache_spec)
+
+
+def state_shardings(cfg, state_spec, mesh, *, zero1: bool = True,
+                    fsdp: bool = False):
+    """zero1: optimizer moments additionally sharded over 'data' (ZeRO-1).
+    fsdp: parameters (and thus gradients) too — ZeRO-3 style; GSPMD inserts
+    the per-layer param all-gathers and grad reduce-scatters."""
+    z1 = shlib.zero1_shardings(state_spec["params"], mesh)
+    pshard = z1 if fsdp else shlib.param_shardings(state_spec["params"], mesh)
+    moments = z1 if (zero1 or fsdp) else pshard
+    return {"step": NamedSharding(mesh, P()), "params": pshard,
+            "m": moments, "v": moments}
+
+
+# ---------------------------------------------------------------------------
+# step functions (what the dry-run lowers; train.py/serve.py use them too)
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, base_lr: float = 1e-4,
+                    total_steps: int = 10_000):
+    mod = model_for(cfg)
+
+    def train_step(state, batch):
+        lr = lr_schedule(state["step"], base_lr=base_lr, total=total_steps)
+        if cfg.family == "audio":
+            b = {"inputs": batch["inputs"], "targets": batch["targets"],
+                 "frames": batch["frames"]}
+        elif cfg.family == "vlm":
+            b = {"inputs": batch["inputs"], "targets": batch["targets"],
+                 "patches": batch["patches"]}
+        else:
+            b = {"inputs": batch["inputs"], "targets": batch["targets"]}
+        (loss, metrics), grads = jax.value_and_grad(
+            mod.loss_fn, has_aux=True)(state["params"], cfg, b)
+        state, om = adamw_step(state, grads, lr=lr, weight_decay=0.01,
+                               clip_norm=1.0)
+        return state, {**metrics, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    mod = model_for(cfg)
+
+    def prefill_step(params, batch, caches):
+        kw = {}
+        if cfg.family == "audio":
+            kw["frames"] = batch["frames"]
+        if cfg.family == "vlm":
+            kw["patches"] = batch["patches"]
+        logits, caches, _ = mod.apply(params, cfg, batch["tokens"],
+                                      mode="prefill", caches=caches, **kw)
+        return logits[:, -1].argmax(-1).astype(jnp.int32), caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, shape: ShapeCfg):
+    mod = model_for(cfg)
+    length = shape.seq_len - 1      # cache holds seq_len-1 tokens; write 1
+
+    def decode_step(params, batch, caches):
+        logits, caches, _ = mod.apply(params, cfg, batch["tokens"],
+                                      mode="decode",
+                                      length=jnp.int32(length), caches=caches)
+        return logits[:, -1].argmax(-1).astype(jnp.int32), caches
+
+    return decode_step

@@ -1,0 +1,12 @@
+from . import lm  # noqa: F401
+
+
+def model_for(cfg):
+    """Dispatch to the model family implementation."""
+    if cfg.family == "audio":
+        from . import encdec
+        return encdec
+    if cfg.family == "vlm":
+        from . import vlm
+        return vlm
+    return lm

@@ -1,0 +1,162 @@
+"""AlexNet — the paper's own benchmark network, end-to-end in JAX.
+
+All layers run on-device (the paper's headline point vs conv-only FPGA work):
+conv (Winograd F(4,3) for the 3x3 layers, direct for conv1/conv2 as in the
+paper), ReLU, cross-channel LRN, max-pool, and the batched FC layers (§3.7).
+Grouped convolutions (conv2/4/5) follow Krizhevsky.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.winograd import conv2d_direct, conv2d_winograd
+from ..nn.module import param, split
+
+
+@dataclass(frozen=True)
+class AlexNetConfig:
+    name: str = "alexnet"
+    family: str = "cnn"
+    image_size: int = 227
+    in_channels: int = 3
+    conv_channels: Tuple[int, ...] = (96, 256, 384, 384, 256)
+    fc_dims: Tuple[int, ...] = (4096, 4096, 1000)
+    num_classes: int = 1000
+    use_winograd: bool = True      # F(4,3) on the 3x3 stride-1 layers
+    use_pallas: bool = False       # route 3x3 convs through the Pallas kernel
+    fc_batch: int = 96             # paper's S_batch
+    lrn_n: int = 5
+    lrn_k: float = 2.0
+    lrn_alpha: float = 1e-4
+    lrn_beta: float = 0.75
+    dtype: str = "float32"
+
+    def reduced(self) -> "AlexNetConfig":
+        return replace(self, image_size=67, conv_channels=(16, 32, 48, 48, 32),
+                       fc_dims=(64, 48, 10), num_classes=10, fc_batch=4)
+
+
+# (kernel, stride, pad, groups, lrn?, pool?) per conv layer — Krizhevsky
+_LAYERS = [
+    (11, 4, "VALID", 1, True, True),
+    (5, 1, "SAME", 2, True, True),
+    (3, 1, "SAME", 1, False, False),
+    (3, 1, "SAME", 2, False, False),
+    (3, 1, "SAME", 2, False, True),
+]
+
+
+def init(key, cfg: AlexNetConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = split(key, len(_LAYERS) + len(cfg.fc_dims))
+    p = {}
+    c_in = cfg.in_channels
+    for i, ((k, s, pad, g, _, _), c_out) in enumerate(zip(_LAYERS,
+                                                          cfg.conv_channels)):
+        p[f"conv{i+1}"] = {
+            "w": param(keys[i], (k, k, c_in // g, c_out), dtype,
+                       scale=(k * k * c_in // g) ** -0.5),
+            "b": jnp.zeros((c_out,), dtype),
+        }
+        c_in = c_out
+    d_in = _fc_input_dim(cfg)
+    for j, d_out in enumerate(cfg.fc_dims):
+        p[f"fc{j+6}"] = {
+            "w": param(keys[len(_LAYERS) + j], (d_in, d_out), dtype),
+            "b": jnp.zeros((d_out,), dtype),
+        }
+        d_in = d_out
+    return p
+
+
+def _feature_hw(cfg: AlexNetConfig) -> int:
+    h = cfg.image_size
+    for (k, s, pad, _, _, pool) in _LAYERS:
+        h = (h - k) // s + 1 if pad == "VALID" else -(-h // s)
+        if pool:
+            h = (h - 3) // 2 + 1
+    return h
+
+
+def _fc_input_dim(cfg: AlexNetConfig) -> int:
+    return _feature_hw(cfg) ** 2 * cfg.conv_channels[-1]
+
+
+def _lrn(x, cfg: AlexNetConfig):
+    """Cross-channel local response normalization (paper §2.2)."""
+    sq = jnp.square(x)
+    half = cfg.lrn_n // 2
+    pad = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
+    win = sum(pad[..., i:i + x.shape[-1]] for i in range(cfg.lrn_n))
+    return x / jnp.power(cfg.lrn_k + cfg.lrn_alpha / cfg.lrn_n * win,
+                         cfg.lrn_beta)
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def _conv(p, x, k, s, pad, groups, cfg: AlexNetConfig):
+    w = p["w"]
+    use_wino = cfg.use_winograd and k == 3 and s == 1
+
+    def one(xg, wg):
+        if use_wino:
+            if cfg.use_pallas:
+                from ..kernels.winograd.ops import conv2d as pallas_conv2d
+                return pallas_conv2d(xg, wg, m=4, padding=pad)
+            return conv2d_winograd(xg, wg, m=4, padding=pad)
+        return conv2d_direct(xg, wg, stride=s, padding=pad)
+
+    if groups == 1:
+        y = one(x, w)
+    else:
+        cg = x.shape[-1] // groups
+        kg = w.shape[-1] // groups
+        y = jnp.concatenate(
+            [one(x[..., g * cg:(g + 1) * cg], w[..., g * kg:(g + 1) * kg])
+             for g in range(groups)], axis=-1)
+    return y + p["b"].astype(y.dtype)
+
+
+def features(params, cfg: AlexNetConfig, images):
+    """images (B, H, W, 3) -> flattened conv features (B, d)."""
+    x = images.astype(jnp.dtype(cfg.dtype))
+    for i, (k, s, pad, g, lrn, pool) in enumerate(_LAYERS):
+        x = _conv(params[f"conv{i+1}"], x, k, s, pad, g, cfg)
+        x = jax.nn.relu(x)
+        if lrn:
+            x = _lrn(x, cfg)
+        if pool:
+            x = _maxpool(x)
+    return x.reshape(x.shape[0], -1)
+
+
+def classifier(params, cfg: AlexNetConfig, feats):
+    """Batched FC layers (paper §3.7: weights streamed, features cached)."""
+    x = feats
+    n_fc = len(cfg.fc_dims)
+    for j in range(n_fc):
+        p = params[f"fc{j+6}"]
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if j < n_fc - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def apply(params, cfg: AlexNetConfig, images):
+    return classifier(params, cfg, features(params, cfg, images))
+
+
+def loss_fn(params, cfg: AlexNetConfig, batch):
+    logits = apply(params, cfg, batch["images"])
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "accuracy": acc}

@@ -1,0 +1,75 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the audio frontend (mel + conv) is a STUB: the encoder
+consumes precomputed frame embeddings (B, T, d_model).  The decoder is a
+standard causal stack with cross-attention into the encoder output.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..nn.blocks import stack_apply, stack_cache_shape, stack_init
+from ..nn.layers import embed, embed_init, linear, linear_init, norm, norm_init
+from ..nn.module import split
+from ..parallel.sharding import constrain
+from . import lm
+
+CROSS_LEN_DEFAULT = 1500   # whisper 30s -> 1500 frames
+
+
+def enc_cfg(cfg: ArchConfig) -> ArchConfig:
+    return dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                               cross_attention=False, moe=None)
+
+
+def init(key, cfg: ArchConfig):
+    ke, kd, kte, kh = split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "enc_stack": stack_init(ke, enc_cfg(cfg)),
+        "enc_norm": norm_init(cfg.norm_type, cfg.d_model, dtype),
+        "embed": embed_init(kte, cfg.vocab_size, cfg.d_model, dtype),
+        "dec_stack": stack_init(kd, cfg),
+        "final_norm": norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(kh, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def cache_shape(cfg: ArchConfig, batch: int, max_len: int,
+                cross_len: int = CROSS_LEN_DEFAULT):
+    return stack_cache_shape(cfg, batch, max_len, cross_len=cross_len)
+
+
+def encode(params, cfg: ArchConfig, frames):
+    x = constrain(frames.astype(jnp.dtype(cfg.dtype)), ("batch", "seq", "embed"))
+    x, _, _ = stack_apply(params["enc_stack"], enc_cfg(cfg), x, mode="bidir")
+    return norm(cfg.norm_type, params["enc_norm"], x)
+
+
+def apply(params, cfg: ArchConfig, tokens, *, frames=None, enc_out=None,
+          mode: str = "train", length=None, caches=None,
+          collect_aux: bool = False):
+    if enc_out is None and frames is not None:
+        enc_out = encode(params, cfg, frames)
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dt)
+    x, new_caches, aux = stack_apply(params["dec_stack"], cfg, x, mode=mode,
+                                     length=length, caches=caches,
+                                     enc_out=enc_out, collect_aux=collect_aux)
+    x = norm(cfg.norm_type, params["final_norm"], x)
+    logits = lm._readout(params, cfg, x)
+    return logits, new_caches, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, collect_aux: bool = True):
+    """batch: {"frames": (B,T,d), "inputs": (B,S), "targets": (B,S)}."""
+    logits, _, aux = apply(params, cfg, batch["inputs"],
+                           frames=batch["frames"], mode="train",
+                           collect_aux=collect_aux)
+    return lm._ce(logits, batch["targets"], aux, cfg)

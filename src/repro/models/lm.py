@@ -1,0 +1,88 @@
+"""Decoder-only language model (dense / MoE / SSM / hybrid families)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..nn.blocks import stack_apply, stack_cache_shape, stack_init
+from ..nn.layers import embed, embed_attend, embed_init, linear, linear_init, norm, norm_init
+from ..nn.module import split
+from ..parallel.sharding import constrain
+
+
+def init(key, cfg: ArchConfig):
+    ke, ks, kh = split(key, 3)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "stack": stack_init(ks, cfg),
+        "final_norm": norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(kh, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def cache_shape(cfg: ArchConfig, batch: int, max_len: int):
+    return stack_cache_shape(cfg, batch, max_len)
+
+
+def _readout(params, cfg, x):
+    x = x.astype(jnp.dtype(cfg.dtype))
+    if cfg.tie_embeddings:
+        logits = embed_attend(params["embed"], x)
+    else:
+        logits = linear(params["lm_head"], x, dtype=jnp.float32)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def apply(params, cfg: ArchConfig, tokens, *, mode: str = "train",
+          length=None, caches=None, collect_aux: bool = False):
+    """tokens (B, S) int32 -> logits (B, S, V) f32.
+
+    mode train: no caches.  prefill: caches filled, logits returned.
+    decode: S new tokens (usually 1) appended at ``length``.
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+    x, new_caches, aux = stack_apply(params["stack"], cfg, x, mode=mode,
+                                     length=length, caches=caches,
+                                     collect_aux=collect_aux)
+    x = norm(cfg.norm_type, params["final_norm"], x)
+    logits = _readout(params, cfg, x)
+    return logits, new_caches, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, collect_aux: bool = True):
+    """batch: {"inputs": (B,S), "targets": (B,S)}; targets < 0 are masked."""
+    logits, _, aux = apply(params, cfg, batch["inputs"], mode="train",
+                           collect_aux=collect_aux)
+    return _ce(logits, batch["targets"], aux, cfg)
+
+
+def _ce(logits, targets, aux, cfg):
+    """Vocab-shard-friendly cross entropy: the label logit comes from a fused
+    select-reduce over the (sharded) vocab axis instead of take_along_axis,
+    which would force GSPMD to all-gather full-vocab logits (measured: 12 GiB
+    of temp per device on smollm train_4k before this formulation)."""
+    valid = targets >= 0
+    tgt = jnp.maximum(targets, 0)
+    lf = logits.astype(jnp.float32)
+    V = lf.shape[-1]
+    m = jax.lax.stop_gradient(lf.max(axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    vio = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    onehot = vio == tgt[..., None]
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    nll = lse - label_logit
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = jnp.where(valid, nll, 0.0).sum() / denom
+    total = loss + aux
+    # accuracy via shard-local "is my label the global max" — argmax over a
+    # sharded vocab axis would force an all-gather of the logits.
+    is_max = label_logit >= m[..., 0]
+    metrics = {"loss": loss, "aux_loss": aux, "tokens": denom,
+               "accuracy": jnp.where(valid, is_max, False).sum() / denom}
+    return total, metrics

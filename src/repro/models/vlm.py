@@ -1,0 +1,64 @@
+"""Phi-3-vision style VLM: phi3 backbone + stubbed CLIP patch frontend.
+
+Per the assignment the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, P, clip_dim) which are linearly projected and
+prepended to the token sequence.  Loss / logits cover token positions only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..nn.blocks import stack_apply, stack_cache_shape, stack_init
+from ..nn.layers import embed, embed_init, linear, linear_init, norm, norm_init
+from ..nn.module import split
+from ..parallel.sharding import constrain
+from . import lm
+
+CLIP_DIM = 1024
+
+
+def init(key, cfg: ArchConfig):
+    ke, ks, kp, kh = split(key, 4)
+    dtype = jnp.dtype(cfg.param_dtype)
+    p = {
+        "embed": embed_init(ke, cfg.vocab_size, cfg.d_model, dtype),
+        "patch_proj": linear_init(kp, CLIP_DIM, cfg.d_model, dtype),
+        "stack": stack_init(ks, cfg),
+        "final_norm": norm_init(cfg.norm_type, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = linear_init(kh, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def cache_shape(cfg: ArchConfig, batch: int, max_len: int):
+    # cache covers patch prefix + generated tokens
+    return stack_cache_shape(cfg, batch, cfg.num_patches + max_len)
+
+
+def apply(params, cfg: ArchConfig, tokens, *, patches=None, mode: str = "train",
+          length=None, caches=None, collect_aux: bool = False):
+    dt = jnp.dtype(cfg.dtype)
+    x = embed(params["embed"], tokens, dt)
+    n_patch = 0
+    if patches is not None:
+        pe = linear(params["patch_proj"], patches.astype(dt))
+        x = jnp.concatenate([pe, x], axis=1)
+        n_patch = pe.shape[1]
+    x = constrain(x, ("batch", "seq", "embed"))
+    x, new_caches, aux = stack_apply(params["stack"], cfg, x, mode=mode,
+                                     length=length, caches=caches,
+                                     collect_aux=collect_aux)
+    x = norm(cfg.norm_type, params["final_norm"], x[:, n_patch:, :])
+    logits = lm._readout(params, cfg, x)
+    return logits, new_caches, aux
+
+
+def loss_fn(params, cfg: ArchConfig, batch, collect_aux: bool = True):
+    """batch: {"patches": (B,P,1024), "inputs": (B,S), "targets": (B,S)}."""
+    logits, _, aux = apply(params, cfg, batch["inputs"],
+                           patches=batch["patches"], mode="train",
+                           collect_aux=collect_aux)
+    return lm._ce(logits, batch["targets"], aux, cfg)

@@ -1,0 +1,1 @@
+from . import attention, blocks, flash, layers, mlp, module, moe, ssd  # noqa: F401

@@ -1,0 +1,280 @@
+"""Attention mixers: GQA (RoPE) and MLA (DeepSeek-V2), plus cross-attention.
+
+Modes:
+  train   — causal blockwise attention, no cache.
+  bidir   — non-causal (encoder / cross-attention while training).
+  prefill — causal, returns a populated KV cache (sequence-sharded).
+  decode  — one new token against the cache; MLA uses the absorbed
+            (latent-space) formulation so the per-head K/V are never
+            materialized at cache length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..parallel.sharding import constrain
+from .flash import decode_attention, flash_attention
+from .layers import linear, linear_init, rmsnorm, rmsnorm_init, rope
+from .module import split
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def attn_init(key, cfg: ArchConfig, cross: bool = False):
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    dtype = jnp.dtype(cfg.param_dtype)
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        kq, kdkv, kuk, kuv, ko = split(key, 5)
+        return {
+            "wq": linear_init(kq, d, H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+            "wdkv": linear_init(kdkv, d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+            "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+            "wuk": linear_init(kuk, m.kv_lora_rank, H * m.qk_nope_head_dim, dtype),
+            "wuv": linear_init(kuv, m.kv_lora_rank, H * m.v_head_dim, dtype),
+            "wo": linear_init(ko, H * m.v_head_dim, d, dtype),
+        }
+    kq, kk, kv, ko = split(key, 4)
+    return {
+        "wq": linear_init(kq, d, H * hd, dtype, bias=cfg.qkv_bias),
+        "wk": linear_init(kk, d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wv": linear_init(kv, d, KV * hd, dtype, bias=cfg.qkv_bias),
+        "wo": linear_init(ko, H * hd, d, dtype, bias=cfg.qkv_bias),
+    }
+
+
+def attn_cache_shape(cfg: ArchConfig, batch: int, max_len: int, cross_len: int = 0):
+    """Abstract cache structure (shapes/dtypes) for one attention layer."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache = {
+            "ckv": jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dt),
+            "kpe": jax.ShapeDtypeStruct((batch, max_len, m.qk_rope_head_dim), dt),
+        }
+    else:
+        kv, hd = cfg.num_kv_heads, cfg.d_head
+        cache = {
+            "k": jax.ShapeDtypeStruct((batch, max_len, kv, hd), dt),
+            "v": jax.ShapeDtypeStruct((batch, max_len, kv, hd), dt),
+        }
+    if cross_len:
+        kv, hd = cfg.num_kv_heads, cfg.d_head
+        cache["ck"] = jax.ShapeDtypeStruct((batch, cross_len, kv, hd), dt)
+        cache["cv"] = jax.ShapeDtypeStruct((batch, cross_len, kv, hd), dt)
+    return cache
+
+
+def attn_cache_init(cfg, batch, max_len, cross_len: int = 0):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        attn_cache_shape(cfg, batch, max_len, cross_len))
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+def _qkv(p, cfg, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.d_head
+    q = linear(p["wq"], x).reshape(B, S, H, hd)
+    k = linear(p["wk"], x).reshape(B, S, KV, hd)
+    v = linear(p["wv"], x).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def gqa_apply(p, cfg: ArchConfig, x, *, mode: str, length=None, cache=None,
+              enc_out=None, use_rope: bool = True):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.d_head
+    new_cache = cache
+
+    if mode in ("train", "bidir", "prefill"):
+        if enc_out is not None:                      # cross-attn (training)
+            q = linear(p["wq"], x).reshape(B, S, H, hd)
+            T = enc_out.shape[1]
+            k = linear(p["wk"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+            v = linear(p["wv"], enc_out).reshape(B, T, cfg.num_kv_heads, hd)
+            use_rope = False
+            causal = False
+        else:
+            q, k, v = _qkv(p, cfg, x)
+            causal = mode != "bidir"
+        if use_rope:
+            pos = jnp.arange(S)[None, :]
+            q = rope(q, pos, cfg.rope_theta)
+            k = rope(k, pos, cfg.rope_theta)
+        # Pin the attention-region layout BEFORE the flash chunk loops:
+        # otherwise GSPMD propagates the sequence-parallel residual sharding
+        # into the scan and re-shards every (q,k) chunk pair per iteration
+        # (measured: per-layer all-to-alls x nq x nk inside the loop on
+        # starcoder2 train_4k).  Two regimes:
+        #   heads % model == 0 -> head-parallel attention (Megatron);
+        #   otherwise          -> sequence-parallel q with replicated KV
+        #                         (small-KV models; avoids full replication).
+        from ..parallel.sharding import active_mesh
+        mesh = active_mesh()
+        msize = mesh.shape.get("model", 1) if mesh is not None else 1
+        if cfg.num_heads % max(msize, 1) == 0:
+            q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+            k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+            v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+            o_axes = ("batch", "seq", "heads", "head_dim")
+        else:
+            q = constrain(q, ("batch", "seq_res", None, "head_dim"))
+            k = constrain(k, ("batch", None, None, "head_dim"))
+            v = constrain(v, ("batch", None, None, "head_dim"))
+            o_axes = ("batch", "seq_res", None, "head_dim")
+        o = flash_attention(q, k, v, causal=causal,
+                            banded=cfg.banded_attention)
+        o = constrain(o, o_axes)
+        from jax.ad_checkpoint import checkpoint_name
+        o = checkpoint_name(o, "attn_out")
+        if mode == "prefill" and cache is not None:
+            if enc_out is not None:
+                new_cache = dict(cache, ck=_ccache(k, cache["ck"]),
+                                 cv=_ccache(v, cache["cv"]))
+            else:
+                new_cache = dict(cache,
+                                 k=_into(cache["k"], k), v=_into(cache["v"], v))
+    elif mode == "decode":
+        q = linear(p["wq"], x).reshape(B, S, H, hd)
+        if enc_out is None and "k" in cache:
+            knew = linear(p["wk"], x).reshape(B, S, cfg.num_kv_heads, hd)
+            vnew = linear(p["wv"], x).reshape(B, S, cfg.num_kv_heads, hd)
+            if use_rope:
+                posv = pos_of(length, S)
+                q = rope(q, posv, cfg.rope_theta)
+                knew = rope(knew, posv, cfg.rope_theta)
+            kc = cache_write(cache["k"], knew, length)
+            vc = cache_write(cache["v"], vnew, length)
+            kc = constrain(kc, ("batch", "cache_seq", "cache_kv_heads", "head_dim"))
+            vc = constrain(vc, ("batch", "cache_seq", "cache_kv_heads", "head_dim"))
+            new_cache = dict(cache, k=kc, v=vc)
+            o = decode_attention(q, kc, vc, length + S)
+        else:                                       # cross-attn decode
+            o = decode_attention(q, cache["ck"], cache["cv"],
+                                 cache["ck"].shape[1])
+    else:
+        raise ValueError(mode)
+
+    y = linear(p["wo"], o.reshape(B, S, H * hd))
+    return y.astype(x.dtype), new_cache
+
+
+def _into(buf, val):
+    val = constrain(val.astype(buf.dtype), ("batch", "cache_seq") + (("cache_kv_heads", "head_dim") if val.ndim == 4 else (None,) * (val.ndim - 2)))
+    return jax.lax.dynamic_update_slice(buf, val, (0,) * buf.ndim)
+
+
+def _ccache(v, buf):
+    return jax.lax.dynamic_update_slice(buf, v.astype(buf.dtype), (0,) * buf.ndim)
+
+
+def cache_write(buf, val, length):
+    """Write ``val`` (B, S, ...) into ``buf`` at seq offset ``length``.
+
+    length: scalar (one shared offset) or (B,) vector (per-slot offsets used
+    by the continuous-batching serving engine)."""
+    val = val.astype(buf.dtype)
+    if jnp.ndim(length) == 0:
+        idx = (0, length) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, val, idx)
+    zero = (0,) * (buf.ndim - 2)
+    return jax.vmap(
+        lambda b, v, l: jax.lax.dynamic_update_slice(b, v, (l,) + zero[:b.ndim - 1]))(
+        buf, val, length)
+
+
+def pos_of(length, S):
+    """RoPE positions for S new tokens at offset ``length`` -> (B?, S)."""
+    ar = jnp.arange(S)[None, :]
+    if jnp.ndim(length) == 0:
+        return length + ar
+    return length[:, None] + ar
+
+
+def len_mask(length, S_total, extra: int = 0):
+    """(B?,1,1,S_total) validity mask for positions < length + extra."""
+    valid_to = (length + extra if jnp.ndim(length) == 0
+                else (length + extra)[:, None, None, None])
+    return jnp.arange(S_total)[None, None, None, :] < valid_to
+
+
+# --------------------------------------------------------------------------
+# MLA
+# --------------------------------------------------------------------------
+def mla_apply(p, cfg: ArchConfig, x, *, mode: str, length=None, cache=None):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rdim, vdim, lora = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                              m.v_head_dim, m.kv_lora_rank)
+    q = linear(p["wq"], x).reshape(B, S, H, nope + rdim)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    dkv = linear(p["wdkv"], x)
+    ckv, k_pe = dkv[..., :lora], dkv[..., lora:]
+    ckv = rmsnorm(p["kv_norm"], ckv)
+
+    if mode in ("train", "prefill"):
+        pos = jnp.arange(S)[None, :]
+        q_pe = rope(q_pe, pos, cfg.rope_theta)
+        k_pe_r = rope(k_pe[:, :, None, :], pos, cfg.rope_theta)  # (B,S,1,r)
+        k_nope = linear(p["wuk"], ckv).reshape(B, S, H, nope)
+        v = linear(p["wuv"], ckv).reshape(B, S, H, vdim)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe_r, (B, S, H, rdim))], axis=-1)
+        qf = jnp.concatenate([q_nope, q_pe], axis=-1)
+        qf = constrain(qf, ("batch", "seq", "heads", "head_dim"))
+        # pad V to qk head_dim so flash's single V width works, then slice
+        o = flash_attention(qf, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                               (0, nope + rdim - vdim))),
+                            causal=True,
+                            banded=cfg.banded_attention)[..., :vdim]
+        new_cache = cache
+        if mode == "prefill" and cache is not None:
+            new_cache = dict(cache,
+                             ckv=_into(cache["ckv"], ckv),
+                             kpe=_into(cache["kpe"], k_pe_r[:, :, 0, :]))
+    elif mode == "decode":
+        # absorbed (latent-space) decode: never materialize per-head K/V.
+        posv = pos_of(length, S)
+        q_pe = rope(q_pe, posv, cfg.rope_theta)
+        k_pe_r = rope(k_pe[:, :, None, :], posv, cfg.rope_theta)[:, :, 0, :]
+        ckv_c = cache_write(cache["ckv"], ckv, length)
+        kpe_c = cache_write(cache["kpe"], k_pe_r, length)
+        ckv_c = constrain(ckv_c, ("batch", "cache_seq", "kv_lora"))
+        kpe_c = constrain(kpe_c, ("batch", "cache_seq", None))
+        new_cache = dict(cache, ckv=ckv_c, kpe=kpe_c)
+        from ..core.bfp import weight_of
+        wuk = weight_of(p["wuk"], dtype=x.dtype).reshape(lora, H, nope)
+        q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope, wuk)      # (B,S,H,lora)
+        s = (jnp.einsum("bqhl,bsl->bhqs", q_abs, ckv_c,
+                        preferred_element_type=jnp.float32) +
+             jnp.einsum("bqhr,bsr->bhqs", q_pe, kpe_c,
+                        preferred_element_type=jnp.float32))
+        s = s * ((nope + rdim) ** -0.5)
+        mask = len_mask(length, ckv_c.shape[1], extra=S)
+        s = jnp.where(mask, s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        lat = jnp.einsum("bhqs,bsl->bqhl", pr.astype(ckv_c.dtype), ckv_c)
+        wuv = weight_of(p["wuv"], dtype=x.dtype).reshape(lora, H, vdim)
+        o = jnp.einsum("bqhl,lhv->bqhv", lat, wuv)
+    else:
+        raise ValueError(mode)
+
+    y = linear(p["wo"], o.reshape(B, S, H * vdim))
+    return y.astype(x.dtype), new_cache
+
+
+def attn_apply(p, cfg, x, *, mode, length=None, cache=None, enc_out=None,
+               use_rope=True):
+    if cfg.mla is not None and enc_out is None:
+        if mode == "bidir":
+            raise ValueError("MLA encoder not supported")
+        return mla_apply(p, cfg, x, mode=mode, length=length, cache=cache)
+    return gqa_apply(p, cfg, x, mode=mode, length=length, cache=cache,
+                     enc_out=enc_out, use_rope=use_rope)

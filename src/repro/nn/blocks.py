@@ -1,0 +1,222 @@
+"""Residual blocks and the scan-over-layers stack.
+
+The stack is the TPU analogue of the DLA's time-multiplexed PE array: one
+compiled block body (one *pattern period* for hybrids) is reused for every
+layer group via ``lax.scan`` over stacked parameters, keeping the HLO O(1) in
+depth.  Hybrid (jamba) patterns scan over 8-layer super-blocks; MoE/dense
+interleave and dense-prefix layers (deepseek) are unrolled prefix blocks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from .attention import attn_apply, attn_cache_shape, attn_init
+from .layers import norm, norm_init
+from .mlp import mlp_apply, mlp_init
+from .moe import moe_apply, moe_init
+from .module import split
+from .ssd import mamba_apply, mamba_init, ssm_cache_shape
+
+
+# --------------------------------------------------------------------------
+# single block
+# --------------------------------------------------------------------------
+def block_init(key, cfg: ArchConfig, mixer: str, ffn: str):
+    ks = split(key, 4)
+    dtype = cfg.param_dtype
+    p = {"norm1": norm_init(cfg.norm_type, cfg.d_model, jnp.dtype(dtype))}
+    if mixer == "attn":
+        p["attn"] = attn_init(ks[0], cfg)
+    else:
+        p["ssm"] = mamba_init(ks[0], cfg)
+    if cfg.cross_attention:
+        p["normx"] = norm_init(cfg.norm_type, cfg.d_model, jnp.dtype(dtype))
+        p["xattn"] = attn_init(ks[2], cfg, cross=True)
+    if ffn != "none":
+        p["norm2"] = norm_init(cfg.norm_type, cfg.d_model, jnp.dtype(dtype))
+        p["mlp" if ffn == "mlp" else "moe"] = (
+            mlp_init(ks[1], cfg) if ffn == "mlp" else moe_init(ks[1], cfg))
+    return p
+
+
+def block_cache_shape(cfg: ArchConfig, mixer: str, batch: int, max_len: int,
+                      cross_len: int = 0):
+    c = {}
+    if mixer == "attn":
+        c["attn"] = attn_cache_shape(cfg, batch, max_len)
+    else:
+        c["ssm"] = ssm_cache_shape(cfg, batch)
+    if cfg.cross_attention and cross_len:
+        kv, hd = cfg.num_kv_heads, cfg.d_head
+        dt = jnp.dtype(cfg.dtype)
+        c["xattn"] = {
+            "ck": jax.ShapeDtypeStruct((batch, cross_len, kv, hd), dt),
+            "cv": jax.ShapeDtypeStruct((batch, cross_len, kv, hd), dt),
+        }
+    return c
+
+
+def block_apply(p, cfg: ArchConfig, x, *, mixer: str, ffn: str, mode: str,
+                length=None, cache=None, enc_out=None, collect_aux=False):
+    from ..parallel.sharding import constrain
+    new_cache = dict(cache) if cache is not None else None
+    h = norm(cfg.norm_type, p["norm1"], x)
+    if mixer == "attn":
+        h, c = attn_apply(p["attn"], cfg, h, mode=mode, length=length,
+                          cache=None if cache is None else cache.get("attn"))
+        if new_cache is not None and c is not None:
+            new_cache["attn"] = c
+    else:
+        h, c = mamba_apply(p["ssm"], cfg, h,
+                           mode="train" if mode == "bidir" else mode,
+                           cache=None if cache is None else cache.get("ssm"))
+        if new_cache is not None and c is not None:
+            new_cache["ssm"] = c
+    # Megatron-SP: the sublayer output joins a seq-sharded residual, so the
+    # TP partial-sum reduction lowers to reduce-scatter (half the wire bytes
+    # of all-reduce) instead of AR + local slice.
+    h = constrain(h, ("batch", "seq_res", "embed"))
+    x = x + h
+
+    if cfg.cross_attention and "xattn" in p and (enc_out is not None or
+                                                 (cache or {}).get("xattn")):
+        h = norm(cfg.norm_type, p["normx"], x)
+        h, c = attn_apply(p["xattn"], cfg, h,
+                          mode="decode" if mode == "decode" else "prefill",
+                          length=length, enc_out=enc_out,
+                          cache=None if cache is None else cache.get("xattn"))
+        if new_cache is not None and c is not None:
+            new_cache["xattn"] = c
+        x = x + h
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = norm(cfg.norm_type, p["norm2"], x)
+        if ffn == "mlp":
+            h = mlp_apply(p["mlp"], cfg, h)
+        else:
+            h, a = moe_apply(p["moe"], cfg, h, return_aux=collect_aux)
+            if collect_aux and a is not None:
+                aux = a
+        h = constrain(h, ("batch", "seq_res", "embed"))
+        x = x + h
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# stack
+# --------------------------------------------------------------------------
+def stack_pattern(cfg: ArchConfig):
+    """(prefix_kinds, period_kinds, n_groups) — and verify periodicity."""
+    prefix_n = cfg.moe.first_k_dense if cfg.moe else 0
+    period = cfg.pattern_period()
+    body_layers = cfg.num_layers - prefix_n
+    assert body_layers % period == 0, (cfg.num_layers, prefix_n, period)
+    n_groups = body_layers // period
+    prefix = [cfg.layer_kind(i) for i in range(prefix_n)]
+    kinds = [cfg.layer_kind(prefix_n + j) for j in range(period)]
+    for m in range(n_groups):
+        for j in range(period):
+            assert cfg.layer_kind(prefix_n + m * period + j) == kinds[j], \
+                "layer pattern is not periodic"
+    return prefix, kinds, n_groups
+
+
+def stack_init(key, cfg: ArchConfig):
+    prefix, kinds, n_groups = stack_pattern(cfg)
+    kp, ks = split(key, 2)
+    params = {"prefix": []}
+    for i, (mixer, ffn) in enumerate(prefix):
+        kp, ki = jax.random.split(kp)
+        params["prefix"].append(block_init(ki, cfg, mixer, ffn))
+
+    def group_init(gkey):
+        gkeys = split(gkey, len(kinds))
+        return {f"b{j}": block_init(gkeys[j], cfg, *kinds[j])
+                for j in range(len(kinds))}
+
+    keys = jax.random.split(ks, n_groups)
+    params["scan"] = jax.vmap(group_init)(keys)
+    return params
+
+
+def stack_cache_shape(cfg: ArchConfig, batch: int, max_len: int,
+                      cross_len: int = 0):
+    prefix, kinds, n_groups = stack_pattern(cfg)
+    cache = {"prefix": [block_cache_shape(cfg, mixer, batch, max_len, cross_len)
+                        for (mixer, _) in prefix]}
+    group = {f"b{j}": block_cache_shape(cfg, kinds[j][0], batch, max_len,
+                                        cross_len)
+             for j in range(len(kinds))}
+    cache["scan"] = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_groups,) + s.shape, s.dtype), group)
+    return cache
+
+
+def stack_apply(params, cfg: ArchConfig, x, *, mode: str, length=None,
+                caches=None, enc_out=None, collect_aux=False):
+    prefix, kinds, n_groups = stack_pattern(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    new_prefix_caches = []
+    for i, bp in enumerate(params["prefix"]):
+        c = None if caches is None else caches["prefix"][i]
+        x, c, aux = block_apply(bp, cfg, x, mixer=prefix[i][0], ffn=prefix[i][1],
+                                mode=mode, length=length, cache=c,
+                                enc_out=enc_out, collect_aux=collect_aux)
+        new_prefix_caches.append(c)
+        aux_total = aux_total + aux
+
+    def group_body(carry, xs):
+        x, aux_acc = carry
+        gp, gc = xs
+        # Megatron-style sequence parallelism for the layer-boundary residual:
+        # the scan carry (and remat-saved activation) is sharded along seq
+        # over the TP axis; GSPMD inserts the all-gather/reduce-scatter pair
+        # around the TP regions.  Dropped automatically when indivisible
+        # (e.g. decode S=1) or when rules map "seq_res" to None.
+        from ..parallel.sharding import constrain
+        x = constrain(x, ("batch", "seq_res", "embed"))
+        new_gc = {} if gc is not None else None
+
+        def one_block(j_mixer_ffn, bp, x, c):
+            mixer, ffn = j_mixer_ffn
+            return block_apply(bp, cfg, x, mixer=mixer, ffn=ffn,
+                               mode=mode, length=length, cache=c,
+                               enc_out=enc_out, collect_aux=collect_aux)
+
+        for j, (mixer, ffn) in enumerate(kinds):
+            c = None if gc is None else gc[f"b{j}"]
+            blk = one_block
+            if cfg.remat and len(kinds) > 1:
+                # nested per-block remat: backward materializes one layer's
+                # transients at a time instead of the whole period group
+                # (jamba: 8 layers/group -> ~8x lower peak)
+                blk = jax.checkpoint(one_block, static_argnums=(0,))
+            x, c, aux = blk((mixer, ffn), gp[f"b{j}"], x, c)
+            aux_acc = aux_acc + aux
+            if new_gc is not None:
+                new_gc[f"b{j}"] = c
+        return (x, aux_acc), new_gc
+
+    if cfg.remat:
+        policy = None
+        if cfg.remat_policy == "save_attn":
+            # keep the (seq-sharded) attention outputs: the backward pass
+            # skips the flash-forward recompute entirely
+            policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        body = jax.checkpoint(group_body, policy=policy)
+    else:
+        body = group_body
+    scan_caches = None if caches is None else caches["scan"]
+    if scan_caches is None:
+        (x, aux_total), _ = jax.lax.scan(
+            lambda carry, gp: body(carry, (gp, None)),
+            (x, aux_total), params["scan"])
+        new_caches = None
+    else:
+        (x, aux_total), new_scan = jax.lax.scan(
+            body, (x, aux_total), (params["scan"], scan_caches))
+        new_caches = {"prefix": new_prefix_caches, "scan": new_scan}
+    return x, new_caches, aux_total

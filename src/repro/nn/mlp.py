@@ -1,0 +1,32 @@
+"""Feed-forward sublayers: GELU MLP and SwiGLU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig
+from ..parallel.sharding import constrain
+from .layers import linear, linear_init
+from .module import split
+
+
+def mlp_init(key, cfg: ArchConfig, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dtype = jnp.dtype(cfg.param_dtype)
+    if cfg.mlp_type == "swiglu":
+        k1, k3, k2 = split(key, 3)
+        return {"w1": linear_init(k1, d, f, dtype),
+                "w3": linear_init(k3, d, f, dtype),
+                "w2": linear_init(k2, f, d, dtype)}
+    k1, k2 = split(key, 2)
+    return {"w1": linear_init(k1, d, f, dtype, bias=cfg.qkv_bias),
+            "w2": linear_init(k2, f, d, dtype, bias=cfg.qkv_bias)}
+
+
+def mlp_apply(p, cfg: ArchConfig, x):
+    if cfg.mlp_type == "swiglu":
+        h = jax.nn.silu(linear(p["w1"], x)) * linear(p["w3"], x)
+    else:
+        h = jax.nn.gelu(linear(p["w1"], x))
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return linear(p["w2"], h).astype(x.dtype)

@@ -1,0 +1,53 @@
+"""Minimal functional parameter-tree toolkit (no flax dependency).
+
+Parameters are plain nested dicts of jnp arrays.  Every layer is a pair of
+functions ``<layer>_init(key, ...) -> params`` and ``<layer>(params, x, ...)``.
+Stacked (scan-over-layers) parameters are built with ``stack_init``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def truncated_normal(key, shape, dtype, stddev):
+    # 2-sigma truncation, same flavour as flax default initializers.
+    unscaled = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    return (unscaled * stddev).astype(dtype)
+
+
+def dense_init_std(fan_in: int) -> float:
+    return 1.0 / np.sqrt(fan_in)
+
+
+def param(key, shape, dtype, scale: float | None = None):
+    """Default weight init: truncated normal with 1/sqrt(fan_in) std."""
+    if scale is None:
+        scale = dense_init_std(shape[0] if len(shape) > 1 else shape[-1])
+    return truncated_normal(key, shape, dtype, scale)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_init(init_fn, key, n: int):
+    """vmap an init function over ``n`` stacked copies (scan-over-layers)."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,115 @@
+"""Mixture-of-experts FFN — GShard-style one-hot dispatch (EP-shardable).
+
+Tokens are grouped along the (local) sequence so the dispatch one-hot stays a
+modest transient: (G, s, E, C) with s = moe.group_size.  Expert weights carry
+the "experts" logical axis (-> mesh "model"), so under GSPMD the dispatch /
+combine einsums lower to all-to-alls across the expert-parallel axis.
+
+This is the paper's FC-layer philosophy applied to experts: the *streamed*
+operand flips from features to filters depending on which is scarce; here the
+scarce resource is expert capacity, managed analytically via the capacity
+factor (dropped tokens fall back to the residual path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import ArchConfig, MoECfg
+from ..parallel.sharding import constrain
+from .layers import linear, linear_init
+from .module import param, split
+
+
+def moe_init(key, cfg: ArchConfig):
+    m = cfg.moe
+    d, f, E = cfg.d_model, m.d_ff, m.num_experts
+    dtype = jnp.dtype(cfg.param_dtype)
+    kr, k1, k3, k2, ks = split(key, 5)
+    p = {
+        "router": linear_init(kr, d, E, dtype),
+        "experts": {
+            "w1": param(k1, (E, d, f), dtype),
+            "w3": param(k3, (E, d, f), dtype),
+            "w2": param(k2, (E, f, d), dtype),
+        },
+    }
+    if m.num_shared:
+        from .mlp import mlp_init
+        p["shared"] = mlp_init(ks, cfg, d_ff=m.d_ff * m.num_shared)
+    return p
+
+
+def moe_capacity(m: MoECfg, sg: int) -> int:
+    return max(1, int(sg * m.top_k / m.num_experts * m.capacity_factor))
+
+
+def moe_apply(p, cfg: ArchConfig, x, *, return_aux: bool = False):
+    m: MoECfg = cfg.moe
+    B, S, D = x.shape
+    E, k = m.num_experts, m.top_k
+    sg = min(m.group_size, S)
+    pad = (-S) % sg
+    xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0))) if pad else x
+    G = B * ((S + pad) // sg)
+    xg = xp.reshape(G, sg, D)
+    # token groups inherit the batch sharding (without this the reshape
+    # replicates and every dispatch tensor is global-sized — measured
+    # 16 GiB/device transients on jamba train_4k)
+    xg = constrain(xg, ("expert_group", None, "embed"))
+
+    # --- routing (f32) ------------------------------------------------------
+    logits = linear(p["router"], xg, dtype=jnp.float32)        # (G,s,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                   # (G,s,k)
+    gate_vals = (gate_vals /
+                 jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+                 ).astype(x.dtype)
+
+    # --- capacity assignment (priority: all top-1 before any top-2, ...) ----
+    C = moe_capacity(m, sg)
+    sel = jax.nn.one_hot(idx, E, dtype=jnp.int32)              # (G,s,k,E)
+    flat = sel.transpose(0, 2, 1, 3).reshape(G, k * sg, E)     # k-major order
+    pos = jnp.cumsum(flat, axis=1) - flat
+    pos = pos.reshape(G, k, sg, E).transpose(0, 2, 1, 3)       # (G,s,k,E)
+
+    dispatch = jnp.zeros((G, sg, E, C), x.dtype)
+    combine = jnp.zeros((G, sg, E, C), x.dtype)
+    for ki in range(k):                                        # small static k
+        sel_k = sel[:, :, ki, :].astype(x.dtype)               # (G,s,E)
+        pos_k = pos[:, :, ki, :]
+        oh = (jax.nn.one_hot(pos_k, C, dtype=x.dtype)
+              * sel_k[..., None]
+              * (pos_k < C).astype(x.dtype)[..., None])        # (G,s,E,C)
+        dispatch = dispatch + oh
+        combine = combine + gate_vals[:, :, ki, None, None] * oh
+    dispatch = constrain(dispatch, ("expert_group", None, "experts", None))
+    combine = constrain(combine, ("expert_group", None, "experts", None))
+
+    # --- expert compute (EP x DP: experts on "model", token groups stay on
+    # "data"; the all-to-all runs within the model axis only) ---------------
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xg)            # a2a: tokens->experts
+    xe = constrain(xe, ("experts", "expert_group", None, "embed"))
+    from ..core.bfp import weight_of
+    w = p["experts"]
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe,
+                               weight_of(w, "w1", dtype=x.dtype)))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, weight_of(w, "w3", dtype=x.dtype))
+    ye = jnp.einsum("egcf,efd->egcd", h, weight_of(w, "w2", dtype=x.dtype))
+    ye = constrain(ye, ("experts", "expert_group", None, "embed"))
+    y = jnp.einsum("gsec,egcd->gsd", combine, ye)              # a2a: experts->tokens
+    y = constrain(y, ("expert_group", None, "embed"))
+
+    if "shared" in p:
+        from .mlp import mlp_apply
+        y = y + mlp_apply(p["shared"], cfg, xg)
+
+    y = y.reshape(B, S + pad, D)[:, :S].astype(x.dtype)
+    if not return_aux:
+        return y, None
+
+    # load-balance aux loss (Switch/GShard): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                               # mean router prob
+    ce = sel.astype(jnp.float32).sum(2).mean(axis=(0, 1)) / k  # fraction routed
+    aux = E * jnp.sum(me * ce) * m.router_aux_coef
+    return y, aux

@@ -1,0 +1,248 @@
+"""Mamba-2 SSD (state-space duality) mixer, chunked for TPU.
+
+The chunked algorithm is the stream-buffer idea in sequence space: a chunk of
+``ssm.chunk`` tokens is the VMEM-resident working set; intra-chunk terms use
+quadratic (attention-like) matmuls that feed the MXU, inter-chunk terms pass a
+(H, N, P) state through an associative scan (log-depth across chunks).
+
+Deviations from the reference CUDA implementation (documented in DESIGN.md):
+  * z/x/B/C/dt are separate projections (a fused in_proj would be split with
+    slices that cross TP shard boundaries and force an all-gather);
+  * the depthwise causal conv is applied per-stream (x, B, C) — identical
+    math, and the x-conv (width d_inner) is the Winograd kernel target.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ArchConfig
+from ..parallel.sharding import constrain
+from .layers import linear, linear_init, rmsnorm
+from .module import split
+
+
+# --------------------------------------------------------------------------
+# depthwise causal conv1d (k taps, pure jnp baseline; Pallas Winograd kernel
+# in repro.kernels.winograd is the drop-in optimized version)
+# --------------------------------------------------------------------------
+def causal_conv1d(w, b, x, use_winograd: bool = False):
+    """x (B, L, ch); w (k, ch); left-padded causal depthwise conv.
+
+    use_winograd routes through the pure-jnp F(3,4) Winograd path — the
+    GSPMD-partitionable twin of the Pallas kernel in kernels/winograd (which
+    is used directly on single TPU cores / under shard_map)."""
+    if use_winograd:
+        from ..core.winograd import conv1d_depthwise_causal as wg_conv
+        return wg_conv(x, w, b)
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype) for i in range(k))
+    return y + b.astype(x.dtype)
+
+
+def conv_decode_step(w, b, conv_state, xnew):
+    """conv_state (B, k-1, ch); xnew (B, 1, ch) -> (y (B,1,ch), new_state)."""
+    k = w.shape[0]
+    win = jnp.concatenate([conv_state, xnew], axis=1)        # (B, k, ch)
+    y = jnp.einsum("bkc,kc->bc", win, w.astype(xnew.dtype))[:, None, :]
+    y = y + b.astype(xnew.dtype)
+    return y, win[:, 1:, :]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def mamba_init(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d, di = cfg.d_model, cfg.d_inner
+    H, G, N, k = cfg.ssm_heads, s.ngroups, s.d_state, s.conv_kernel
+    dtype = jnp.dtype(cfg.param_dtype)
+    kz, kx, kb, kc, kdt, kcx, kcb, kcc, ko = split(key, 9)
+    # A in [1, 16): standard mamba2 init; dt bias st softplus(dt_bias)~[1e-3,1e-1]
+    a = np.linspace(1.0, 16.0, H)
+    dt0 = np.exp(np.linspace(np.log(1e-3), np.log(1e-1), H))
+    return {
+        "wz": linear_init(kz, d, di, dtype),
+        "wx": linear_init(kx, d, di, dtype),
+        "wb": linear_init(kb, d, G * N, dtype),
+        "wc": linear_init(kc, d, G * N, dtype),
+        "wdt": linear_init(kdt, d, H, dtype),
+        "conv_x": {"w": jax.random.normal(kcx, (k, di), dtype) * 0.1,
+                   "b": jnp.zeros((di,), dtype)},
+        "conv_b": {"w": jax.random.normal(kcb, (k, G * N), dtype) * 0.1,
+                   "b": jnp.zeros((G * N,), dtype)},
+        "conv_c": {"w": jax.random.normal(kcc, (k, G * N), dtype) * 0.1,
+                   "b": jnp.zeros((G * N,), dtype)},
+        "A_log": jnp.asarray(np.log(a), dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.asarray(np.log(np.expm1(dt0)), dtype),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": linear_init(ko, di, d, dtype),
+    }
+
+
+def ssm_cache_shape(cfg: ArchConfig, batch: int):
+    s = cfg.ssm
+    dt = jnp.dtype(cfg.dtype)
+    G, N = s.ngroups, s.d_state
+    return {
+        "conv_x": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, cfg.d_inner), dt),
+        "conv_b": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, G * N), dt),
+        "conv_c": jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, G * N), dt),
+        "state": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, N, s.head_dim), jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# chunked SSD core (pure jnp; repro.kernels.ssd provides the Pallas version)
+# --------------------------------------------------------------------------
+def ssd_chunked(x, dt, A, B_, C_, chunk: int, initial_state=None):
+    """x (B,L,H,P); dt (B,L,H) post-softplus; A (H,) negative;
+    B_, C_ (B,L,G,N).  Returns (y (B,L,H,P), final_state (B,H,N,P))."""
+    Bb, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Hg = H // G
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // Q
+
+    xg = x.reshape(Bb, nc, Q, G, Hg, P)
+    dtg = dt.reshape(Bb, nc, Q, G, Hg)
+    Bg = B_.reshape(Bb, nc, Q, G, N)
+    Cg = C_.reshape(Bb, nc, Q, G, N)
+    dtA = (dtg * A.reshape(G, Hg)).astype(jnp.float32)          # (B,nc,Q,G,Hg) <=0
+    cums = jnp.cumsum(dtA, axis=2)                              # inclusive
+
+    # intra-chunk (quadratic, MXU-friendly)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cg, Bg,
+                    preferred_element_type=jnp.float32)          # (B,nc,G,Q,Q)
+    # (B,nc,G,Hg,Q,K) causal decay matrix
+    t = cums.transpose(0, 1, 3, 4, 2)                            # (B,nc,G,Hg,Q)
+    Ld = jnp.exp(jnp.clip(t[..., :, None] - t[..., None, :], -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Ld = jnp.where(causal, Ld, 0.0)
+    dtx = (dtg[..., None] * xg).astype(x.dtype)                  # (B,nc,Q,G,Hg,P)
+    M = CB[:, :, :, None, :, :] * Ld                             # (B,nc,G,Hg,Q,K)
+    y1 = jnp.einsum("bcghqk,bckghp->bcqghp", M.astype(x.dtype), dtx,
+                    preferred_element_type=jnp.float32)
+
+    # chunk states
+    dte = jnp.exp(jnp.clip(cums[:, :, -1:, :, :] - cums, -60.0, 0.0))
+    states = jnp.einsum("bckgn,bckgh,bckghp->bcghnp",
+                        Bg.astype(jnp.float32), (dte * dtg).astype(jnp.float32),
+                        xg.astype(jnp.float32))                  # (B,nc,G,Hg,N,P)
+
+    # inter-chunk associative scan
+    lam = jnp.exp(jnp.clip(cums[:, :, -1, :, :], -60.0, 0.0))    # (B,nc,G,Hg)
+
+    def op(a, b):
+        (la, sa), (lb, sb) = a, b
+        return la * lb, sa * lb[..., None, None] + sb
+
+    lam_in, st_in = lam, states
+    if initial_state is not None:
+        st0 = initial_state.reshape(Bb, 1, G, Hg, N, P).astype(jnp.float32)
+        lam_in = jnp.concatenate([jnp.ones_like(lam[:, :1]), lam], axis=1)
+        st_in = jnp.concatenate([st0, states], axis=1)
+    _, pref = jax.lax.associative_scan(op, (lam_in, st_in), axis=1)
+    if initial_state is not None:
+        final_state, h_prev = pref[:, -1], pref[:, :-1]
+    else:
+        final_state = pref[:, -1]
+        h_prev = jnp.concatenate(
+            [jnp.zeros_like(pref[:, :1]), pref[:, :-1]], axis=1)
+
+    y2 = jnp.einsum("bcqgn,bcghnp,bcqgh->bcqghp",
+                    Cg.astype(jnp.float32), h_prev,
+                    jnp.exp(jnp.clip(cums, -60.0, 0.0)))
+
+    y = (y1 + y2).reshape(Bb, nc * Q, H, P)[:, :L]
+    return y.astype(x.dtype), final_state.reshape(Bb, H, N, P)
+
+
+def ssd_decode_step(x, dt, A, B_, C_, state):
+    """One-token recurrence. x (B,1,H,P); dt (B,1,H); B_,C_ (B,1,G,N);
+    state (B,H,N,P) f32."""
+    Bb, _, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    Hg = H // G
+    dA = jnp.exp((dt[:, 0] * A).astype(jnp.float32))             # (B,H)
+    dtx = (dt[..., None] * x)[:, 0].astype(jnp.float32)          # (B,H,P)
+    Bgr = B_[:, 0].astype(jnp.float32)                           # (B,G,N)
+    Bh = jnp.repeat(Bgr, Hg, axis=1) if G > 1 else jnp.broadcast_to(
+        Bgr, (Bb, H, N)) if G == 1 else Bgr
+    new_state = state * dA[..., None, None] + \
+        jnp.einsum("bhn,bhp->bhnp", Bh, dtx)
+    Cgr = C_[:, 0].astype(jnp.float32)
+    Ch = jnp.repeat(Cgr, Hg, axis=1) if G > 1 else jnp.broadcast_to(
+        Cgr, (Bb, H, N))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y[:, None].astype(x.dtype), new_state
+
+
+# --------------------------------------------------------------------------
+# full mixer
+# --------------------------------------------------------------------------
+def mamba_apply(p, cfg: ArchConfig, x, *, mode: str, cache=None,
+                use_winograd: bool = True):
+    s = cfg.ssm
+    Bb, S, _ = x.shape
+    H, P, G, N = cfg.ssm_heads, s.head_dim, s.ngroups, s.d_state
+
+    z = linear(p["wz"], x)
+    xs = linear(p["wx"], x)
+    bs = linear(p["wb"], x)
+    cs = linear(p["wc"], x)
+    dt = linear(p["wdt"], x)
+    xs = constrain(xs, ("batch", "seq", "ssm_inner"))
+
+    new_cache = cache
+    if mode == "decode":
+        xs, conv_x = conv_decode_step(p["conv_x"]["w"], p["conv_x"]["b"],
+                                      cache["conv_x"], xs)
+        bs, conv_b = conv_decode_step(p["conv_b"]["w"], p["conv_b"]["b"],
+                                      cache["conv_b"], bs)
+        cs, conv_c = conv_decode_step(p["conv_c"]["w"], p["conv_c"]["b"],
+                                      cache["conv_c"], cs)
+    else:
+        raw_x, raw_b, raw_c = xs, bs, cs
+        xs = causal_conv1d(p["conv_x"]["w"], p["conv_x"]["b"], xs,
+                           use_winograd=use_winograd and mode != "decode")
+        bs = causal_conv1d(p["conv_b"]["w"], p["conv_b"]["b"], bs)
+        cs = causal_conv1d(p["conv_c"]["w"], p["conv_c"]["b"], cs)
+    xs, bs, cs = jax.nn.silu(xs), jax.nn.silu(bs), jax.nn.silu(cs)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xs.reshape(Bb, S, H, P)
+    bg = bs.reshape(Bb, S, G, N)
+    cg = cs.reshape(Bb, S, G, N)
+
+    if mode == "decode":
+        y, state = ssd_decode_step(xh, dt, A, bg, cg, cache["state"])
+        new_cache = dict(cache, conv_x=conv_x, conv_b=conv_b, conv_c=conv_c,
+                         state=state)
+    else:
+        y, state = ssd_chunked(xh, dt, A, bg, cg, s.chunk)
+        if mode == "prefill" and cache is not None:
+            k = s.conv_kernel
+            new_cache = dict(
+                cache,
+                conv_x=raw_x[:, S - (k - 1):, :].astype(cache["conv_x"].dtype),
+                conv_b=raw_b[:, S - (k - 1):, :].astype(cache["conv_b"].dtype),
+                conv_c=raw_c[:, S - (k - 1):, :].astype(cache["conv_c"].dtype),
+                state=state)
+
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * xh
+    y = y.reshape(Bb, S, cfg.d_inner)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y).astype(x.dtype), new_cache

@@ -1,0 +1,1 @@
+from .adamw import adamw_step, init_state, lr_schedule  # noqa: F401

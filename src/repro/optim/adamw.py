@@ -1,0 +1,65 @@
+"""AdamW with global-norm clipping and warmup+cosine schedule.
+
+State is a plain pytree dict (checkpoint-friendly).  Under a mesh, the
+moments get ZeRO-1 shardings from ``parallel.sharding.zero1_shardings`` via
+the train-step's out_shardings — the optimizer code itself is layout-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(params):
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"step": jnp.zeros((), jnp.int32), "params": params,
+            "m": zeros(), "v": zeros()}
+
+
+def lr_schedule(step, *, base_lr: float, warmup: int = 100,
+                total: int = 10_000, min_ratio: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_step(state, grads, *, lr, b1: float = 0.9, b2: float = 0.95,
+               eps: float = 1e-8, weight_decay: float = 0.0,
+               clip_norm: float = 1.0):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if clip_norm else 1.0
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p - lr * update.astype(p.dtype)).astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree_util.tree_flatten(state["params"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_state = {
+        "step": step,
+        "params": jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+        "m": jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]),
+        "v": jax.tree_util.tree_unflatten(tdef, [o[2] for o in out]),
+    }
+    return new_state, {"grad_norm": gnorm}

@@ -1,0 +1,2 @@
+# Submodules are imported explicitly (repro.parallel.sharding, .collectives,
+# .pipeline) to keep import-time light and avoid cycles.

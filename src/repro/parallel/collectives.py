@@ -1,0 +1,103 @@
+"""BFP-compressed gradient collectives (paper §3.6 -> distributed training).
+
+The shared-exponent trick applied to the wire: a ring reduce-scatter whose
+per-hop payload is int8 mantissas + one int8 exponent per block (~1.9x fewer
+bytes than bf16, ~3.8x fewer than f32), with f32 accumulation at every hop so
+error does not compound multiplicatively.  Built on shard_map + ppermute so
+it works inside any jit program.
+
+This is the framework's gradient-compression knob for collective-bound
+training cells; the §Perf log quantifies it via the roofline collective term.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from ..core import bfp
+
+
+def _ring_rs(x, axis_name: str, *, block: int, bits: int):
+    """Ring reduce-scatter with BFP-compressed hops.
+
+    x: (n * chunk, ...) locally identical-shaped shard view. Returns this
+    device's reduced chunk, i.e. chunk index = axis_index."""
+    n = jax.lax.axis_size(axis_name)
+    d = jax.lax.axis_index(axis_name)
+    chunks = x.reshape((n, -1) + x.shape[1:])
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # Device d seeds the ring with its copy of chunk (d+1)%n; each hop the
+    # partial moves d -> d+1 and the receiver adds its local copy.  After
+    # n-1 hops device d owns the fully reduced chunk (d+2)%n.
+    acc = jnp.take(chunks, (d + 1) % n, axis=0)
+    for s in range(n - 1):
+        m, e, ax = bfp.quantize(acc.reshape(-1), block=block, bits=bits)
+        m = jax.lax.ppermute(m, axis_name, perm)
+        e = jax.lax.ppermute(e, axis_name, perm)
+        recv = bfp.dequantize(m, e, bits=bits, axis=ax).reshape(acc.shape)
+        acc = recv + jnp.take(chunks, (d - s) % n, axis=0)
+    return acc
+
+
+def bfp_psum(x, axis_name: str, *, block: int = 32, bits: int = 8):
+    """All-reduce = compressed ring reduce-scatter + compressed all-gather."""
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    orig_shape = x.shape
+    size = _size(orig_shape)
+    flat = x.reshape(-1)
+    pad = (-size) % (n * block)
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    chunk = _ring_rs(flat, axis_name, block=block, bits=bits)  # this dev's chunk
+    # compressed all-gather of the reduced chunks
+    m, e, ax = bfp.quantize(chunk.reshape(-1), block=block, bits=bits)
+    ms = jax.lax.all_gather(m, axis_name, tiled=False)         # (n, nb, blk)
+    es = jax.lax.all_gather(e, axis_name, tiled=False)         # (n, nb)
+    parts = bfp.dequantize(ms, es, bits=bits, axis=ax + 1)     # (n, chunk)
+    # device i holds reduced chunk (i+2)%n -> reorder to 0..n-1
+    parts = jnp.roll(parts, 2, axis=0)
+    return parts.reshape(-1)[:size].reshape(orig_shape)
+
+
+def _size(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def make_compressed_grad_sync(mesh: Mesh, axis: str = "data", *,
+                              block: int = 32, bits: int = 8,
+                              min_size: int = 1024):
+    """Returns grads -> grads averaged over ``axis`` with BFP compression for
+    large leaves (small leaves use exact psum)."""
+
+    def sync(grads):
+        def one(g):
+            if _size(g.shape) >= min_size and _size(g.shape) % block == 0:
+                s = bfp_psum(g, axis, block=block, bits=bits)
+            else:
+                s = jax.lax.psum(g, axis)
+            return s / jax.lax.axis_size(axis)
+        return jax.tree_util.tree_map(one, grads)
+
+    def wrapped(grads):
+        spec = jax.tree_util.tree_map(lambda _: P(), grads)
+        return shard_map(sync, mesh=mesh, in_specs=(spec,), out_specs=spec,
+                         check_vma=False)(grads)
+
+    return wrapped
+
+
+def wire_bytes_ratio(bits: int = 8, block: int = 32,
+                     baseline_bytes: int = 2) -> float:
+    """Compression ratio vs an uncompressed ring (per hop)."""
+    payload = block * (bits / 8) + 1      # mantissas + shared exponent
+    return payload / (block * baseline_bytes)

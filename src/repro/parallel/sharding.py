@@ -1,0 +1,195 @@
+"""Logical-axis sharding rules (t5x/MaxText style).
+
+Model code annotates activations with *logical* axis names via
+:func:`constrain`; a rules table maps logical names to mesh axes.  When no
+mesh is active the annotations are no-ops, so the same model code runs on a
+laptop and on a 512-chip mesh.  Rules are plain dicts, so hillclimbing a
+different sharding is a one-line config change.
+"""
+from __future__ import annotations
+
+import re
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# --- default logical -> mesh-axis rules -------------------------------------
+# "pod" composes as an outer data axis by default (multi-pod DP); the
+# pipeline launcher re-purposes it as a stage axis instead.
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": "model",        # SP: layer-boundary residual sharded along seq
+    "embed": None,
+    "heads": "model",          # attention heads (activations)
+    "kv_heads": "model",       # kv heads (dropped automatically if indivisible)
+    "head_dim": None,
+    "qkv_flat": "model",       # flattened H*head_dim param dim
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",        # EP: expert dim of MoE weights / dispatch
+    "expert_group": ("pod", "data"),   # MoE token groups stay data-sharded
+    "expert_mlp": None,
+    "ssm_inner": "model",      # mamba d_inner
+    "ssm_heads": "model",
+    "state": None,
+    "kv_lora": None,
+    "cache_seq": "model",      # decode KV cache sharded along sequence (SP)
+    "cache_kv_heads": None,
+    "frames": None,
+    "layers": None,
+    "stage": "pipe",           # pipeline-parallel stage axis (opt-in meshes)
+}
+
+_ACTIVE: dict = {"mesh": None, "rules": dict(DEFAULT_RULES)}
+
+
+@contextmanager
+def use_mesh_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = dict(_ACTIVE)
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def _mesh_axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _resolve(mesh: Mesh, logical_axes, shape) -> P:
+    """Map logical axes -> PartitionSpec, dropping indivisible/absent axes and
+    never using one mesh axis twice."""
+    rules = _ACTIVE["rules"]
+    used: set = set()
+    spec = []
+    for dim, name in zip(shape, logical_axes):
+        target = rules.get(name) if name else None
+        if target is None:
+            spec.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes or dim % _mesh_axes_size(mesh, axes) != 0:
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes if len(axes) > 1 else axes[0])
+    return P(*spec)
+
+
+def logical_sharding(shape, logical_axes, mesh: Optional[Mesh] = None):
+    mesh = mesh or active_mesh()
+    assert mesh is not None, "no active mesh"
+    return NamedSharding(mesh, _resolve(mesh, logical_axes, shape))
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    if len(logical_axes) != x.ndim:
+        raise ValueError(f"{logical_axes} vs rank {x.ndim}")
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(mesh, logical_axes, x.shape)))
+
+
+# --- parameter sharding by path ----------------------------------------------
+# regex on the parameter path (dict keys joined with '/'); value = logical
+# axes of the *trailing* dims (left-padded with "layers"/None for stacked
+# leaves created by scan-over-layers vmapped init).
+PARAM_RULES = [
+    (r"embedding$", ("vocab", "embed")),
+    (r"(wq|wkv|wk|wv|wuk|wuv|in_proj|wqkv)/w$", ("embed", "qkv_flat")),
+    (r"(wo|out_proj)/w$", ("qkv_flat", "embed")),
+    (r"wdkv/w$", ("embed", None)),                    # MLA down-proj (small)
+    (r"(w1|w3)/w$", ("embed", "mlp")),
+    (r"w2/w$", ("mlp", "embed")),
+    (r"router/w$", ("embed", None)),
+    (r"experts/(w1|w3)$", ("experts", "embed", "expert_mlp")),
+    (r"experts/w2$", ("experts", "expert_mlp", "embed")),
+    (r"conv/w$", (None, "ssm_inner")),
+    (r"(A_log|D|dt_bias)$", ("ssm_heads",)),
+    (r"(patch_proj)/w$", ("embed", None)),
+]
+
+
+def path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_logical_axes(path, leaf) -> tuple:
+    s = path_str(path)
+    # BFP-quantized linear weights: w_q (KB, block, N) / w_e (KB, N) inherit
+    # the underlying w (K, N) rule with the block dim unsharded.
+    bfp_kind = None
+    if s.endswith("/w_q") or s.endswith("/w_e"):
+        bfp_kind = s[-1]
+        s = s[:-2]
+    for pat, axes in PARAM_RULES:
+        if re.search(pat, s):
+            if bfp_kind == "q" and len(axes) == 2:
+                axes = (axes[0], None, axes[1])
+            pad = leaf.ndim - len(axes)
+            return ("layers",) * pad + tuple(axes) if pad >= 0 else tuple(axes)[-leaf.ndim:]
+    return (None,) * leaf.ndim   # norms, biases, scalars: replicated
+
+
+def param_shardings(params_shape, mesh: Mesh):
+    """Pytree of NamedShardings for a (possibly abstract) param tree."""
+    def one(path, leaf):
+        axes = param_logical_axes(path, leaf)
+        return NamedSharding(mesh, _resolve(mesh, axes, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_sharding(mesh: Mesh, ndim: int = 2):
+    """Inputs: batch dim sharded over (pod, data)."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return NamedSharding(mesh, P(axes if len(axes) > 1 else (axes[0] if axes else None),
+                                 *([None] * (ndim - 1))))
+
+
+def zero1_shardings(params_shape, mesh: Mesh):
+    """ZeRO-1: optimizer moments additionally sharded over 'data' on the
+    largest divisible dim that the param sharding leaves unsharded."""
+    base = param_shardings(params_shape, mesh)
+
+    def upgrade(leaf_shape, ns):
+        spec = list(ns.spec) + [None] * (len(leaf_shape.shape) - len(ns.spec))
+        dsize = mesh.shape.get("data", 1)
+        if dsize == 1:
+            return ns
+        # pick the largest unsharded dim divisible by the data axis
+        cands = [(d, i) for i, d in enumerate(leaf_shape.shape)
+                 if spec[i] is None and d % dsize == 0]
+        if not cands:
+            return ns
+        _, i = max(cands)
+        spec[i] = "data"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(upgrade, params_shape, base)

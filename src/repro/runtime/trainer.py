@@ -1,0 +1,240 @@
+"""Production training runtime: fault tolerance, stragglers, elasticity.
+
+Fault model (1000+ node fleets):
+  * step failure (node loss, injected in tests)  -> restore last checkpoint,
+    continue; the data pipeline is keyed by step so replayed batches are
+    identical.
+  * preemption (SIGTERM)                         -> synchronous final
+    checkpoint, clean exit; restart resumes from it.
+  * stragglers                                   -> per-step EMA/z-score
+    detector with a pluggable action hook (on a real fleet: re-shard or
+    evict; here: recorded + logged).
+  * elastic scaling                              -> reshard_state() re-places
+    the state pytree onto a new mesh (grown or shrunk); verified by test.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from .. import checkpoint as ckpt_lib
+from ..config import ArchConfig
+from ..core.streambuf import StreamBuffer
+from ..data.pipeline import synthetic_batches
+from ..models import model_for
+from ..optim import adamw_step, init_state, lr_schedule
+from ..parallel import sharding as shlib
+
+
+class InjectedFailure(RuntimeError):
+    """Raised by a failure injector to simulate a node loss."""
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    base_lr: float = 1e-3
+    warmup: int = 20
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    batch: int = 8
+    seq_len: int = 128
+    log_every: int = 10
+    ckpt_every: int = 0                 # 0 = checkpointing off
+    ckpt_dir: str = ""
+    keep: int = 3
+    async_ckpt: bool = False
+    straggler_zscore: float = 3.0
+    straggler_min_history: int = 16
+    seed: int = 0
+
+
+@dataclass
+class TrainerEvents:
+    stragglers: list = field(default_factory=list)
+    recoveries: list = field(default_factory=list)
+    preempted: bool = False
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig, *,
+                 mesh=None, rules=None, data_it=None,
+                 failure_injector: Optional[Callable[[int], bool]] = None,
+                 straggler_hook: Optional[Callable] = None,
+                 params=None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.mesh, self.rules = mesh, rules
+        self.mod = model_for(cfg)
+        self.events = TrainerEvents()
+        self._failure_injector = failure_injector
+        self._straggler_hook = straggler_hook
+        self._times: list = []
+        self._sigterm = False
+        self.history: list = []
+
+        key = jax.random.PRNGKey(tcfg.seed)
+        with shlib.use_mesh_rules(mesh, rules):
+            if params is None:
+                params = self.mod.init(key, cfg)
+            if mesh is not None:
+                pshard = shlib.param_shardings(
+                    jax.tree_util.tree_map(
+                        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+                    mesh)
+                params = jax.device_put(params, pshard)
+            self.state = init_state(params)
+
+        self._user_data_it = data_it
+        self.data = None           # built lazily at run() aligned to `step`
+
+        self._ckpt = None
+        if tcfg.ckpt_every and tcfg.ckpt_dir:
+            if tcfg.async_ckpt:
+                self._ckpt = ckpt_lib.AsyncCheckpointer(tcfg.ckpt_dir,
+                                                        keep=tcfg.keep)
+
+        mod, tc = self.mod, tcfg
+
+        def train_step(state, batch):
+            lr = lr_schedule(state["step"], base_lr=tc.base_lr,
+                             warmup=tc.warmup, total=tc.steps)
+            (loss, metrics), grads = jax.value_and_grad(
+                mod.loss_fn, has_aux=True)(state["params"], cfg, batch)
+            state, om = adamw_step(state, grads, lr=lr,
+                                   weight_decay=tc.weight_decay,
+                                   clip_norm=tc.clip_norm)
+            return state, {**metrics, **om, "lr": lr}
+
+        def wrapped(state, batch):
+            with shlib.use_mesh_rules(mesh, rules):
+                return train_step(state, batch)
+
+        self._step = jax.jit(wrapped, donate_argnums=(0,))
+
+    # -- fault handling -----------------------------------------------------
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._sigterm = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:      # not in main thread
+            pass
+
+    def save(self):
+        if not self.tcfg.ckpt_dir:
+            return
+        if self._ckpt is not None:
+            self._ckpt.submit(self.state)
+        else:
+            ckpt_lib.save(self.tcfg.ckpt_dir, self.state, keep=self.tcfg.keep)
+
+    def restore_latest(self) -> bool:
+        step = ckpt_lib.latest_step(self.tcfg.ckpt_dir) \
+            if self.tcfg.ckpt_dir else None
+        if step is None:
+            return False
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        self.state = ckpt_lib.restore(self.tcfg.ckpt_dir, self.state)
+        return True
+
+    # -- data ------------------------------------------------------------------
+    def _make_data(self, start_step: int):
+        """Step-keyed stream: restarting at step s replays batch s exactly
+        (checkpoint restore and failure recovery stay bit-reproducible)."""
+        if self._user_data_it is not None:
+            return StreamBuffer(self._user_data_it)
+        tc, cfg = self.tcfg, self.cfg
+
+        def gen():
+            s = start_step
+            while True:
+                it = synthetic_batches(
+                    batch=tc.batch, seq_len=tc.seq_len, vocab=cfg.vocab_size,
+                    seed=tc.seed + s, family=cfg.family, d_model=cfg.d_model,
+                    num_patches=cfg.num_patches,
+                    frames_len=min(tc.seq_len, 128), steps=1)
+                yield next(it)
+                s += 1
+
+        return StreamBuffer(gen())
+
+    # -- straggler detection --------------------------------------------------
+    def _check_straggler(self, step: int, dt: float):
+        if len(self._times) < 2:       # warmup: skip compile-dominated steps
+            self._times.append(dt)
+            return
+        self._times.append(dt)
+        hist = self._times[2:][-256:]
+        if len(hist) < self.tcfg.straggler_min_history:
+            return
+        mu = float(np.mean(hist[:-1]))
+        sd = float(np.std(hist[:-1])) + 1e-9
+        z = (dt - mu) / sd
+        if z > self.tcfg.straggler_zscore:
+            ev = {"step": step, "dt": dt, "mean": mu, "z": z}
+            self.events.stragglers.append(ev)
+            if self._straggler_hook:
+                self._straggler_hook(ev)
+
+    # -- main loop -------------------------------------------------------------
+    def run(self) -> list:
+        self._install_sigterm()
+        tc = self.tcfg
+        step = int(jax.device_get(self.state["step"]))
+        if self.data is None:
+            self.data = self._make_data(step)
+        while step < tc.steps:
+            batch = next(self.data)
+            t0 = time.perf_counter()
+            try:
+                if self._failure_injector and self._failure_injector(step):
+                    raise InjectedFailure(f"injected failure @ step {step}")
+                new_state, metrics = self._step(self.state, batch)
+                jax.block_until_ready(new_state["step"])
+                self.state = new_state
+            except InjectedFailure as e:
+                restored = self.restore_latest()
+                self.events.recoveries.append(
+                    {"step": step, "restored": restored, "err": str(e)})
+                # re-align the (step-keyed) data stream with the restored step
+                step = int(jax.device_get(self.state["step"]))
+                self.data = self._make_data(step)
+                continue
+            dt = time.perf_counter() - t0
+            step = int(jax.device_get(self.state["step"]))
+            self._check_straggler(step, dt)
+            if tc.log_every and step % tc.log_every == 0:
+                rec = {k: float(jax.device_get(v)) for k, v in metrics.items()}
+                rec.update(step=step, dt=dt)
+                self.history.append(rec)
+            if tc.ckpt_every and step % tc.ckpt_every == 0:
+                self.save()
+            if self._sigterm:
+                self.events.preempted = True
+                self.save()
+                break
+        if self._ckpt is not None:
+            self._ckpt.wait()
+        return self.history
+
+
+def reshard_state(state, mesh, rules=None):
+    """Elastic re-placement of a state pytree onto a (new) mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    with shlib.use_mesh_rules(mesh, rules):
+        abstract = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state["params"])
+        pshard = shlib.param_shardings(abstract, mesh)
+        out = {
+            "step": jax.device_put(state["step"], NamedSharding(mesh, P())),
+            "params": jax.device_put(state["params"], pshard),
+            "m": jax.device_put(state["m"], pshard),
+            "v": jax.device_put(state["v"], pshard),
+        }
+    return out

@@ -1,0 +1,203 @@
+"""Slot-based continuous-batching serving engine (paper §3.7 generalized).
+
+The paper batches images through the FC layers because FC throughput is
+weight-bandwidth-bound: each streamed weight must be reused S_batch times.
+LM decode is the same regime — every decode step streams the full
+(model-sharded) weight set — so the engine keeps a fixed pool of ``max_batch``
+cache slots and decodes all active slots in one batched step.  Prefill
+(activation-bound, the paper's conv regime) runs per-request at admission,
+and its cache rows are inserted into the batch pool.
+
+Request lifecycle: submit() -> queued -> admitted (prefill) -> decoding ->
+finished (max_new or eos).  step() = admit + one batched decode; tokens/s
+scales with occupancy exactly like the paper's FC batching curve.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..config import ArchConfig
+from ..models import model_for
+
+
+@dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_len: int = 512
+    prefill_bucket: int = 64          # prompts padded to multiples (fewer compiles)
+    eos_id: int = -1                  # -1: disabled
+    cross_len: int = 0                # enc-dec: encoder length
+
+
+@dataclass
+class Request:
+    prompt: List[int]
+    max_new: int = 16
+    uid: int = field(default_factory=itertools.count().__next__)
+    frames: Optional[np.ndarray] = None       # audio family
+    patches: Optional[np.ndarray] = None      # vlm family
+    # outputs
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, scfg: ServeConfig, *, params=None,
+                 seed: int = 0):
+        self.cfg, self.scfg = cfg, scfg
+        self.mod = model_for(cfg)
+        if params is None:
+            params = self.mod.init(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+
+        B, L = scfg.max_batch, scfg.max_len
+        kw = {}
+        if cfg.family == "audio":
+            kw["cross_len"] = scfg.cross_len or 128
+        self.cache = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.mod.cache_shape(cfg, B, L, **kw))
+        self.lengths = jnp.zeros((B,), jnp.int32)
+        self.active = np.zeros((B,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self.tokens_generated = 0
+        self.decode_steps = 0
+        self._t_decode = 0.0
+
+        mod, ccfg = self.mod, cfg
+
+        one_shape = self.mod.cache_shape(cfg, 1, L, **kw)
+
+        def prefill(params, tokens, extras):
+            onecache = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), one_shape)
+            logits, c, _ = mod.apply(params, ccfg, tokens, mode="prefill",
+                                     caches=onecache, **extras)
+            return logits.argmax(-1).astype(jnp.int32), c
+
+        def insert(cache, one, slot):
+            # batch axis: 0 for unrolled prefix blocks, 1 for scanned blocks
+            # (leading axis there is the layer-group dim)
+            def at(axis):
+                def f(full, o):
+                    idx = [0] * full.ndim
+                    idx[axis] = slot
+                    return jax.lax.dynamic_update_slice(
+                        full, o.astype(full.dtype), tuple(idx))
+                return f
+            return {
+                "prefix": [jax.tree_util.tree_map(at(0), c, o)
+                           for c, o in zip(cache["prefix"], one["prefix"])],
+                "scan": jax.tree_util.tree_map(at(1), cache["scan"],
+                                               one["scan"]),
+            }
+
+        def decode(params, cache, last_tokens, lengths):
+            logits, cache, _ = mod.apply(params, ccfg, last_tokens,
+                                         mode="decode", length=lengths,
+                                         caches=cache)
+            return logits[:, 0].argmax(-1).astype(jnp.int32), cache
+
+        self._prefill = jax.jit(prefill)
+        self._insert = jax.jit(insert, donate_argnums=(0,), static_argnums=(2,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+        self.last_tokens = jnp.zeros((B, 1), jnp.int32)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pad_len(self, n: int) -> int:
+        # SSM/hybrid prefill state would absorb pad-token garbage, so those
+        # families prefill at exact length (one compile per distinct length).
+        if self.cfg.family in ("ssm", "hybrid"):
+            return n
+        b = self.scfg.prefill_bucket
+        return min(-(-n // b) * b, self.scfg.max_len)
+
+    def _admit(self):
+        for slot in range(self.scfg.max_batch):
+            if self.active[slot] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = req.prompt[: self.scfg.max_len - req.max_new]
+            plen = len(prompt)
+            padded = self._pad_len(plen)
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, :plen] = prompt
+            extras = {}
+            if self.cfg.family == "audio":
+                fl = self.scfg.cross_len or 128
+                fr = req.frames if req.frames is not None else \
+                    np.zeros((fl, self.cfg.d_model), np.float32)
+                extras["frames"] = jnp.asarray(fr)[None]
+            if self.cfg.family == "vlm":
+                pa = req.patches if req.patches is not None else \
+                    np.zeros((self.cfg.num_patches, 1024), np.float32)
+                extras["patches"] = jnp.asarray(pa)[None]
+            greedy, one = self._prefill(self.params, jnp.asarray(toks), extras)
+            # note: prefill over the padded region also wrote cache entries
+            # past plen; lengths[slot]=plen masks them out of attention.
+            self.cache = self._insert(self.cache, one, slot)
+            extra_prefix = self.cfg.num_patches if self.cfg.family == "vlm" else 0
+            self.lengths = self.lengths.at[slot].set(plen + extra_prefix)
+            first_tok = int(jax.device_get(greedy)[0, plen - 1])
+            self.last_tokens = self.last_tokens.at[slot, 0].set(first_tok)
+            req.generated.append(first_tok)
+            self.tokens_generated += 1
+            self.active[slot] = True
+            self.slot_req[slot] = req
+
+    def _retire(self):
+        for slot in range(self.scfg.max_batch):
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            limit = (len(req.generated) >= req.max_new or
+                     int(jax.device_get(self.lengths)[slot]) >=
+                     self.scfg.max_len - 1)
+            eos = (self.scfg.eos_id >= 0 and req.generated and
+                   req.generated[-1] == self.scfg.eos_id)
+            if limit or eos:
+                req.done = True
+                self.active[slot] = False
+                self.slot_req[slot] = None
+
+    def step(self):
+        """One engine tick: admit waiting requests, decode all active slots."""
+        self._admit()
+        if not self.active.any():
+            return
+        t0 = time.perf_counter()
+        nxt, self.cache = self._decode(self.params, self.cache,
+                                       self.last_tokens, self.lengths)
+        nxt_host = np.asarray(jax.device_get(nxt))
+        self._t_decode += time.perf_counter() - t0
+        self.decode_steps += 1
+        mask = self.active.copy()
+        self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
+        self.last_tokens = jnp.where(jnp.asarray(mask)[:, None],
+                                     nxt[:, None], self.last_tokens)
+        for slot in np.nonzero(mask)[0]:
+            req = self.slot_req[slot]
+            req.generated.append(int(nxt_host[slot]))
+            self.tokens_generated += 1
+        self._retire()
+
+    def run_until_done(self, max_steps: int = 100_000):
+        for _ in range(max_steps):
+            if not self.queue and not self.active.any():
+                break
+            self.step()
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return self.tokens_generated / self._t_decode if self._t_decode else 0.0

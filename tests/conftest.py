@@ -1,0 +1,7 @@
+# NOTE: no XLA_FLAGS / device-count overrides here — smoke tests and benches
+# must see the real single CPU device.  Multi-device tests spawn subprocesses
+# with their own XLA_FLAGS (see tests/test_parallel.py).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

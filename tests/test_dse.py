@@ -1,0 +1,95 @@
+"""Analytical-model reproduction of the paper's own numbers (§4, §6)."""
+import numpy as np
+
+from repro.core import dse
+from repro.core.roofline import collective_wire_bytes
+
+
+def test_resource_model_paper_config():
+    """8x48 fits the A10-1150 (paper's final config); the next K_vec step
+    does not — the DSP constraint binds exactly as in the paper."""
+    cfg = dse.DLAConfig(c_vec=8, k_vec=48)
+    assert dse.fits_device(cfg)
+    assert dse.n_dsps(cfg) == 1352                # 2304/2 + 200
+    assert not dse.fits_device(dse.DLAConfig(c_vec=8, k_vec=56))
+
+
+def test_table2_per_layer_efficiency():
+    """Table 2 DSP efficiencies: conv5 exact, conv3/4 within 3%, FC ~100%."""
+    cfg = dse.DLAConfig(c_vec=8, k_vec=48)
+    r = dse.alexnet_throughput(cfg)
+    eff = {l["name"]: l["dsp_eff"] for l in r["layers"]}
+    paper = {"conv1": .829, "conv2": .625, "conv3": .724, "conv4": .724,
+             "conv5": .626, "fc6": .998, "fc7": .996, "fc8": .990}
+    assert abs(eff["conv5"] - paper["conv5"]) < 0.005      # exact
+    for name in ("conv3", "conv4"):
+        assert abs(eff[name] - paper[name]) < 0.03
+    for name in ("fc6", "fc7", "fc8"):
+        assert eff[name] > 0.97
+    # conv1 (fold detail) and conv2 (5x5 chunking) within 15%
+    for name in ("conv1", "conv2"):
+        assert abs(eff[name] - paper[name]) < 0.15
+
+
+def test_headline_throughput():
+    """1020 img/s measured system throughput; our model (with the paper's
+    measured 16% system overhead) lands within 15%."""
+    cfg = dse.DLAConfig(c_vec=8, k_vec=48)
+    r = dse.alexnet_throughput(cfg, system_overhead=0.16)
+    assert abs(r["img_per_s"] - 1020) / 1020 < 0.15, r["img_per_s"]
+
+
+def test_fig8_sweep_optimum():
+    """Paper: the 8x48 point is 'one of the peak throughput numbers'.
+    Our sweep must rank it within 2% of the global best."""
+    rows = dse.explore_fpga()
+    best = max(r["img_per_s"] for r in rows)
+    p848 = next(r for r in rows if r["c_vec"] == 8 and r["k_vec"] == 48)
+    assert p848["img_per_s"] > 0.98 * best
+    # infeasible points are zeroed (Fig 8's plateaus-and-holes)
+    assert any(r["img_per_s"] == 0 for r in rows)
+
+
+def test_fc_batching_curve():
+    """Eq. 6 crossover: at small batch FC layers are DDR-bound; at the
+    paper's S_batch=96 they are compute-bound (~99% efficiency)."""
+    lo = dse.fc_cycles(("fc6", 9216, 4096), dse.DLAConfig(s_batch=4))
+    hi = dse.fc_cycles(("fc6", 9216, 4096), dse.DLAConfig(s_batch=96))
+    assert lo["cycles"] / lo["ideal_cycles"] > 2.0      # bandwidth-bound
+    assert hi["cycles"] / hi["ideal_cycles"] < 1.05     # compute-bound
+
+
+def test_tpu_decode_batch_curve_saturates():
+    """Same crossover on TPU decode (the paper's FC insight, ported):
+    tokens/s/batch falls once compute catches up to weight streaming."""
+    inp = dse.TPUModelInput(n_active=3e9, n_total=3e9, seq_len=32768,
+                            global_batch=1, kind="decode", d_model=3072,
+                            num_layers=28, cache_bytes_per_token=1e4)
+    rows = dse.decode_batch_curve(inp, data=16, model=16)
+    tps = [r["throughput_tokens_s"] for r in rows]
+    assert tps[-1] > tps[0] * 4          # batching pays
+    gain_early = tps[1] / tps[0]
+    gain_late = tps[-1] / tps[-2]
+    assert gain_early > gain_late        # diminishing returns (saturation)
+
+
+def test_collective_parser():
+    hlo = """
+HloModule test
+%body.1 (p: f32[128,256]) -> f32[128,256] {
+  %ag = f32[128,256] all-gather(f32[8,256] %x), replica_groups=[16,16]<=[256], dimensions={0}
+  ROOT %ar = f32[128,256] all-reduce(%ag), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+ENTRY %main (p0: f32[128,256]) -> f32[128,256] {
+  %w = f32[128,256] while(%p0), body=%body.1, condition=%cond.1
+  %cp = f32[64,64] collective-permute(%y), source_target_pairs={{0,1}}
+}
+"""
+    c1 = collective_wire_bytes(hlo, loop_trip_count=1)
+    c10 = collective_wire_bytes(hlo, loop_trip_count=10)
+    assert c1["count"] == 3
+    assert c10["all-gather"] == 10 * c1["all-gather"]
+    assert c10["all-reduce"] == 10 * c1["all-reduce"]
+    assert c10["collective-permute"] == c1["collective-permute"]  # not in loop
+    ag_bytes = 128 * 256 * 4
+    assert abs(c1["all-gather"] - ag_bytes * 15 / 16) < 1

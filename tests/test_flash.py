@@ -1,0 +1,113 @@
+"""Blockwise attention: forward + custom-VJP backward vs dense reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.flash import decode_attention, flash_attention
+
+
+def dense_ref(q, k, v, causal, q_offset=0, kv_valid_len=None):
+    B, Sq, H, D = q.shape
+    _, Skv, KV, _ = k.shape
+    g = H // KV
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q * (D ** -0.5), kr)
+    kpos = jnp.arange(Skv)
+    qpos = q_offset + jnp.arange(Sq)
+    m = jnp.ones((Sq, Skv), bool)
+    if causal:
+        m = m & (qpos[:, None] >= kpos[None, :])
+    if kv_valid_len is not None:
+        m = m & (kpos[None, :] < kv_valid_len)
+    s = jnp.where(m[None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+
+
+@pytest.mark.parametrize("B,Sq,H,KV,D,causal", [
+    (2, 64, 6, 2, 16, True), (2, 50, 4, 4, 8, True),
+    (1, 37, 3, 1, 8, False), (2, 128, 8, 2, 32, True),
+    (1, 17, 15, 5, 8, True)])
+def test_flash_fwd_bwd(B, Sq, H, KV, D, causal):
+    rng = np.random.default_rng(Sq)
+    q = jnp.asarray(rng.standard_normal((B, Sq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Sq, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Sq, KV, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, q_chunk=16, k_chunk=32)
+    ref = dense_ref(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    f = lambda q, k, v: (flash_attention(q, k, v, causal=causal, q_chunk=16,
+                                         k_chunk=32) * jnp.cos(q)).sum()
+    r = lambda q, k, v: (dense_ref(q, k, v, causal) * jnp.cos(q)).sum()
+    gf = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(r, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_flash_kv_valid_len():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 8, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 32, 2, 8)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, kv_valid_len=20,
+                          q_chunk=4, k_chunk=8)
+    ref = dense_ref(q, k, v, False, kv_valid_len=20)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_q_offset_matches_suffix():
+    """Prefill continuation: q at offset T against a longer k/v."""
+    rng = np.random.default_rng(1)
+    Sfull, T = 48, 32
+    q = jnp.asarray(rng.standard_normal((1, Sfull, 4, 8)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, Sfull, 2, 8)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, Sfull, 2, 8)), jnp.float32)
+    full = flash_attention(q, k, v, causal=True, q_chunk=8, k_chunk=16)
+    tail = flash_attention(q[:, T:], k, v, causal=True, q_offset=T,
+                           q_chunk=8, k_chunk=16)
+    np.testing.assert_allclose(np.asarray(tail), np.asarray(full[:, T:]),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,KV,D,c", [
+    (2, 64, 4, 2, 16, 16), (1, 50, 6, 3, 8, 16), (2, 128, 8, 8, 32, 32)])
+def test_flash_banded_matches_dense(B, S, H, KV, D, c):
+    """Lower-triangle-only chunk schedule == dense causal attention
+    (fwd + all three gradients)."""
+    rng = np.random.default_rng(S)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_chunk=c, banded=True)
+    ref = dense_ref(q, k, v, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+    fb = lambda q, k, v: (flash_attention(q, k, v, causal=True, q_chunk=c,
+                                          banded=True) * jnp.cos(q)).sum()
+    fr = lambda q, k, v: (dense_ref(q, k, v, True) * jnp.cos(q)).sum()
+    gb = jax.grad(fb, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gb, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_decode_attention_vector_lengths():
+    rng = np.random.default_rng(2)
+    B, S, H, KV, D = 3, 24, 4, 2, 8
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), jnp.float32)
+    lengths = jnp.asarray([5, 24, 13], jnp.int32)
+    out = decode_attention(q, k, v, lengths)
+    for b in range(B):
+        ref = dense_ref(q[b:b + 1], k[b:b + 1], v[b:b + 1], False,
+                        kv_valid_len=int(lengths[b]))
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)

