@@ -27,7 +27,8 @@ def rows():
                             f";shape=4x2048x512xk4")})
 
     # winograd 2d (alexnet conv3)
-    from repro.core.winograd import conv2d_direct, conv2d_winograd
+    from repro.core.winograd import (conv2d_direct, conv2d_hbm_bytes,
+                                     conv2d_winograd)
     x2 = jnp.asarray(rng.standard_normal((8, 13, 13, 256)), jnp.float32)
     w2 = jnp.asarray(rng.standard_normal((3, 3, 256, 384)) * .05, jnp.float32)
     t_d = time_us(jax.jit(lambda a, b: conv2d_direct(a, b)), x2, w2)
@@ -35,6 +36,19 @@ def rows():
     out.append({"name": "kernels/wino2d_f43_conv3",
                 "us_per_call": t_w,
                 "derived": f"direct_us={t_d:.0f};speedup={t_d/t_w:.2f}x"})
+
+    # modeled HBM feature-map traffic, host-tiled vs stream-buffered
+    # in-kernel tiling (paper §3.5's bandwidth argument, roofline units);
+    # conv3 (13x13x256->384) and a large-C VGG-ish layer for contrast
+    for name, (H, C, K) in (("conv3_13x13x256", (13, 256, 384)),
+                            ("vgg_56x56x256", (56, 256, 256))):
+        hb = conv2d_hbm_bytes(8, H, H, C, K, 3, 4)
+        out.append({"name": f"kernels/wino2d_hbm_{name}",
+                    "us_per_call": 0.0,
+                    "derived": (f"host_tiled_MB={hb['host_tiled_bytes']/2**20:.1f}"
+                                f";stream_MB={hb['stream_bytes']/2**20:.1f}"
+                                f";tile_inflation={hb['tile_inflation']:.2f}x"
+                                f";hbm_savings={hb['savings']:.2f}x")})
 
     # bfp matmul (decode weight-streaming shape)
     from repro.core.bfp import bfp_matmul

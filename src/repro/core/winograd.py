@@ -24,9 +24,11 @@ n = m+r-1 Winograd-domain multiplies, e.g. F(4,3): 12 -> 6 (the paper's 2x).
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from functools import lru_cache
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -135,15 +137,8 @@ def _tiles_2d(x, m: int, n: int):
     return xt.transpose(0, 1, 3, 2, 4, 5)       # (B, th, tw, n, n, C)
 
 
-def conv2d_winograd(x, w, *, m: int = 4, padding: str = "SAME"):
-    """2D stride-1 convolution via F(m, r)xF(m, r).
-
-    x (B,H,W,C); w (r,r,C,K).  The Winograd-domain multiply is expressed as
-    n^2 independent (tiles x C) @ (C x K) matmuls (Lavin) — on TPU these are
-    MXU-shaped GEMMs, the faithful analogue of the paper's PE dot products.
-    """
+def _conv2d_winograd_single(x, w, b, *, m: int, padding: str, relu: bool):
     r = w.shape[0]
-    assert w.shape[0] == w.shape[1], "square filters only"
     t = winograd_transform(m, r)
     B, H, W, C = x.shape
     K = w.shape[-1]
@@ -168,16 +163,93 @@ def conv2d_winograd(x, w, *, m: int = 4, padding: str = "SAME"):
     Yw = jnp.einsum("bhwijc,ijck->bhwijk", U, V)   # n^2 batched GEMMs
     Y = jnp.einsum("pi,bhwijk,qj->bhwpqk", ATj, Yw, ATj)
     y = Y.transpose(0, 1, 3, 2, 4, 5).reshape(B, th * t.m, tw * t.m, K)
-    return y[:, :out_h, :out_w].astype(x.dtype)
+    y = y[:, :out_h, :out_w]
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
+                    relu: bool = False, groups: int = 1):
+    """2D stride-1 convolution via F(m, r)xF(m, r), fused epilogue.
+
+    x (B,H,W,C); w (r,r,C//groups,K).  The Winograd-domain multiply is
+    expressed as n^2 independent (tiles x C) @ (C x K) matmuls (Lavin) — on
+    TPU these are MXU-shaped GEMMs, the faithful analogue of the paper's PE
+    dot products.  Signature mirrors the Pallas kernel
+    (``repro.kernels.winograd.conv2d_winograd``): optional bias ``b (K,)``,
+    fused ``relu``, and ``groups`` as a batched vmap (no Python loop), so the
+    two routes stay numerically interchangeable.
+    """
+    assert w.shape[0] == w.shape[1], "square filters only"
+    if groups == 1:
+        return _conv2d_winograd_single(x, w, b, m=m, padding=padding,
+                                       relu=relu)
+    g = groups
+    r = w.shape[0]
+    B, H, W, Ct = x.shape
+    K = w.shape[-1] // g
+    C = Ct // g
+    xg = jnp.moveaxis(x.reshape(B, H, W, g, C), 3, 0)       # (g,B,H,W,C)
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g,r,r,C,K)
+    bg = None if b is None else b.reshape(g, K)
+    f = functools.partial(_conv2d_winograd_single, m=m, padding=padding,
+                          relu=relu)
+    yg = jax.vmap(f, in_axes=(0, 0, None if bg is None else 0))(xg, wg, bg)
+    return jnp.moveaxis(yg, 0, 3).reshape(B, *yg.shape[2:4], g * K)
 
 
 def conv2d_direct(x, w, *, stride: int = 1, padding: str = "SAME"):
     """lax direct conv (oracle / non-Winograd layers like AlexNet conv1)."""
-    import jax
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
         window_strides=(stride, stride), padding=padding,
         dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+
+
+def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
+                     m: int, *, dtype_bytes: int = 4, c_block: int = 128,
+                     k_block: int = 128, row_block: int = 8,
+                     padding: str = "SAME") -> dict:
+    """Modeled HBM feature-map traffic: host-tiled vs stream-buffered.
+
+    Host-tiled path (pre-refactor): the overlapping-tile tensor
+    (B, th, tw, n, n, C) is materialized in HBM by an XLA gather — written
+    once, then read once by the kernel — on top of the raw feature-map read,
+    an ~(n/m)^2 inflation of the dominant traffic term (paper §3.5's point).
+
+    Stream-buffered path (in-kernel tiling): only the raw (halo-padded,
+    channel-padded to a c_block multiple) slab is read, re-fetched once per
+    (k_block, row_block) revisit because the channel-block reduction is the
+    innermost grid dimension.  Weights and outputs move identically on both
+    paths and are excluded.
+    """
+    t = winograd_transform(m, r)
+    out_h, out_w = (H, W) if padding == "SAME" else (H - r + 1, W - r + 1)
+    th, tw = -(-out_h // t.m), -(-out_w // t.m)
+    raw = B * H * W * C * dtype_bytes
+    tile_tensor = B * th * tw * t.n * t.n * C * dtype_bytes
+    host_tiled = raw + 2 * tile_tensor          # read raw + write/read tiles
+    Rb = min(row_block, th)
+    Hp = -(-th // Rb) * Rb * t.m + r - 1
+    Wp = tw * t.m + r - 1
+    Cb = min(c_block, C)
+    nc = -(-C // Cb)
+    Cp = nc * Cb                                # kernel pads C to c_block
+    # single channel block: the slab block index is constant across the
+    # (row, k) revisits, so Pallas elides the repeated DMA — one fetch per
+    # batch element.  Multiple c blocks: the innermost c dim changes the
+    # block index every step, so every (row, k) revisit re-streams C.
+    refetch = 1 if nc == 1 else -(-K // k_block) * (-(-th // Rb))
+    stream = B * Hp * Wp * Cp * dtype_bytes * refetch
+    return {
+        "host_tiled_bytes": host_tiled,
+        "stream_bytes": stream,
+        "tile_inflation": tile_tensor / raw,
+        "savings": host_tiled / stream,
+    }
 
 
 def conv_flops(h_out: int, w_out: int, c: int, k: int, r: int,

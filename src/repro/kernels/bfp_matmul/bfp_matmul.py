@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+
 from ...core import bfp
 
 
@@ -88,9 +90,7 @@ def bfp_matmul_pallas(x, wm, we, *, block: int = 32, bits: int = 8,
         ],
         out_specs=pl.BlockSpec((Mb, Nb), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL),
         interpret=interpret,
     )(x, wm, we)
     return out[:M, :N]

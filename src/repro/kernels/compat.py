@@ -1,0 +1,26 @@
+"""Version compatibility shims for Pallas TPU APIs.
+
+The Pallas TPU compiler-params API was renamed across JAX releases
+(``TPUCompilerParams`` with string dimension semantics -> ``CompilerParams``
+with a ``GridDimensionSemantics`` enum).  Kernels call
+:func:`tpu_compiler_params` with ``"parallel"`` / ``"arbitrary"`` strings and
+this module translates to whatever the installed JAX expects.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+PARALLEL = "parallel"
+ARBITRARY = "arbitrary"
+
+
+def tpu_compiler_params(*dimension_semantics: str):
+    """Build compiler params with per-grid-dim semantics for any JAX version."""
+    if hasattr(pltpu, "TPUCompilerParams"):
+        return pltpu.TPUCompilerParams(
+            dimension_semantics=tuple(dimension_semantics))
+    sem = []
+    for s in dimension_semantics:
+        enum = getattr(pltpu, "GridDimensionSemantics", None)
+        sem.append(getattr(enum, s.upper()) if enum is not None else s)
+    return pltpu.CompilerParams(dimension_semantics=tuple(sem))

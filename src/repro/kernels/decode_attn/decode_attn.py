@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -86,10 +88,7 @@ def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
         scratch_shapes=[pltpu.VMEM((G,), jnp.float32),
                         pltpu.VMEM((G,), jnp.float32),
                         pltpu.VMEM((G, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY),
         interpret=interpret,
     )(lengths.astype(jnp.int32), qg, k_cache, v_cache)
     return out.reshape(B, 1, H, D)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref,
                 state_scratch, *, nc: int):
@@ -106,10 +108,7 @@ def ssd_chunked_pallas(x, dt, A, B_, C_, *, chunk: int = 256,
             jax.ShapeDtypeStruct((Bb, H, N, P), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.ARBITRARY)),
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY),
         interpret=interpret,
     )(xr, dtr, A.astype(jnp.float32), br, cr)
 

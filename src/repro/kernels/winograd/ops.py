@@ -67,9 +67,18 @@ def conv1d_depthwise_causal(x, w, b=None, *, pallas: bool = True,
 # ---------------------------------------------------------------------------
 # 2D conv (inference path; training uses the differentiable jnp route)
 # ---------------------------------------------------------------------------
-def conv2d(x, w, *, m: int = 4, padding: str = "SAME", pallas: bool = True,
+def conv2d(x, w, b=None, *, m: int = 4, padding: str = "SAME",
+           relu: bool = False, groups: int = 1, pallas: bool = True,
            interpret: bool | None = None):
+    """Fused stride-1 Winograd conv: optional bias, fused ReLU, groups.
+
+    Both routes share one signature so they stay numerically
+    interchangeable: ``pallas=True`` runs the stream-buffered Pallas kernel
+    (in-kernel tiling + channel-block reduction), ``pallas=False`` the
+    differentiable pure-jnp Winograd path.
+    """
     if pallas:
-        return _k.conv2d_winograd(x, w, m=m, padding=padding,
-                                  interpret=_interp(interpret))
-    return wg.conv2d_winograd(x, w, m=m, padding=padding)
+        return _k.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
+                                  groups=groups, interpret=_interp(interpret))
+    return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
+                              groups=groups)

@@ -16,9 +16,21 @@ def conv1d_depthwise_causal_ref(x, w, b=None):
     return y
 
 
-def conv2d_ref(x, w, *, stride: int = 1, padding: str = "SAME"):
-    """lax direct conv; x (B,H,W,C), w (r,r,C,K)."""
-    return jax.lax.conv_general_dilated(
+def conv2d_ref(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
+               groups: int = 1, relu: bool = False):
+    """lax direct conv with the fused-pipeline signature.
+
+    x (B,H,W,C), w (r,r,C//groups,K); optional bias (K,), fused ReLU, and
+    grouped convolution via ``feature_group_count`` — the oracle for every
+    route of ``repro.nn.conv.dispatch_conv``.
+    """
+    y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
         window_strides=(stride, stride), padding=padding,
-        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

@@ -1,15 +1,27 @@
-"""Pallas TPU kernels for Winograd-domain convolution (paper §3.3).
+"""Pallas TPU kernels for Winograd-domain convolution (paper §3.3 + §3.5).
 
-Hardware adaptation (DESIGN.md): the paper's PEs do scalar Winograd-domain
-dot products on DSP blocks; on TPU the Winograd-domain multiply must feed the
-MXU, so we use the Lavin formulation — the 2D kernel turns each of the n^2
-transform positions into an independent (tiles x C) @ (C x K) GEMM, and the
-1D depthwise kernel maps channels onto VPU lanes.  Tiles are extracted
-host-side (XLA gather); the kernel owns transforms + multiply + inverse
-transform so the Winograd-domain tensor U never round-trips HBM.
+Hardware adaptation (docs/DESIGN.md): the paper's PEs do scalar Winograd-
+domain dot products on DSP blocks; on TPU the Winograd-domain multiply must
+feed the MXU, so we use the Lavin formulation — each of the n^2 transform
+positions becomes an independent (tiles x C) @ (C x K) GEMM.
 
-VMEM budget per grid step (2D): Tb*n^2*C*4 + n^2*C*Kb*4 + Tb*n^2*Kb*4 bytes —
-Tb/Kb defaults keep this < 16 MB for AlexNet-sized C.
+Stream-buffered dataflow (paper §3.5): the kernels read *raw* feature-map
+slabs from HBM — no host-side tile gather, so the ~(n/m)^2-inflated
+overlapping-tile tensor never materializes in HBM.  The Pallas grid
+pipeline's double-buffered HBM->VMEM DMA plays the role of the DLA's stream
+buffer; overlapping n x n tiles are built *in VMEM* from strided slices of
+the slab.  A `c_block` grid dimension streams channel blocks with in-kernel
+accumulation into a VMEM scratch (the PE "daisy-chained" partial sums), so
+large-C layers never need all of C resident at once.  Bias + ReLU fuse into
+the kernel epilogue (the DLA's post-PE activation stage) behind a flag.
+
+Grouped convolution folds groups into the batch grid dimension — the weight
+BlockSpec picks the group as `bb // B` — so conv2/4/5 of AlexNet run as one
+kernel launch with no host loop or concatenate.
+
+VMEM budget per grid step (2D): slab Hp*Wp*Cb + filters n^2*Cb*Kb + tiles
+Rb*tw*n^2*Cb + acc n^2*Rb*tw*Kb floats; defaults keep this < 16 MB for
+AlexNet-sized layers.
 """
 from __future__ import annotations
 
@@ -21,96 +33,164 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.winograd import winograd_transform
+from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
 
 
 # ---------------------------------------------------------------------------
 # 1D depthwise causal (Mamba conv, k=4 -> F(3,4))
 # ---------------------------------------------------------------------------
-def _dw1d_kernel(tiles_ref, w_ref, bt_ref, g_ref, at_ref, out_ref):
-    tiles = tiles_ref[0].astype(jnp.float32)        # (Tb, n, Cb)
+def _dw1d_kernel(x_ref, w_ref, b_ref, bt_ref, g_ref, at_ref, out_ref):
+    mm, n = at_ref.shape
+    Tb = out_ref.shape[1] // mm
+    jb = pl.program_id(1)
+    # raw slab -> overlapping tiles in VMEM (stride-m strided slices)
+    seg = x_ref[0, pl.ds(jb * Tb * mm, Tb * mm + n - mm)]  # (Tb*m + r - 1, Cb)
+    Cb = seg.shape[-1]
+    tiles = jnp.stack(
+        [jax.lax.slice(seg, (di, 0), (di + (Tb - 1) * mm + 1, Cb), (mm, 1))
+         for di in range(n)], axis=0).astype(jnp.float32)   # (n, Tb, Cb)
     w = w_ref[...].astype(jnp.float32)              # (r, Cb)
     BT = bt_ref[...]                                # (n, n)
     G = g_ref[...]                                  # (n, r)
     AT = at_ref[...]                                # (m, n)
-    u = jnp.einsum("tn,jnc->jtc", BT, tiles)        # input transform
+    u = jnp.einsum("tn,njc->tjc", BT, tiles)        # input transform
     v = jnp.einsum("tr,rc->tc", G, w)               # filter transform
-    y = jnp.einsum("mt,jtc->jmc", AT, u * v[None])  # winograd mult + inverse
+    y = jnp.einsum("mt,tjc->jmc", AT, u * v[:, None])  # mult + inverse
+    y = y.reshape(Tb * mm, Cb) + b_ref[0]
     out_ref[0] = y.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "tile_block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("m", "tile_block", "c_block",
+                                             "interpret"))
 def conv1d_depthwise_causal(x, w, b=None, *, m: int | None = None,
-                            tile_block: int = 128, interpret: bool = True):
-    """x (B,L,C); w (r,C); left-padded causal depthwise conv via F(m,r)."""
+                            tile_block: int = 128, c_block: int = 128,
+                            interpret: bool = True):
+    """x (B,L,C); w (r,C); left-padded causal depthwise conv via F(m,r).
+
+    The kernel reads the raw padded sequence; overlapping n-tiles are built
+    in VMEM (no host-side ``jnp.take`` tile materialization).  Stream-buffer
+    residency: one (Lp, c_block) sequence slab stays in VMEM — ``c_block``
+    bounds the footprint (Lp * c_block * 4 B must fit; e.g. L=8k, Cb=128
+    -> ~4 MB).  Shrink ``c_block`` for very long sequences.
+    """
     r = w.shape[0]
     m = m or {3: 4, 4: 3}.get(r, 2)
     t = winograd_transform(m, r)
     B, L, C = x.shape
     nt = -(-L // t.m)
-    # host-side tile extraction (overlap r-1); kernel owns the transforms
-    xp = jnp.pad(x, ((0, 0), (r - 1, nt * t.m - L + (t.n - t.m) - (r - 1)),
-                     (0, 0)))
-    idx = (jnp.arange(nt) * t.m)[:, None] + jnp.arange(t.n)[None, :]
-    tiles = jnp.take(xp, idx, axis=1)               # (B, nt, n, C)
-
     Tb = min(tile_block, nt)
-    padt = (-nt) % Tb
-    if padt:
-        tiles = jnp.pad(tiles, ((0, 0), (0, padt), (0, 0), (0, 0)))
-    ntp = nt + padt
+    ntp = -(-nt // Tb) * Tb
+    # left halo r-1; right pad so every tile block has a full slab
+    xp = jnp.pad(x, ((0, 0), (r - 1, ntp * t.m - L + (t.n - t.m) - (r - 1)),
+                     (0, 0)))
+    Cb = min(c_block, C)
+    padc = (-C) % Cb
+    if padc:
+        xp = jnp.pad(xp, ((0, 0), (0, 0), (0, padc)))
+        w = jnp.pad(w, ((0, 0), (0, padc)))
+    Cp = C + padc
+    bias = jnp.zeros((Cp,), x.dtype) if b is None else (
+        jnp.pad(b, (0, padc)) if padc else b)
+    Lp = xp.shape[1]
 
     out = pl.pallas_call(
         _dw1d_kernel,
-        grid=(B, ntp // Tb),
+        grid=(B, ntp // Tb, Cp // Cb),
         in_specs=[
-            pl.BlockSpec((1, Tb, t.n, C), lambda b, j: (b, j, 0, 0)),
-            pl.BlockSpec((r, C), lambda b, j: (0, 0)),
-            pl.BlockSpec((t.n, t.n), lambda b, j: (0, 0)),
-            pl.BlockSpec((t.n, r), lambda b, j: (0, 0)),
-            pl.BlockSpec((t.m, t.n), lambda b, j: (0, 0)),
+            pl.BlockSpec((1, Lp, Cb), lambda bb, j, c: (bb, 0, c)),
+            pl.BlockSpec((r, Cb), lambda bb, j, c: (0, c)),
+            pl.BlockSpec((1, Cb), lambda bb, j, c: (0, c)),
+            pl.BlockSpec((t.n, t.n), lambda bb, j, c: (0, 0)),
+            pl.BlockSpec((t.n, r), lambda bb, j, c: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda bb, j, c: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Tb, t.m, C), lambda b, j: (b, j, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, ntp, t.m, C), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        out_specs=pl.BlockSpec((1, Tb * t.m, Cb), lambda bb, j, c: (bb, j, c)),
+        out_shape=jax.ShapeDtypeStruct((B, ntp * t.m, Cp), x.dtype),
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, PARALLEL),
         interpret=interpret,
-    )(tiles, w, jnp.asarray(t.BT, jnp.float32), jnp.asarray(t.G, jnp.float32),
-      jnp.asarray(t.AT, jnp.float32))
+    )(xp, w, bias.reshape(1, Cp), jnp.asarray(t.BT, jnp.float32),
+      jnp.asarray(t.G, jnp.float32), jnp.asarray(t.AT, jnp.float32))
 
-    y = out.reshape(B, ntp * t.m, C)[:, :L]
-    if b is not None:
-        y = y + b.astype(y.dtype)
-    return y
+    return out[:, :L, :C]
 
 
 # ---------------------------------------------------------------------------
 # 2D conv (AlexNet 3x3 -> F(4,3) x F(4,3))
 # ---------------------------------------------------------------------------
-def _conv2d_kernel(tiles_ref, wt_ref, bt_ref, at_ref, out_ref):
-    d = tiles_ref[...].astype(jnp.float32)          # (Tb, n, n, C)
-    v = wt_ref[...].astype(jnp.float32)             # (n, n, C, Kb)
+def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
+                   relu: bool):
+    mm, n = at_ref.shape
+    Rb = out_ref.shape[1] // mm
+    tw = out_ref.shape[2] // mm
+    ib = pl.program_id(1)
+    c = pl.program_id(3)
+    nc = pl.num_programs(3)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # raw slab rows for this tile-row block (halo overlap r-1 stays in VMEM)
+    rows = x_ref[0, pl.ds(ib * Rb * mm, Rb * mm + n - mm)]  # (rows, Wp, Cb)
+    Cb = rows.shape[-1]
+    # overlapping n x n tiles via n^2 strided slices: plane (di, dj) holds
+    # element (di, dj) of every tile -> (n, n, Rb, tw, Cb)
+    tiles = jnp.stack(
+        [jnp.stack(
+            [jax.lax.slice(rows, (di, dj, 0),
+                           (di + (Rb - 1) * mm + 1, dj + (tw - 1) * mm + 1,
+                            Cb), (mm, mm, 1))
+             for dj in range(n)], axis=0)
+         for di in range(n)], axis=0).astype(jnp.float32)
     BT = bt_ref[...]
-    AT = at_ref[...]
-    u = jnp.einsum("in,tnmc->timc", BT, d)
-    u = jnp.einsum("timc,jm->tijc", u, BT)          # (Tb, n, n, C)
-    # n^2 batched GEMMs on the MXU: (Tb, C) @ (C, Kb) per (i, j)
-    yw = jnp.einsum("tijc,ijck->tijk", u, v)
-    y = jnp.einsum("pi,tijk->tpjk", AT, yw)
-    y = jnp.einsum("tpjk,qj->tpqk", y, AT)          # (Tb, m, m, Kb)
-    out_ref[...] = y.astype(out_ref.dtype)
+    v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
+    u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
+    # n^2 batched GEMMs on the MXU: (Rb*tw, Cb) @ (Cb, Kb) per (i, j);
+    # accumulated over channel blocks in VMEM scratch (PE partial sums)
+    acc_ref[...] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
+
+    @pl.when(c == nc - 1)
+    def _epilogue():
+        AT = at_ref[...]
+        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[...])
+        y = jnp.einsum("qj,pjrwk->rpwqk", AT, y)    # (Rb, m, tw, m, Kb)
+        y = y.reshape(Rb * mm, tw * mm, -1) + b_ref[0]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        out_ref[0] = y.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "padding", "tile_block",
-                                             "k_block", "interpret"))
-def conv2d_winograd(x, w, *, m: int = 4, padding: str = "SAME",
-                    tile_block: int = 128, k_block: int = 128,
+@functools.partial(jax.jit, static_argnames=("m", "padding", "relu", "groups",
+                                             "row_block", "c_block", "k_block",
+                                             "interpret"))
+def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
+                    relu: bool = False, groups: int = 1, row_block: int = 8,
+                    c_block: int = 128, k_block: int = 128,
                     interpret: bool = True):
-    """x (B,H,W,C); w (r,r,C,K); stride-1 conv via F(m,r) x F(m,r)."""
+    """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
+
+    Fused pipeline: raw (halo-padded) feature map slabs stream HBM->VMEM via
+    the grid pipeline; tiles, transforms, Winograd GEMMs, channel-block
+    accumulation, and the bias+ReLU epilogue all happen in-kernel.  Groups
+    fold into the batch grid dimension (weight block picked by ``bb // B``).
+
+    Stream-buffer residency (paper §3.5): like the DLA — whose stream
+    buffers hold whole AlexNet feature-map planes in M20K — one full
+    (Hp, Wp, c_block) image plane is VMEM-resident per step; ``c_block``
+    bounds the channel footprint (large C never fully resident), while the
+    spatial plane must fit (13x13..56x56-class layers do; ~224x224 at
+    c_block=128 would not — shrink ``c_block`` there).  ``row_block`` tiles
+    the *compute* (tiles/scratch), not input residency; smaller row_block
+    trades VMEM scratch for slab re-fetches (see ``conv2d_hbm_bytes``).
+    """
     r = w.shape[0]
     t = winograd_transform(m, r)
-    B, H, W, C = x.shape
-    K = w.shape[-1]
+    B, H, W, Ct = x.shape
+    Kt = w.shape[-1]
+    g = groups
+    assert Ct % g == 0 and Kt % g == 0 and w.shape[2] == Ct // g, (
+        "grouped conv shape mismatch")
+    C, K = Ct // g, Kt // g
     if padding == "SAME":
         ph = r // 2
         out_h, out_w = H, W
@@ -118,46 +198,58 @@ def conv2d_winograd(x, w, *, m: int = 4, padding: str = "SAME",
         ph = 0
         out_h, out_w = H - r + 1, W - r + 1
     th, tw = -(-out_h // t.m), -(-out_w // t.m)
-    xp = jnp.pad(x, ((0, 0), (ph, th * t.m + r - 1 - H - ph),
-                     (ph, tw * t.m + r - 1 - W - ph), (0, 0)))
-    ih = (jnp.arange(th) * t.m)[:, None] + jnp.arange(t.n)[None, :]
-    iw = (jnp.arange(tw) * t.m)[:, None] + jnp.arange(t.n)[None, :]
-    tiles = jnp.take(xp, ih, axis=1)
-    tiles = jnp.take(tiles, iw, axis=3)             # (B,th,n,tw,n,C)
-    tiles = tiles.transpose(0, 1, 3, 2, 4, 5).reshape(B * th * tw, t.n, t.n, C)
+    Rb = min(row_block, th)
+    thp = -(-th // Rb) * Rb
+    Hp = thp * t.m + r - 1
+    Wp = tw * t.m + r - 1
 
-    # filter transform host-side (tiny): V = G w G^T
+    # groups -> leading (batch) axis; raw zero-pad only, no tile gather
+    xg = jnp.moveaxis(x.reshape(B, H, W, g, C), 3, 0).reshape(g * B, H, W, C)
+    xg = jnp.pad(xg, ((0, 0), (ph, Hp - H - ph), (ph, Wp - W - ph), (0, 0)))
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+
+    # filter transform host-side (tiny): V = G w G^T per group
     Gj = jnp.asarray(t.G, jnp.float32)
-    wt = jnp.einsum("in,nmck,jm->ijck", Gj, w.astype(jnp.float32), Gj)
+    wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
 
-    T = tiles.shape[0]
-    Tb = min(tile_block, T)
-    padt = (-T) % Tb
-    if padt:
-        tiles = jnp.pad(tiles, ((0, padt), (0, 0), (0, 0), (0, 0)))
+    Cb = min(c_block, C)
+    padc = (-C) % Cb
+    if padc:
+        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, 0), (0, padc)))
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padc), (0, 0)))
     Kb = min(k_block, K)
     padk = (-K) % Kb
     if padk:
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padk)))
-    Tp, Kp = T + padt, K + padk
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, 0), (0, padk)))
+    Cp, Kp = C + padc, K + padk
+    bias = jnp.zeros((Kt,), x.dtype) if b is None else b
+    bg = bias.reshape(g, K)
+    if padk:
+        bg = jnp.pad(bg, ((0, 0), (0, padk)))
 
+    kernel = functools.partial(_conv2d_kernel, relu=relu)
     out = pl.pallas_call(
-        _conv2d_kernel,
-        grid=(Tp // Tb, Kp // Kb),
+        kernel,
+        grid=(g * B, thp // Rb, Kp // Kb, Cp // Cb),
         in_specs=[
-            pl.BlockSpec((Tb, t.n, t.n, C), lambda i, j: (i, 0, 0, 0)),
-            pl.BlockSpec((t.n, t.n, C, Kb), lambda i, j: (0, 0, 0, j)),
-            pl.BlockSpec((t.n, t.n), lambda i, j: (0, 0)),
-            pl.BlockSpec((t.m, t.n), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, Hp, Wp, Cb),
+                         lambda bb, i, k, c: (bb, 0, 0, c)),
+            pl.BlockSpec((1, t.n, t.n, Cb, Kb),
+                         lambda bb, i, k, c: (bb // B, 0, 0, c, k)),
+            pl.BlockSpec((1, Kb), lambda bb, i, k, c: (bb // B, k)),
+            pl.BlockSpec((t.n, t.n), lambda bb, i, k, c: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda bb, i, k, c: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((Tb, t.m, t.m, Kb), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((Tp, t.m, t.m, Kp), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=(pltpu.GridDimensionSemantics.PARALLEL,
-                                 pltpu.GridDimensionSemantics.PARALLEL)),
+        out_specs=pl.BlockSpec((1, Rb * t.m, tw * t.m, Kb),
+                               lambda bb, i, k, c: (bb, i, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((g * B, thp * t.m, tw * t.m, Kp),
+                                       x.dtype),
+        scratch_shapes=[pltpu.VMEM((t.n, t.n, Rb, tw, Kb), jnp.float32)],
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, PARALLEL,
+                                            ARBITRARY),
         interpret=interpret,
-    )(tiles, wt, jnp.asarray(t.BT, jnp.float32), jnp.asarray(t.AT, jnp.float32))
+    )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
+      jnp.asarray(t.AT, jnp.float32))
 
-    y = out[:T, :, :, :K].reshape(B, th, tw, t.m, t.m, K)
-    y = y.transpose(0, 1, 3, 2, 4, 5).reshape(B, th * t.m, tw * t.m, K)
-    return y[:, :out_h, :out_w]
+    y = out[:, :out_h, :out_w, :K].reshape(g, B, out_h, out_w, K)
+    return y.transpose(1, 2, 3, 0, 4).reshape(B, out_h, out_w, g * K)

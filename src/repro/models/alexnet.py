@@ -13,7 +13,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from ..core.winograd import conv2d_direct, conv2d_winograd
+from ..nn.conv import ConvSpec, dispatch_conv
 from ..nn.module import param, split
 
 
@@ -40,14 +40,24 @@ class AlexNetConfig:
                        fc_dims=(64, 48, 10), num_classes=10, fc_batch=4)
 
 
-# (kernel, stride, pad, groups, lrn?, pool?) per conv layer — Krizhevsky
+# (ConvSpec, lrn?, pool?) per conv layer — Krizhevsky geometry; every conv
+# fuses bias+ReLU and routes through repro.nn.conv.dispatch_conv (the 3x3
+# stride-1 layers are Winograd-eligible; conv1/conv2 go direct, as in the
+# paper).
 _LAYERS = [
-    (11, 4, "VALID", 1, True, True),
-    (5, 1, "SAME", 2, True, True),
-    (3, 1, "SAME", 1, False, False),
-    (3, 1, "SAME", 2, False, False),
-    (3, 1, "SAME", 2, False, True),
+    (ConvSpec(kernel=11, stride=4, padding="VALID", relu=True), True, True),
+    (ConvSpec(kernel=5, groups=2, relu=True), True, True),
+    (ConvSpec(kernel=3, relu=True), False, False),
+    (ConvSpec(kernel=3, groups=2, relu=True), False, False),
+    (ConvSpec(kernel=3, groups=2, relu=True), False, True),
 ]
+
+
+def _route(cfg: "AlexNetConfig") -> str:
+    """Model-wide route preference; per-layer eligibility lives in nn.conv."""
+    if not cfg.use_winograd:
+        return "direct"
+    return "pallas" if cfg.use_pallas else "winograd"
 
 
 def init(key, cfg: AlexNetConfig):
@@ -55,8 +65,9 @@ def init(key, cfg: AlexNetConfig):
     keys = split(key, len(_LAYERS) + len(cfg.fc_dims))
     p = {}
     c_in = cfg.in_channels
-    for i, ((k, s, pad, g, _, _), c_out) in enumerate(zip(_LAYERS,
-                                                          cfg.conv_channels)):
+    for i, ((spec, _, _), c_out) in enumerate(zip(_LAYERS,
+                                                  cfg.conv_channels)):
+        k, g = spec.kernel, spec.groups
         p[f"conv{i+1}"] = {
             "w": param(keys[i], (k, k, c_in // g, c_out), dtype,
                        scale=(k * k * c_in // g) ** -0.5),
@@ -75,8 +86,9 @@ def init(key, cfg: AlexNetConfig):
 
 def _feature_hw(cfg: AlexNetConfig) -> int:
     h = cfg.image_size
-    for (k, s, pad, _, _, pool) in _LAYERS:
-        h = (h - k) // s + 1 if pad == "VALID" else -(-h // s)
+    for (spec, _, pool) in _LAYERS:
+        h = ((h - spec.kernel) // spec.stride + 1 if spec.padding == "VALID"
+             else -(-h // spec.stride))
         if pool:
             h = (h - 3) // 2 + 1
     return h
@@ -101,35 +113,13 @@ def _maxpool(x):
                                  (1, 2, 2, 1), "VALID")
 
 
-def _conv(p, x, k, s, pad, groups, cfg: AlexNetConfig):
-    w = p["w"]
-    use_wino = cfg.use_winograd and k == 3 and s == 1
-
-    def one(xg, wg):
-        if use_wino:
-            if cfg.use_pallas:
-                from ..kernels.winograd.ops import conv2d as pallas_conv2d
-                return pallas_conv2d(xg, wg, m=4, padding=pad)
-            return conv2d_winograd(xg, wg, m=4, padding=pad)
-        return conv2d_direct(xg, wg, stride=s, padding=pad)
-
-    if groups == 1:
-        y = one(x, w)
-    else:
-        cg = x.shape[-1] // groups
-        kg = w.shape[-1] // groups
-        y = jnp.concatenate(
-            [one(x[..., g * cg:(g + 1) * cg], w[..., g * kg:(g + 1) * kg])
-             for g in range(groups)], axis=-1)
-    return y + p["b"].astype(y.dtype)
-
-
 def features(params, cfg: AlexNetConfig, images):
     """images (B, H, W, 3) -> flattened conv features (B, d)."""
     x = images.astype(jnp.dtype(cfg.dtype))
-    for i, (k, s, pad, g, lrn, pool) in enumerate(_LAYERS):
-        x = _conv(params[f"conv{i+1}"], x, k, s, pad, g, cfg)
-        x = jax.nn.relu(x)
+    route = _route(cfg)
+    for i, (spec, lrn, pool) in enumerate(_LAYERS):
+        p = params[f"conv{i+1}"]
+        x = dispatch_conv(spec.with_route(route), x, p["w"], p["b"])
         if lrn:
             x = _lrn(x, cfg)
         if pool:

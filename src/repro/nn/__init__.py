@@ -1,1 +1,1 @@
-from . import attention, blocks, flash, layers, mlp, module, moe, ssd  # noqa: F401
+from . import attention, blocks, conv, flash, layers, mlp, module, moe, ssd  # noqa: F401

@@ -1,0 +1,88 @@
+"""Unified conv dispatch: declarative ConvSpec -> one entry point.
+
+Models declare each conv layer as a :class:`ConvSpec` (kernel geometry,
+groups, fusion flags, route) and call :func:`dispatch_conv`; all routing
+policy — Winograd eligibility, Pallas vs jnp, direct fallback, grouped
+batching — lives here instead of ad-hoc per-model branching.
+
+Routes
+------
+``direct``    ``lax.conv_general_dilated`` (any kernel/stride; groups via
+              ``feature_group_count``), bias + ReLU applied as epilogue.
+``winograd``  pure-jnp F(m,r) x F(m,r) path (differentiable; training).
+``pallas``    stream-buffered Pallas kernel (in-kernel tiling, channel-block
+              reduction, fused bias+ReLU epilogue; inference).
+``auto``      ``winograd`` when eligible, else ``direct``.
+
+Winograd routes require stride 1 and a 3x3 kernel (the paper's F(4,3)
+layers); ineligible specs silently fall back to ``direct`` so models never
+need their own conv branching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+from ..core.winograd import conv2d_winograd
+from ..kernels.winograd.ops import conv2d as pallas_conv2d
+from ..kernels.winograd.ref import conv2d_ref
+
+ROUTES = ("auto", "direct", "winograd", "pallas")
+
+
+@dataclass(frozen=True)
+class ConvSpec:
+    """Declarative description of one 2D conv layer (NHWC / HWIO)."""
+    kernel: int
+    stride: int = 1
+    padding: str = "SAME"           # "SAME" | "VALID"
+    groups: int = 1
+    fuse_bias: bool = True          # apply bias inside the conv call
+    relu: bool = False              # fused ReLU epilogue
+    route: str = "auto"             # "auto" | "direct" | "winograd" | "pallas"
+    winograd_m: int = 4             # F(m, 3) output tile size
+
+    def __post_init__(self):
+        assert self.route in ROUTES, self.route
+        assert self.padding in ("SAME", "VALID"), self.padding
+
+    def with_route(self, route: str) -> "ConvSpec":
+        return replace(self, route=route)
+
+    @property
+    def winograd_eligible(self) -> bool:
+        return self.stride == 1 and self.kernel == 3
+
+
+def resolve_route(spec: ConvSpec) -> str:
+    """Final route after eligibility fallback (never returns "auto")."""
+    if spec.route == "auto":
+        return "winograd" if spec.winograd_eligible else "direct"
+    if spec.route in ("winograd", "pallas") and not spec.winograd_eligible:
+        return "direct"
+    return spec.route
+
+
+def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
+    """Run one conv layer per its spec.  x (B,H,W,C), w (k,k,C//g,K), b (K,).
+
+    Grouped convs are batched (``feature_group_count`` on the direct route,
+    a group-folded kernel grid / vmap on the Winograd routes) — never a
+    Python loop over groups.
+    """
+    assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
+    bias = b if spec.fuse_bias else None
+    route = resolve_route(spec)
+    if route == "direct":
+        y = conv2d_ref(x, w, bias, stride=spec.stride, padding=spec.padding,
+                       groups=spec.groups, relu=spec.relu)
+    elif route == "pallas":
+        y = pallas_conv2d(x, w, bias, m=spec.winograd_m, padding=spec.padding,
+                          relu=spec.relu, groups=spec.groups, pallas=True,
+                          interpret=interpret)
+    else:  # winograd (pure-jnp, differentiable)
+        y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
+                            padding=spec.padding, relu=spec.relu,
+                            groups=spec.groups)
+    if b is not None and not spec.fuse_bias:
+        y = y + b.astype(y.dtype)
+    return y

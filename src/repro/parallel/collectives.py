@@ -16,9 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from ..core import bfp
+from .compat import axis_size, shard_map
 
 
 def _ring_rs(x, axis_name: str, *, block: int, bits: int):
@@ -26,7 +26,7 @@ def _ring_rs(x, axis_name: str, *, block: int, bits: int):
 
     x: (n * chunk, ...) locally identical-shaped shard view. Returns this
     device's reduced chunk, i.e. chunk index = axis_index."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     d = jax.lax.axis_index(axis_name)
     chunks = x.reshape((n, -1) + x.shape[1:])
     perm = [(i, (i + 1) % n) for i in range(n)]
@@ -46,7 +46,7 @@ def _ring_rs(x, axis_name: str, *, block: int, bits: int):
 
 def bfp_psum(x, axis_name: str, *, block: int = 32, bits: int = 8):
     """All-reduce = compressed ring reduce-scatter + compressed all-gather."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     orig_shape = x.shape
@@ -85,7 +85,7 @@ def make_compressed_grad_sync(mesh: Mesh, axis: str = "data", *,
                 s = bfp_psum(g, axis, block=block, bits=bits)
             else:
                 s = jax.lax.psum(g, axis)
-            return s / jax.lax.axis_size(axis)
+            return s / axis_size(axis)
         return jax.tree_util.tree_map(one, grads)
 
     def wrapped(grads):

@@ -1,0 +1,33 @@
+"""Version-compat shard_map wrapper.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+and its replication-check kwarg was renamed ``check_rep`` -> ``check_vma``
+across JAX releases.  Callers import from here and always pass ``check_vma``;
+we translate for whatever is installed.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:                      # older JAX
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+    if check_vma is not None:
+        kw["check_vma" if "check_vma" in _PARAMS else "check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def axis_size(axis_name) -> int:
+    """``jax.lax.axis_size`` polyfill (older JAX: psum of ones)."""
+    import jax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -16,7 +16,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from .compat import shard_map
 
 
 def bubble_fraction(n_micro: int, n_stages: int) -> float:

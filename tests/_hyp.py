@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim for mixed test modules.
+
+``tests/test_bfp.py`` is property-based end to end and uses
+``pytest.importorskip``; modules that mix property tests with plain unit
+tests import ``given/settings/st`` from here instead, so the plain tests
+still run (and the property tests skip cleanly) when hypothesis is not
+installed.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # tier-1 runs without extras
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``strategies`` — any strategy call returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

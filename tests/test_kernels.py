@@ -39,12 +39,55 @@ def test_wino2d_kernel_sweep(H, W, C, K, m, dtype):
     rng = np.random.default_rng(H + W)
     x = jnp.asarray(rng.standard_normal((2, H, W, C)), dtype)
     w = jnp.asarray(rng.standard_normal((3, 3, C, K)) * 0.2, dtype)
-    out = wg_k.conv2d_winograd(x, w, m=m, interpret=True, tile_block=64)
+    out = wg_k.conv2d_winograd(x, w, m=m, interpret=True, row_block=2)
     ref = wg_ref.conv2d_ref(x, w)
     tol = 5e-4 if dtype == jnp.float32 else 1e-1
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
                                rtol=tol, atol=tol)
+
+
+def test_wino2d_kernel_takes_raw_input():
+    """The Pallas path consumes the raw (B,H,W,C) array — the (n/m)^2
+    overlapping-tile tensor is built in-kernel, never materialized host-side
+    (stream-buffer dataflow, paper §3.5)."""
+    import jax
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 13, 13, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8, 8)) * 0.2, jnp.float32)
+    text = jax.make_jaxpr(
+        lambda a, b: wg_k.conv2d_winograd(a, b, interpret=True))(x, w)
+    assert "gather" not in str(text), "host-side tile gather crept back in"
+
+
+@pytest.mark.parametrize("c_block,k_block,row_block", [(8, 8, 1), (16, 24, 2),
+                                                       (32, 128, 8)])
+def test_wino2d_kernel_channel_block_reduction(c_block, k_block, row_block):
+    """c_block grid dim + in-kernel (VMEM scratch) accumulation: any blocking
+    must give the same answer as one resident block."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 13, 13, 32)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 32, 24)) * 0.2, jnp.float32)
+    out = wg_k.conv2d_winograd(x, w, m=4, interpret=True, c_block=c_block,
+                               k_block=k_block, row_block=row_block)
+    ref = wg_ref.conv2d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("padding", ["SAME", "VALID"])
+def test_wino2d_kernel_fused_epilogue_and_groups(padding):
+    """Fused bias+ReLU epilogue + grouped (batch-folded) conv vs oracle."""
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((2, 12, 12, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 10)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((10,)), jnp.float32)
+    out = wg_k.conv2d_winograd(x, w, b, m=4, padding=padding, relu=True,
+                               groups=2, c_block=4, interpret=True)
+    ref = wg_ref.conv2d_ref(x, w, b, padding=padding, groups=2, relu=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
 
 
 def test_wino1d_custom_vjp_matches_ref():

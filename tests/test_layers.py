@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.nn.attention import cache_write, len_mask, pos_of
 from repro.nn.layers import layernorm, layernorm_init, rmsnorm, rmsnorm_init, rope

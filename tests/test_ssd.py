@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.ssd.ref import ssd_reference
 from repro.nn.ssd import ssd_chunked, ssd_decode_step

@@ -3,11 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # optional-hypothesis shim
 
 from repro.core.winograd import (conv1d_depthwise_causal, conv2d_direct,
-                                 conv2d_winograd, conv_flops,
-                                 winograd_transform)
+                                 conv2d_hbm_bytes, conv2d_winograd,
+                                 conv_flops, winograd_transform)
+from repro.kernels.winograd.ref import conv2d_ref
+from repro.nn.conv import ConvSpec, dispatch_conv, resolve_route
 
 
 @given(m=st.integers(2, 4), r=st.integers(2, 5))
@@ -75,3 +78,80 @@ def test_flops_accounting():
     # ~2.6x fewer multiplies for 13x13 with F(4,3) (4.5x ideal for r=3, m=4
     # in 2D, minus tile padding of 13 -> 16)
     assert 1.7 < direct / wino < 3.0
+
+
+# ---------------------------------------------------------------------------
+# fused conv pipeline: both routes vs jax.lax.conv_general_dilated
+# ---------------------------------------------------------------------------
+def _lax_ref(x, w, b, *, padding, groups, relu):
+    y = jax.lax.conv_general_dilated(
+        x, w, (1, 1), padding, dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups)
+    y = y + b
+    return jax.nn.relu(y) if relu else y
+
+
+@pytest.mark.parametrize("route", ["winograd", "pallas"])
+@pytest.mark.parametrize("padding,groups,relu", [
+    ("SAME", 1, False), ("VALID", 1, True), ("SAME", 2, True),
+    ("VALID", 2, False)])
+def test_fused_conv_matches_lax(route, padding, groups, relu):
+    """Grouped / VALID / fused bias+ReLU parity on both conv routes."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((2, 13, 13, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 8 // groups, 10)) * 0.2,
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((10,)), jnp.float32)
+    ref = _lax_ref(x, w, b, padding=padding, groups=groups, relu=relu)
+    spec = ConvSpec(kernel=3, padding=padding, groups=groups, relu=relu,
+                    route=route)
+    out = dispatch_conv(spec, x, w, b, interpret=True)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_matches_unfused_reference():
+    """Fused bias+ReLU epilogue == unfused conv -> +bias -> relu (1e-4)."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 6)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 6, 4)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((4,)), jnp.float32)
+    for route in ("winograd", "pallas"):
+        spec = ConvSpec(kernel=3, relu=True, route=route)
+        fused = dispatch_conv(spec, x, w, b, interpret=True)
+        unfused = jax.nn.relu(
+            dispatch_conv(ConvSpec(kernel=3, route=route), x, w,
+                          interpret=True) + b)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_route_fallback():
+    """Non-eligible specs (stride/kernel) fall back to direct — no model
+    branching needed."""
+    assert resolve_route(ConvSpec(kernel=3)) == "winograd"
+    assert resolve_route(ConvSpec(kernel=3, route="pallas")) == "pallas"
+    assert resolve_route(ConvSpec(kernel=11, stride=4, route="pallas")) == \
+        "direct"
+    assert resolve_route(ConvSpec(kernel=5, route="winograd")) == "direct"
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 11, 11, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((5, 5, 2, 6)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((6,)), jnp.float32)
+    spec = ConvSpec(kernel=5, groups=2, relu=True, route="winograd")
+    out = dispatch_conv(spec, x, w, b)
+    ref = conv2d_ref(x, w, b, groups=2, relu=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_hbm_traffic_model():
+    """Stream-buffered path must beat the host-tiled path whenever the tile
+    tensor inflates traffic (the paper's §3.5 bandwidth argument)."""
+    hb = conv2d_hbm_bytes(8, 13, 13, 256, 384, 3, 4)
+    assert hb["tile_inflation"] > 2.0        # (n/m)^2 = 2.25 at 13->16 pad
+    assert hb["savings"] > 1.0
+    # single k/c block: stream path reads the raw slab exactly once
+    hb1 = conv2d_hbm_bytes(1, 16, 16, 64, 64, 3, 4, c_block=64, k_block=64)
+    assert hb1["stream_bytes"] == 1 * 18 * 18 * 64 * 4
