@@ -5,7 +5,7 @@ comparison / harness sanity (TPU v5e is the target, not the runtime);
 ``derived`` fields carry the model numbers compared against the paper.
 """
 from . import (decode_batching, fig8_dse, fig9_model_vs_measured,
-               kernels_bench, roofline_table, table2_layers,
+               kernels_bench, roofline_table, serve_images, table2_layers,
                table5_fpga_comparison, table6_efficiency)
 
 MODULES = [
@@ -15,6 +15,7 @@ MODULES = [
     ("table5", table5_fpga_comparison),
     ("table6", table6_efficiency),
     ("decode_batching", decode_batching),
+    ("serve_images", serve_images),
     ("kernels", kernels_bench),
     ("roofline", roofline_table),
 ]

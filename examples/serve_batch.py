@@ -1,10 +1,15 @@
-"""Continuous-batching serving demo (paper §3.7 FC-batching, decode regime).
+"""Continuous-batching serving demo (paper §3.7 batching, both regimes).
 
     PYTHONPATH=src python examples/serve_batch.py [--arch llama3.2-3b]
+    PYTHONPATH=src python examples/serve_batch.py --arch alexnet
 
-Submits a stream of mixed-length requests to the slot-based engine and
-reports the batching amortization (per-step decode time vs occupancy) —
-the LM analogue of the paper's S_batch=96 FC batching.
+LM archs submit a stream of mixed-length requests to the slot-based decode
+engine and report the batching amortization (per-step decode time vs
+occupancy) — the LM analogue of the paper's S_batch=96 FC batching.
+
+``--arch alexnet`` serves image-classification requests through the
+bucketed, double-buffered ``CnnEngine`` (the paper's actual workload) and
+reports img/s + request latency percentiles (Tables 5-6).
 """
 import argparse
 import sys
@@ -16,18 +21,30 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np                                         # noqa: E402
 
 from repro.configs import ASSIGNED, get_config             # noqa: E402
+from repro.launch.serve import serve_images                # noqa: E402
 from repro.serving import Engine, Request, ServeConfig     # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b", choices=ASSIGNED)
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=ASSIGNED + ["alexnet"])
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="CNN path: shard buckets over all JAX devices")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
+    if cfg.family == "cnn":
+        # one shared driver with the launcher (repro.launch.serve)
+        done = serve_images(cfg, args)
+        assert done == args.requests
+        print("serve_batch OK")
+        return
+
     scfg = ServeConfig(max_batch=args.max_batch, max_len=160,
                        prefill_bucket=16,
                        cross_len=64 if cfg.family == "audio" else 0)
@@ -52,7 +69,7 @@ def main():
     eng.run_until_done()
     wall = time.perf_counter() - t0
     done = sum(r.done for r in reqs)
-    print(f"arch={args.arch}  finished {done}/{len(reqs)} requests "
+    print(f"arch={args.arch}  completed {done}/{len(reqs)} requests "
           f"in {wall:.1f}s")
     print(f"tokens generated: {eng.tokens_generated} "
           f"({eng.decode_steps} batched decode steps, "

@@ -1,6 +1,11 @@
 """Serving launcher: continuous-batching engine over synthetic requests.
 
-``python -m repro.launch.serve --arch llama3.2-3b --requests 16``
+``python -m repro.launch.serve --arch llama3.2-3b --requests 16``   (decode)
+``python -m repro.launch.serve --arch alexnet --requests 32``       (images)
+
+LM archs go through the token-decode :class:`Engine`; ``alexnet`` (the
+paper's own workload) goes through the bucketed, double-buffered
+:class:`CnnEngine` and reports img/s + latency percentiles (Tables 5-6).
 """
 from __future__ import annotations
 
@@ -9,23 +14,57 @@ import argparse
 import numpy as np
 
 from ..configs import ASSIGNED, get_config
-from ..serving import Engine, Request, ServeConfig
+from ..serving import (CnnEngine, CnnServeConfig, Engine, ImageRequest,
+                       Request, ServeConfig)
+
+
+def serve_images(cfg, args) -> int:
+    """Image-classification serving path (paper §3.5/§3.7 regime)."""
+    scfg = CnnServeConfig(max_batch=args.max_batch,
+                          data_parallel=args.data_parallel)
+    eng = CnnEngine(cfg, scfg, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = [ImageRequest(image=rng.standard_normal(
+                (cfg.image_size, cfg.image_size, cfg.in_channels))
+                .astype(np.float32))
+            for _ in range(args.requests)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    s = eng.stats()
+    done = sum(r.done for r in reqs)
+    lat = s["latency_ms"]
+    print(f"completed {done}/{len(reqs)} requests; "
+          f"{s['imgs_per_s']:.1f} img/s over {s['batches_run']} batches "
+          f"(avg occupancy {s['avg_occupancy']:.2f}, "
+          f"buckets {s['bucket_counts']})")
+    print(f"latency p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
+          f"p99={lat['p99']:.1f}ms")
+    return done
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b", choices=ASSIGNED)
+    ap.add_argument("--arch", default="llama3.2-3b",
+                    choices=ASSIGNED + ["alexnet"])
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="CNN path: shard buckets over all JAX devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
+
+    if cfg.family == "cnn":
+        serve_images(cfg, args)
+        return
+
     scfg = ServeConfig(max_batch=args.max_batch, max_len=args.max_len,
                        cross_len=128 if cfg.family == "audio" else 0)
     eng = Engine(cfg, scfg, seed=args.seed)

@@ -3,6 +3,9 @@ from . import lm  # noqa: F401
 
 def model_for(cfg):
     """Dispatch to the model family implementation."""
+    if cfg.family == "cnn":
+        from . import alexnet
+        return alexnet
     if cfg.family == "audio":
         from . import encdec
         return encdec

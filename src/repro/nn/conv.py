@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 
+import jax.numpy as jnp
+
 from ..core.winograd import conv2d_winograd
 from ..kernels.winograd.ops import conv2d as pallas_conv2d
 from ..kernels.winograd.ref import conv2d_ref
@@ -70,19 +72,25 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
     Python loop over groups.
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
+    # Unfused bias is an epilogue *between* conv and ReLU (conv -> +b -> relu),
+    # so the in-kernel ReLU must be deferred along with it.
+    defer_bias = b is not None and not spec.fuse_bias
     bias = b if spec.fuse_bias else None
+    relu = spec.relu and not defer_bias
     route = resolve_route(spec)
     if route == "direct":
         y = conv2d_ref(x, w, bias, stride=spec.stride, padding=spec.padding,
-                       groups=spec.groups, relu=spec.relu)
+                       groups=spec.groups, relu=relu)
     elif route == "pallas":
         y = pallas_conv2d(x, w, bias, m=spec.winograd_m, padding=spec.padding,
-                          relu=spec.relu, groups=spec.groups, pallas=True,
+                          relu=relu, groups=spec.groups, pallas=True,
                           interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
-                            padding=spec.padding, relu=spec.relu,
+                            padding=spec.padding, relu=relu,
                             groups=spec.groups)
-    if b is not None and not spec.fuse_bias:
+    if defer_bias:
         y = y + b.astype(y.dtype)
+        if spec.relu:
+            y = jnp.maximum(y, 0)
     return y

@@ -173,6 +173,19 @@ def batch_sharding(mesh: Mesh, ndim: int = 2):
                                  *([None] * (ndim - 1))))
 
 
+def data_parallel_mesh(devices=None) -> Mesh:
+    """1-axis ("data",) mesh over all local devices (serving-style pure DP:
+    replicated weights, batch axis sharded)."""
+    devices = list(jax.devices() if devices is None else devices)
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully replicated placement on ``mesh`` (weights under pure DP, or the
+    fallback for batches indivisible by the data axis)."""
+    return NamedSharding(mesh, P())
+
+
 def zero1_shardings(params_shape, mesh: Mesh):
     """ZeRO-1: optimizer moments additionally sharded over 'data' on the
     largest divisible dim that the param sharding leaves unsharded."""

@@ -1,1 +1,4 @@
+from .cnn import (CnnEngine, CnnServeConfig, ImageRequest,  # noqa: F401
+                  bucket_sizes)
 from .engine import Engine, Request, ServeConfig  # noqa: F401
+from .scheduler import LatencyTracker, SlotScheduler  # noqa: F401

@@ -1,0 +1,216 @@
+"""Batched image-inference serving engine (paper §3.5 + §3.7, serving form).
+
+The paper's headline number — 1020 img/s AlexNet on Arria 10 — is a *serving*
+result: images are admitted, batched through the conv pipeline, and the FC
+layers amortize one weight stream over S_batch images.  :class:`CnnEngine`
+reproduces that request-to-prediction path in software on top of the shared
+:class:`SlotScheduler` core:
+
+* **Occupancy buckets** — each admitted group is padded to the next
+  power-of-two bucket (<= ``max_batch``), so ``jax.jit`` compiles at most
+  ``O(log2 max_batch)`` batch shapes.  This is §3.7's S_batch with bounded
+  recompiles; padded rows are zeros and are sliced off before retirement.
+* **Double-buffered staging** — host->device image copies are dispatched
+  asynchronously up to ``staging_depth`` groups ahead, so the H2D transfer
+  of group N+1 overlaps the forward pass of group N — the software analogue
+  of the §3.5 stream buffers (``core/streambuf.py`` is the training-input
+  twin of the same idea).  The slot pool is sized ``max_batch *
+  staging_depth`` so a full bucket can stage while another computes.
+* **Data parallelism** — with ``data_parallel=True`` the parameters are
+  replicated over a 1-axis device mesh and each bucket's batch axis is
+  sharded across devices (``parallel/sharding.py``); buckets indivisible by
+  the device count fall back to replicated placement.
+
+Request lifecycle: submit() -> queued -> admitted (slots held for one
+bucketed forward) -> staged (H2D in flight) -> computing -> finished
+(logits + argmax label on the request).  Metrics mirror Tables 5-6:
+img/s, average occupancy, per-bucket batch counts, and p50/p90/p99
+request latency.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..models import model_for
+from ..parallel.sharding import (batch_sharding, data_parallel_mesh,
+                                 replicated_sharding)
+from .scheduler import LatencyTracker, SlotScheduler
+
+
+@dataclass
+class CnnServeConfig:
+    max_batch: int = 8          # largest serve bucket (paper's S_batch knob)
+    staging_depth: int = 2      # groups staged ahead of compute (§3.5 buffer)
+    data_parallel: bool = False  # shard bucket batch axis over jax.devices()
+
+
+@dataclass
+class ImageRequest:
+    image: np.ndarray           # (H, W, C) host-side float image
+    uid: int = field(default_factory=itertools.count().__next__)
+    # outputs
+    logits: Optional[np.ndarray] = None   # (num_classes,) on completion
+    label: Optional[int] = None           # argmax of logits
+    done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two below ``max_batch`` plus ``max_batch`` itself."""
+    assert max_batch >= 1, max_batch
+    bs: List[int] = []
+    b = 1
+    while b < max_batch:
+        bs.append(b)
+        b *= 2
+    bs.append(max_batch)
+    return tuple(bs)
+
+
+@dataclass
+class _Group:
+    """One admitted batch moving through the stage->compute->retire pipe."""
+    slots: List[int]
+    reqs: List[ImageRequest]
+    bucket: int
+    images: object              # device array (bucket, H, W, C), H2D async
+    logits: object = None       # device array once compute is dispatched
+
+
+class CnnEngine:
+    def __init__(self, cfg, scfg: CnnServeConfig, *, params=None,
+                 seed: int = 0):
+        self.cfg, self.scfg = cfg, scfg
+        self.mod = model_for(cfg)
+        if params is None:
+            params = self.mod.init(jax.random.PRNGKey(seed), cfg)
+        self.buckets = bucket_sizes(scfg.max_batch)
+        self.sched = SlotScheduler(scfg.max_batch * scfg.staging_depth)
+        self.mesh = data_parallel_mesh() if scfg.data_parallel else None
+        if self.mesh is not None:
+            params = jax.device_put(params, replicated_sharding(self.mesh))
+        self.params = params
+
+        mod, ccfg = self.mod, cfg
+        self._apply = jax.jit(lambda p, x: mod.apply(p, ccfg, x))
+        self._staged: Deque[_Group] = deque()
+        self._compute: Deque[_Group] = deque()
+        self.latency = LatencyTracker()
+        self.images_completed = 0
+        self.batches_run = 0
+        self.bucket_counts: Dict[int, int] = {}
+        self._t_serve = 0.0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: ImageRequest):
+        expect = (self.cfg.image_size, self.cfg.image_size,
+                  self.cfg.in_channels)
+        shape = np.shape(req.image)
+        if shape != expect:
+            raise ValueError(f"image shape {shape} != expected {expect} "
+                             f"for {self.cfg.name}")
+        req.t_submit = time.perf_counter()
+        self.sched.submit(req)
+
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if b >= n:
+                return b
+        return self.buckets[-1]
+
+    def _put(self, host: np.ndarray):
+        """Async H2D copy (transfer overlaps in-flight compute)."""
+        if self.mesh is None:
+            return jax.device_put(host)
+        if host.shape[0] % self.mesh.devices.size == 0:
+            return jax.device_put(host, batch_sharding(self.mesh, host.ndim))
+        return jax.device_put(host, replicated_sharding(self.mesh))
+
+    def _stage(self):
+        """Admit queued requests into free slots and start their H2D copies."""
+        while (self.sched.queue and
+               len(self._staged) + len(self._compute) < self.scfg.staging_depth):
+            group = self.sched.admit(limit=self.scfg.max_batch)
+            if not group:
+                break                                   # no free slots
+            slots = [s for s, _ in group]
+            reqs = [r for _, r in group]
+            bucket = self.bucket_for(len(reqs))
+            h, w, c = reqs[0].image.shape
+            buf = np.zeros((bucket, h, w, c), np.float32)
+            for i, r in enumerate(reqs):
+                buf[i] = r.image
+            self._staged.append(_Group(slots, reqs, bucket, self._put(buf)))
+
+    def _launch(self):
+        """Dispatch the forward pass for the oldest staged group (async)."""
+        if self._staged:
+            g = self._staged.popleft()
+            g.logits = self._apply(self.params, g.images)
+            self._compute.append(g)
+
+    def _finish_oldest(self):
+        """Block on the oldest computed group and retire its requests."""
+        if not self._compute:
+            return
+        g = self._compute.popleft()
+        logits = np.asarray(jax.device_get(g.logits))[: len(g.reqs)]
+        now = time.perf_counter()
+        for slot, req, row in zip(g.slots, g.reqs, logits):
+            req.logits = row
+            req.label = int(row.argmax())
+            req.done = True
+            req.t_done = now
+            self.latency.record(now - req.t_submit)
+            self.sched.retire(slot)
+        self.images_completed += len(g.reqs)
+        self.batches_run += 1
+        self.bucket_counts[g.bucket] = self.bucket_counts.get(g.bucket, 0) + 1
+
+    def step(self):
+        """One tick: stage ahead (H2D), launch oldest staged, retire oldest
+        computed — so transfer, compute, and host retirement overlap."""
+        t0 = time.perf_counter()
+        self._stage()
+        self._launch()
+        self._finish_oldest()
+        self._t_serve += time.perf_counter() - t0
+
+    def run_until_done(self, max_steps: int = 100_000):
+        for _ in range(max_steps):
+            if self.sched.idle and not self._staged and not self._compute:
+                break
+            self.step()
+
+    def reset_metrics(self):
+        """Zero throughput/latency counters (e.g. after jit warmup) without
+        touching queue, slots, or compiled buckets."""
+        self.latency = LatencyTracker()
+        self.images_completed = 0
+        self.batches_run = 0
+        self.bucket_counts = {}
+        self._t_serve = 0.0
+
+    # ------------------------------------------------------------------
+    @property
+    def imgs_per_s(self) -> float:
+        return self.images_completed / self._t_serve if self._t_serve else 0.0
+
+    def stats(self) -> dict:
+        return {
+            "images_completed": self.images_completed,
+            "batches_run": self.batches_run,
+            "avg_occupancy": (self.images_completed / self.batches_run
+                              if self.batches_run else 0.0),
+            "bucket_counts": dict(sorted(self.bucket_counts.items())),
+            "imgs_per_s": self.imgs_per_s,
+            "latency_ms": self.latency.percentiles_ms(),
+        }

@@ -1,4 +1,4 @@
-"""Slot-based continuous-batching serving engine (paper §3.7 generalized).
+"""Slot-based continuous-batching token engine (paper §3.7 generalized).
 
 The paper batches images through the FC layers because FC throughput is
 weight-bandwidth-bound: each streamed weight must be reused S_batch times.
@@ -7,6 +7,11 @@ LM decode is the same regime — every decode step streams the full
 cache slots and decodes all active slots in one batched step.  Prefill
 (activation-bound, the paper's conv regime) runs per-request at admission,
 and its cache rows are inserted into the batch pool.
+
+Slot/queue bookkeeping lives in the shared :class:`SlotScheduler`
+(``serving/scheduler.py``) — the same core that drives the image-serving
+:class:`CnnEngine`; this module owns only the decode-specific device state
+(cache pool, lengths, last tokens).
 
 Request lifecycle: submit() -> queued -> admitted (prefill) -> decoding ->
 finished (max_new or eos).  step() = admit + one batched decode; tokens/s
@@ -25,6 +30,7 @@ import numpy as np
 
 from ..config import ArchConfig
 from ..models import model_for
+from .scheduler import LatencyTracker, SlotScheduler
 
 
 @dataclass
@@ -46,6 +52,8 @@ class Request:
     # outputs
     generated: List[int] = field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0
+    t_done: float = 0.0
 
 
 class Engine:
@@ -65,9 +73,8 @@ class Engine:
             lambda s: jnp.zeros(s.shape, s.dtype),
             self.mod.cache_shape(cfg, B, L, **kw))
         self.lengths = jnp.zeros((B,), jnp.int32)
-        self.active = np.zeros((B,), bool)
-        self.slot_req: List[Optional[Request]] = [None] * B
-        self.queue: List[Request] = []
+        self.sched = SlotScheduler(B)
+        self.latency = LatencyTracker()
         self.tokens_generated = 0
         self.decode_steps = 0
         self._t_decode = 0.0
@@ -111,9 +118,23 @@ class Engine:
         self._decode = jax.jit(decode, donate_argnums=(1,))
         self.last_tokens = jnp.zeros((B, 1), jnp.int32)
 
+    # -- back-compat views over the shared scheduler ------------------------
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched.queue
+
+    @property
+    def active(self) -> np.ndarray:
+        return self.sched.active
+
+    @property
+    def slot_req(self) -> List[Optional[Request]]:
+        return self.sched.slot_req
+
     # ------------------------------------------------------------------
     def submit(self, req: Request):
-        self.queue.append(req)
+        req.t_submit = time.perf_counter()
+        self.sched.submit(req)
 
     def _pad_len(self, n: int) -> int:
         # SSM/hybrid prefill state would absorb pad-token garbage, so those
@@ -124,10 +145,7 @@ class Engine:
         return min(-(-n // b) * b, self.scfg.max_len)
 
     def _admit(self):
-        for slot in range(self.scfg.max_batch):
-            if self.active[slot] or not self.queue:
-                continue
-            req = self.queue.pop(0)
+        for slot, req in self.sched.admit():
             prompt = req.prompt[: self.scfg.max_len - req.max_new]
             plen = len(prompt)
             padded = self._pad_len(plen)
@@ -153,28 +171,26 @@ class Engine:
             self.last_tokens = self.last_tokens.at[slot, 0].set(first_tok)
             req.generated.append(first_tok)
             self.tokens_generated += 1
-            self.active[slot] = True
-            self.slot_req[slot] = req
 
     def _retire(self):
-        for slot in range(self.scfg.max_batch):
-            req = self.slot_req[slot]
-            if req is None:
-                continue
+        # one host sync per tick: fetch the whole lengths vector, index on host
+        lengths = np.asarray(jax.device_get(self.lengths))
+        for slot, req in self.sched.occupied():
             limit = (len(req.generated) >= req.max_new or
-                     int(jax.device_get(self.lengths)[slot]) >=
-                     self.scfg.max_len - 1)
+                     int(lengths[slot]) >= self.scfg.max_len - 1)
             eos = (self.scfg.eos_id >= 0 and req.generated and
                    req.generated[-1] == self.scfg.eos_id)
             if limit or eos:
                 req.done = True
-                self.active[slot] = False
-                self.slot_req[slot] = None
+                req.t_done = time.perf_counter()
+                self.latency.record(req.t_done - req.t_submit)
+                self.sched.retire(slot)
 
     def step(self):
         """One engine tick: admit waiting requests, decode all active slots."""
         self._admit()
-        if not self.active.any():
+        mask = self.sched.active
+        if not mask.any():
             return
         t0 = time.perf_counter()
         nxt, self.cache = self._decode(self.params, self.cache,
@@ -182,19 +198,18 @@ class Engine:
         nxt_host = np.asarray(jax.device_get(nxt))
         self._t_decode += time.perf_counter() - t0
         self.decode_steps += 1
-        mask = self.active.copy()
         self.lengths = self.lengths + jnp.asarray(mask, jnp.int32)
         self.last_tokens = jnp.where(jnp.asarray(mask)[:, None],
                                      nxt[:, None], self.last_tokens)
         for slot in np.nonzero(mask)[0]:
-            req = self.slot_req[slot]
+            req = self.sched.slot_req[slot]
             req.generated.append(int(nxt_host[slot]))
             self.tokens_generated += 1
         self._retire()
 
     def run_until_done(self, max_steps: int = 100_000):
         for _ in range(max_steps):
-            if not self.queue and not self.active.any():
+            if self.sched.idle:
                 break
             self.step()
 

@@ -61,6 +61,28 @@ def test_whisper_engine_cross_attention():
     assert req.done and len(req.generated) == 4
 
 
+def test_engine_shares_scheduler_core():
+    """Decode engine rides the same SlotScheduler/LatencyTracker core as
+    CnnEngine: counters and latency percentiles line up after a run."""
+    cfg = get_config("smollm-360m").reduced()
+    eng = Engine(cfg, ServeConfig(max_batch=2, max_len=64,
+                                  prefill_bucket=8), seed=4)
+    reqs = [Request(prompt=[1, 2, 3, 4], max_new=3) for _ in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert eng.sched.submitted == eng.sched.completed == 3
+    assert eng.sched.idle and eng.sched.occupancy == 0
+    assert len(eng.latency) == 3
+    lat = eng.latency.percentiles_ms()
+    assert 0 < lat["p50"] <= lat["p99"]
+    assert all(r.t_done >= r.t_submit > 0 for r in reqs)
+    # back-compat views still exposed
+    assert eng.active.tolist() == [False, False]
+    assert eng.queue == [] and eng.slot_req == [None, None]
+
+
 def test_batching_amortizes_weight_stream():
     """Paper §3.7's point, measured: tokens/s grows with occupancy (batched
     decode reuses the streamed weights).  On CPU the effect is modest but
