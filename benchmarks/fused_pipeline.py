@@ -1,0 +1,147 @@
+"""Fused layer pipeline: measured wall-clock + modeled HBM bytes per layer.
+
+The paper's headline argument (§3.5, Table 3) is that running conv, ReLU,
+LRN, and pool on-chip keeps feature maps out of external memory between
+layers.  This benchmark runs every AlexNet conv layer both ways —
+
+  unfused:  dispatch_conv (conv+bias+ReLU)  ->  lrn  ->  maxpool
+            (full-resolution feature map round-trips HBM up to 3x)
+  fused:    one dispatch_conv with the layer-level ConvSpec
+            (LRN+pool in the conv epilogue; only the pooled map is written)
+
+— and emits measured wall-clock per layer next to the modeled HBM traffic
+(``core/winograd.py::conv2d_hbm_bytes`` fused-vs-unfused terms), writing the
+repo's first ``BENCH_*.json`` artifact.
+
+    PYTHONPATH=src python benchmarks/fused_pipeline.py [--full]
+        [--route {auto,direct,winograd,pallas}] [--check]
+        [--out BENCH_fused_pipeline.json]
+
+``--check`` exits nonzero unless the fused modeled bytes are strictly lower
+than unfused for every layer that fuses anything (the CI bench-smoke gate).
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
+import jax
+import numpy as np
+
+try:                      # package use (benchmarks.run)
+    from .common import emit, time_us
+except ImportError:       # direct `python benchmarks/fused_pipeline.py` (CI)
+    from common import emit, time_us
+
+import jax.numpy as jnp                                    # noqa: E402
+from repro.core.winograd import conv2d_hbm_bytes           # noqa: E402
+from repro.launch.serve import CNN_ROUTES, apply_cnn_route  # noqa: E402
+from repro.models import alexnet                           # noqa: E402
+from repro.nn import pooling                               # noqa: E402
+from repro.nn.conv import dispatch_conv, resolve_route     # noqa: E402
+
+
+def layer_rows(cfg, *, batch: int, seed: int = 0):
+    """Per-layer fused vs unfused: wall-clock (measured) + HBM bytes (model)."""
+    rng = np.random.default_rng(seed)
+    route = alexnet._route(cfg)
+    rows = []
+    h, c_in = cfg.image_size, cfg.in_channels
+    for i, (spec, c_out) in enumerate(zip(alexnet.layer_specs(cfg),
+                                          cfg.conv_channels)):
+        spec = spec.with_route(route)
+        unfused = dataclasses.replace(spec, fuse_lrn=False, fuse_pool=False)
+        x = jnp.asarray(rng.standard_normal((batch, h, h, c_in)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal(
+            (spec.kernel, spec.kernel, c_in // spec.groups, c_out))
+            * (spec.kernel ** -2), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+
+        def run_unfused(x, w, b, spec=spec, unfused=unfused):
+            return pooling.apply_epilogue(
+                dispatch_conv(unfused, x, w, b),
+                spec.lrn if spec.fuse_lrn else None,
+                (spec.pool_window, spec.pool_stride) if spec.fuse_pool
+                else None)
+
+        def run_fused(x, w, b, spec=spec):
+            return dispatch_conv(spec, x, w, b)
+
+        t_un = time_us(jax.jit(run_unfused), x, w, b)
+        t_fu = time_us(jax.jit(run_fused), x, w, b)
+        wino = resolve_route(spec) in ("winograd", "pallas")
+        hb = conv2d_hbm_bytes(
+            batch, h, h, c_in, c_out, spec.kernel,
+            spec.winograd_m if wino else None, stride=spec.stride,
+            padding=spec.padding, fuse_lrn=spec.fuse_lrn,
+            fuse_pool=spec.fuse_pool, pool_window=spec.pool_window,
+            pool_stride=spec.pool_stride)
+        rows.append({
+            "layer": f"conv{i+1}",
+            "route": resolve_route(spec),
+            "in_hw": h, "c_in": c_in, "c_out": c_out,
+            "fuse_lrn": spec.fuse_lrn, "fuse_pool": spec.fuse_pool,
+            "unfused_us": t_un, "fused_us": t_fu,
+            "unfused_hbm_bytes": hb["layer_unfused_bytes"],
+            "fused_hbm_bytes": hb["layer_fused_bytes"],
+            "hbm_savings": hb["fused_savings"],
+        })
+        h, c_in = spec.out_hw(h), c_out
+    return rows
+
+
+def check_rows(rows) -> list:
+    """Layers that fuse something but don't model strictly lower traffic."""
+    return [r for r in rows if (r["fuse_lrn"] or r["fuse_pool"])
+            and not r["fused_hbm_bytes"] < r["unfused_hbm_bytes"]]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 227px AlexNet (default: reduced config)")
+    ap.add_argument("--route", default="auto", choices=CNN_ROUTES)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_fused_pipeline.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every fused layer models strictly "
+                         "lower HBM bytes than unfused")
+    args = ap.parse_args(argv)
+
+    cfg = alexnet.AlexNetConfig()
+    if not args.full:
+        cfg = cfg.reduced()
+    cfg = apply_cnn_route(cfg, args.route)
+
+    rows = layer_rows(cfg, batch=args.batch)
+    emit([{"name": f"fused_pipeline/{r['layer']}",
+           "us_per_call": r["fused_us"],
+           "derived": (f"route={r['route']};unfused_us={r['unfused_us']:.0f}"
+                       f";unfused_MB={r['unfused_hbm_bytes']/2**20:.2f}"
+                       f";fused_MB={r['fused_hbm_bytes']/2**20:.2f}"
+                       f";hbm_savings={r['hbm_savings']:.2f}x")}
+          for r in rows])
+
+    artifact = {
+        "config": dataclasses.asdict(cfg),
+        "batch": args.batch,
+        "route": args.route,
+        "backend": jax.default_backend(),
+        "layers": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+
+    if args.check:
+        bad = check_rows(rows)
+        if bad:
+            print(f"fused_pipeline/CHECK_FAILED,0,"
+                  f"layers={[r['layer'] for r in bad]}")
+            return 1
+        print("fused_pipeline/CHECK_OK,0,"
+              "fused_bytes<unfused_bytes_for_all_fused_layers")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,7 +21,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 import numpy as np                                         # noqa: E402
 
 from repro.configs import ASSIGNED, get_config             # noqa: E402
-from repro.launch.serve import serve_images                # noqa: E402
+from repro.launch.serve import CNN_ROUTES, serve_images    # noqa: E402
 from repro.serving import Engine, Request, ServeConfig     # noqa: E402
 
 
@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--data-parallel", action="store_true",
                     help="CNN path: shard buckets over all JAX devices")
+    ap.add_argument("--route", default="auto", choices=CNN_ROUTES,
+                    help="CNN path: conv route (pallas = stream-buffered "
+                         "kernel end-to-end through CnnEngine)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

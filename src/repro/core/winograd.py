@@ -172,33 +172,43 @@ def _conv2d_winograd_single(x, w, b, *, m: int, padding: str, relu: bool):
 
 
 def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
-                    relu: bool = False, groups: int = 1):
-    """2D stride-1 convolution via F(m, r)xF(m, r), fused epilogue.
+                    relu: bool = False, groups: int = 1, lrn=None, pool=None):
+    """2D stride-1 convolution via F(m, r)xF(m, r), fused layer epilogue.
 
     x (B,H,W,C); w (r,r,C//groups,K).  The Winograd-domain multiply is
     expressed as n^2 independent (tiles x C) @ (C x K) matmuls (Lavin) — on
     TPU these are MXU-shaped GEMMs, the faithful analogue of the paper's PE
     dot products.  Signature mirrors the Pallas kernel
     (``repro.kernels.winograd.conv2d_winograd``): optional bias ``b (K,)``,
-    fused ``relu``, and ``groups`` as a batched vmap (no Python loop), so the
-    two routes stay numerically interchangeable.
+    fused ``relu``, ``groups`` as a batched vmap (no Python loop), plus the
+    layer epilogue — cross-channel LRN (``lrn``: LrnParams) then VALID
+    max-pool (``pool``: (window, stride)) — so the routes stay numerically
+    interchangeable.  LRN runs *after* group reassembly: its window spans
+    the full concatenated channel dim, including across group seams.
     """
     assert w.shape[0] == w.shape[1], "square filters only"
     if groups == 1:
-        return _conv2d_winograd_single(x, w, b, m=m, padding=padding,
-                                       relu=relu)
-    g = groups
-    r = w.shape[0]
-    B, H, W, Ct = x.shape
-    K = w.shape[-1] // g
-    C = Ct // g
-    xg = jnp.moveaxis(x.reshape(B, H, W, g, C), 3, 0)       # (g,B,H,W,C)
-    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g,r,r,C,K)
-    bg = None if b is None else b.reshape(g, K)
-    f = functools.partial(_conv2d_winograd_single, m=m, padding=padding,
-                          relu=relu)
-    yg = jax.vmap(f, in_axes=(0, 0, None if bg is None else 0))(xg, wg, bg)
-    return jnp.moveaxis(yg, 0, 3).reshape(B, *yg.shape[2:4], g * K)
+        y = _conv2d_winograd_single(x, w, b, m=m, padding=padding, relu=relu)
+    else:
+        g = groups
+        r = w.shape[0]
+        B, H, W, Ct = x.shape
+        K = w.shape[-1] // g
+        C = Ct // g
+        xg = jnp.moveaxis(x.reshape(B, H, W, g, C), 3, 0)    # (g,B,H,W,C)
+        wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)    # (g,r,r,C,K)
+        bg = None if b is None else b.reshape(g, K)
+        f = functools.partial(_conv2d_winograd_single, m=m, padding=padding,
+                              relu=relu)
+        yg = jax.vmap(f, in_axes=(0, 0, None if bg is None else 0))(xg, wg,
+                                                                    bg)
+        y = jnp.moveaxis(yg, 0, 3).reshape(B, *yg.shape[2:4], g * K)
+    if lrn is not None or pool is not None:
+        # function-level import: nn.pooling sits above core in the package
+        # graph (nn.conv imports this module at import time)
+        from ..nn.pooling import apply_epilogue
+        y = apply_epilogue(y, lrn, pool)
+    return y
 
 
 def conv2d_direct(x, w, *, stride: int = 1, padding: str = "SAME"):
@@ -210,45 +220,84 @@ def conv2d_direct(x, w, *, stride: int = 1, padding: str = "SAME"):
 
 
 def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
-                     m: int, *, dtype_bytes: int = 4, c_block: int = 128,
-                     k_block: int = 128, row_block: int = 8,
-                     padding: str = "SAME") -> dict:
-    """Modeled HBM feature-map traffic: host-tiled vs stream-buffered.
+                     m: int | None, *, dtype_bytes: int = 4,
+                     c_block: int = 128, k_block: int = 128,
+                     row_block: int = 8, padding: str = "SAME",
+                     stride: int = 1, fuse_lrn: bool = False,
+                     fuse_pool: bool = False, pool_window: int = 3,
+                     pool_stride: int = 2) -> dict:
+    """Modeled HBM feature-map traffic for one conv *layer*.
 
-    Host-tiled path (pre-refactor): the overlapping-tile tensor
-    (B, th, tw, n, n, C) is materialized in HBM by an XLA gather — written
-    once, then read once by the kernel — on top of the raw feature-map read,
-    an ~(n/m)^2 inflation of the dominant traffic term (paper §3.5's point).
+    Input side — host-tiled vs stream-buffered (Winograd routes, ``m`` set):
 
-    Stream-buffered path (in-kernel tiling): only the raw (halo-padded,
-    channel-padded to a c_block multiple) slab is read, re-fetched once per
-    (k_block, row_block) revisit because the channel-block reduction is the
-    innermost grid dimension.  Weights and outputs move identically on both
-    paths and are excluded.
+    * Host-tiled path (pre-refactor): the overlapping-tile tensor
+      (B, th, tw, n, n, C) is materialized in HBM by an XLA gather — written
+      once, then read once by the kernel — on top of the raw feature-map
+      read, an ~(n/m)^2 inflation of the dominant traffic term (§3.5).
+    * Stream-buffered path (in-kernel tiling): only the raw (halo-padded,
+      channel-padded to a c_block multiple) slab is read, re-fetched once
+      per (k_block, row_block) revisit because the channel-block reduction
+      is the innermost grid dimension.
+
+    ``m=None`` models a direct-route layer (AlexNet conv1/conv2): the raw
+    feature map is read once, no tile tensor exists on either path.
+
+    Output side — unfused vs fused layer epilogue (paper §3.5's headline:
+    feature maps never round-trip external memory between conv, norm, and
+    pool).  Unfused, the full-resolution conv output is written to HBM,
+    then re-read and re-written by LRN, then re-read by the pool which
+    writes the pooled map — up to 3 round-trips of the dominant tensor.
+    Fused, only the final (normalized, pooled) map is written once.
+    Weights move identically on all paths and are excluded.
     """
-    t = winograd_transform(m, r)
-    out_h, out_w = (H, W) if padding == "SAME" else (H - r + 1, W - r + 1)
-    th, tw = -(-out_h // t.m), -(-out_w // t.m)
+    if padding == "SAME":
+        out_h, out_w = -(-H // stride), -(-W // stride)
+    else:
+        out_h = (H - r) // stride + 1
+        out_w = (W - r) // stride + 1
     raw = B * H * W * C * dtype_bytes
-    tile_tensor = B * th * tw * t.n * t.n * C * dtype_bytes
-    host_tiled = raw + 2 * tile_tensor          # read raw + write/read tiles
-    Rb = min(row_block, th)
-    Hp = -(-th // Rb) * Rb * t.m + r - 1
-    Wp = tw * t.m + r - 1
-    Cb = min(c_block, C)
-    nc = -(-C // Cb)
-    Cp = nc * Cb                                # kernel pads C to c_block
-    # single channel block: the slab block index is constant across the
-    # (row, k) revisits, so Pallas elides the repeated DMA — one fetch per
-    # batch element.  Multiple c blocks: the innermost c dim changes the
-    # block index every step, so every (row, k) revisit re-streams C.
-    refetch = 1 if nc == 1 else -(-K // k_block) * (-(-th // Rb))
-    stream = B * Hp * Wp * Cp * dtype_bytes * refetch
+    if m is None:                               # direct route: no tile tensor
+        tile_tensor = 0
+        host_tiled = stream = raw
+    else:
+        t = winograd_transform(m, r)
+        th, tw = -(-out_h // t.m), -(-out_w // t.m)
+        tile_tensor = B * th * tw * t.n * t.n * C * dtype_bytes
+        host_tiled = raw + 2 * tile_tensor      # read raw + write/read tiles
+        Rb = min(row_block, th)
+        Hp = -(-th // Rb) * Rb * t.m + r - 1
+        Wp = tw * t.m + r - 1
+        Cb = min(c_block, C)
+        nc = -(-C // Cb)
+        Cp = nc * Cb                            # kernel pads C to c_block
+        # single channel block: the slab block index is constant across the
+        # (row, k) revisits, so Pallas elides the repeated DMA — one fetch
+        # per batch element.  Multiple c blocks: the innermost c dim changes
+        # the block index every step, so every (row, k) revisit re-streams C.
+        refetch = 1 if nc == 1 else -(-K // k_block) * (-(-th // Rb))
+        stream = B * Hp * Wp * Cp * dtype_bytes * refetch
+
+    conv_out = B * out_h * out_w * K * dtype_bytes
+    ph = max((out_h - pool_window) // pool_stride + 1, 0)
+    pw = max((out_w - pool_window) // pool_stride + 1, 0)
+    pooled = B * ph * pw * K * dtype_bytes
+    final = pooled if fuse_pool else conv_out
+    # unfused epilogue: conv writes out; LRN reads + rewrites it; pool reads
+    # the (normalized) map and writes the pooled one
+    unfused_epilogue = (conv_out + (2 * conv_out if fuse_lrn else 0)
+                        + ((conv_out + pooled) if fuse_pool else 0))
+    layer_unfused = stream + unfused_epilogue
+    layer_fused = stream + final
     return {
         "host_tiled_bytes": host_tiled,
         "stream_bytes": stream,
         "tile_inflation": tile_tensor / raw,
         "savings": host_tiled / stream,
+        "conv_out_bytes": conv_out,
+        "final_out_bytes": final,
+        "layer_unfused_bytes": layer_unfused,
+        "layer_fused_bytes": layer_fused,
+        "fused_savings": layer_unfused / layer_fused,
     }
 
 

@@ -68,17 +68,20 @@ def conv1d_depthwise_causal(x, w, b=None, *, pallas: bool = True,
 # 2D conv (inference path; training uses the differentiable jnp route)
 # ---------------------------------------------------------------------------
 def conv2d(x, w, b=None, *, m: int = 4, padding: str = "SAME",
-           relu: bool = False, groups: int = 1, pallas: bool = True,
-           interpret: bool | None = None):
-    """Fused stride-1 Winograd conv: optional bias, fused ReLU, groups.
+           relu: bool = False, groups: int = 1, lrn=None, pool=None,
+           pallas: bool = True, interpret: bool | None = None):
+    """Fused stride-1 Winograd conv layer: bias, ReLU, groups, LRN, pool.
 
     Both routes share one signature so they stay numerically
     interchangeable: ``pallas=True`` runs the stream-buffered Pallas kernel
-    (in-kernel tiling + channel-block reduction), ``pallas=False`` the
-    differentiable pure-jnp Winograd path.
+    (in-kernel tiling + channel-block reduction + in-VMEM LRN/pool
+    epilogue), ``pallas=False`` the differentiable pure-jnp Winograd path.
+    ``lrn`` is an :class:`repro.nn.pooling.LrnParams` (or None); ``pool`` is
+    a (window, stride) pair for a VALID max-pool (or None).
     """
     if pallas:
         return _k.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
-                                  groups=groups, interpret=_interp(interpret))
+                                  groups=groups, lrn=lrn, pool=pool,
+                                  interpret=_interp(interpret))
     return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
-                              groups=groups)
+                              groups=groups, lrn=lrn, pool=pool)

@@ -17,12 +17,14 @@ def conv1d_depthwise_causal_ref(x, w, b=None):
 
 
 def conv2d_ref(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
-               groups: int = 1, relu: bool = False):
-    """lax direct conv with the fused-pipeline signature.
+               groups: int = 1, relu: bool = False, lrn=None, pool=None):
+    """lax direct conv with the fused-layer signature.
 
-    x (B,H,W,C), w (r,r,C//groups,K); optional bias (K,), fused ReLU, and
-    grouped convolution via ``feature_group_count`` — the oracle for every
-    route of ``repro.nn.conv.dispatch_conv``.
+    x (B,H,W,C), w (r,r,C//groups,K); optional bias (K,), fused ReLU,
+    grouped convolution via ``feature_group_count``, and the layer epilogue
+    — cross-channel LRN (``lrn``: LrnParams) then VALID max-pool (``pool``:
+    (window, stride)) — the oracle for every route of
+    ``repro.nn.conv.dispatch_conv``.
     """
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32), w.astype(jnp.float32),
@@ -33,4 +35,9 @@ def conv2d_ref(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
         y = y + b.astype(y.dtype)
     if relu:
         y = jnp.maximum(y, 0.0)
+    if lrn is not None or pool is not None:
+        # function-level import: nn.pooling sits above this module in the
+        # package graph (nn.conv imports this file at import time)
+        from ...nn.pooling import apply_epilogue
+        y = apply_epilogue(y, lrn, pool)
     return y.astype(x.dtype)

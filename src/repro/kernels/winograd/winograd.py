@@ -26,6 +26,7 @@ AlexNet-sized layers.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -160,11 +161,203 @@ def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
         out_ref[0] = y.astype(out_ref.dtype)
 
 
+def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
+                         acc_ref, y_ref, *, relu: bool, lrn, pool,
+                         row_step: int):
+    """Layer-fused variant: conv + bias + ReLU + LRN + max-pool in VMEM.
+
+    The k grid dimension spans *all* g*K output channels (groups included);
+    each (k, c=last) step deposits its channel block into the full-channel
+    ``y_ref`` scratch, and the very last (k, c) step runs the cross-channel
+    LRN + spatial max-pool epilogue and writes only the pooled, normalized
+    slab to HBM — the conv-resolution feature map never leaves VMEM (§3.5).
+    """
+    mm, n = at_ref.shape
+    _, _, Rt, tw, Kb = acc_ref.shape
+    ib = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+    c = pl.program_id(3)
+    nc = pl.num_programs(3)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # raw slab rows for this output-owning block; successive blocks overlap
+    # by Rt - row_step tile rows (the output-side pool halo, kept in VMEM)
+    rows = x_ref[0, pl.ds(ib * row_step * mm, Rt * mm + n - mm)]
+    Cb = rows.shape[-1]
+    tiles = jnp.stack(
+        [jnp.stack(
+            [jax.lax.slice(rows, (di, dj, 0),
+                           (di + (Rt - 1) * mm + 1, dj + (tw - 1) * mm + 1,
+                            Cb), (mm, mm, 1))
+             for dj in range(n)], axis=0)
+         for di in range(n)], axis=0).astype(jnp.float32)
+    BT = bt_ref[...]
+    v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
+    u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
+    acc_ref[...] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
+
+    @pl.when(c == nc - 1)
+    def _store_kblock():
+        AT = at_ref[...]
+        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[...])
+        y = jnp.einsum("qj,pjrwk->rpwqk", AT, y)    # (Rt, m, tw, m, Kb)
+        y = y.reshape(Rt * mm, tw * mm, Kb) + b_ref[0]
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        # channel blocks are group-major contiguous, so block k lands at
+        # offset k*Kb of the full concatenated channel dim
+        y_ref[:, :, pl.ds(k * Kb, Kb)] = y
+
+    @pl.when((c == nc - 1) & (k == nk - 1))
+    def _epilogue():
+        yf = y_ref[...]                             # (Rt*m, tw*m, Kfull)
+        Kf = yf.shape[-1]
+        if lrn is not None:
+            # cross-channel squared-sum as one (rows*cols, Kf) @ (Kf, Kf)
+            # banded matmul — MXU-shaped, like the conv GEMMs themselves
+            half = lrn.n // 2
+            ci = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 0)
+            cj = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 1)
+            band = (jnp.abs(ci - cj) <= half).astype(jnp.float32)
+            win = jax.lax.dot_general(
+                (yf * yf).reshape(-1, Kf), band, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).reshape(yf.shape)
+            yf = yf / jnp.power(lrn.k + lrn.alpha / lrn.n * win, lrn.beta)
+        if pool is not None:
+            pwin, ps = pool
+            Pr, Pw = out_ref.shape[1], out_ref.shape[2]
+            yp = None
+            for di in range(pwin):
+                for dj in range(pwin):
+                    sl = jax.lax.slice(
+                        yf, (di, dj, 0),
+                        (di + ps * (Pr - 1) + 1, dj + ps * (Pw - 1) + 1, Kf),
+                        (ps, ps, 1))
+                    yp = sl if yp is None else jnp.maximum(yp, sl)
+            out_ref[0] = yp.astype(out_ref.dtype)
+        else:
+            out_ref[0] = yf[: out_ref.shape[1]].astype(out_ref.dtype)
+
+
+def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
+                       pool_row_block, row_block, c_block, k_block,
+                       interpret):
+    """pallas_call setup for the layer-fused kernel (lrn and/or pool set).
+
+    Grid restructure vs the plain kernel: the batch dim is B (groups move
+    into the k dim so the epilogue sees the full concatenated channel dim —
+    LRN windows legitimately cross group seams, as in Krizhevsky conv2),
+    and each row step *owns a pooled output region*: it computes the
+    Rt = ceil((ps*(Pb-1)+pwin)/m) Winograd tile rows its Pb pooled rows
+    need, advancing only row_step = ps*Pb/m tile rows per step, so the
+    pool window never crosses a grid step's slab.
+    """
+    r = w.shape[0]
+    mm = t.m
+    B, H, W, Ct = x.shape
+    g = groups
+    C, K = Ct // g, w.shape[-1] // g
+    if padding == "SAME":
+        ph_pad = r // 2
+        out_h, out_w = H, W
+    else:
+        ph_pad = 0
+        out_h, out_w = H - r + 1, W - r + 1
+    tw = -(-out_w // mm)
+
+    if pool is not None:
+        pwin, ps = pool
+        ph_out = (out_h - pwin) // ps + 1
+        pw_out = (out_w - pwin) // ps + 1
+        assert ph_out >= 1 and pw_out >= 1, (
+            f"pool {pool} larger than conv output {out_h}x{out_w}")
+        # alignment: each step's first conv row ps*Pb*i must be tile-aligned
+        q = mm // math.gcd(ps, mm)
+        Pb = q * (-(-min(pool_row_block, ph_out) // q))
+        row_step = ps * Pb // mm
+        Rt = -(-(ps * (Pb - 1) + pwin) // mm)
+        npr = -(-ph_out // Pb)
+        rows_out, w_out = Pb, pw_out
+    else:
+        th = -(-out_h // mm)
+        Rt = row_step = min(row_block, th)
+        npr = -(-th // Rt)
+        rows_out, w_out = Rt * mm, tw * mm
+    thp = (npr - 1) * row_step + Rt             # last step's read must fit
+    Hp = thp * mm + r - 1
+    Wp = tw * mm + r - 1
+
+    Cb = min(c_block, C)
+    padc = (-C) % Cb
+    Cp = C + padc
+    # no K padding: zero pad channels inside an LRN window would shadow the
+    # real cross-seam neighbours, so blocks must tile K exactly
+    Kb = min(k_block, K)
+    if K % Kb:
+        Kb = K
+    nkb = K // Kb
+    Kfull = g * K
+
+    x5 = x.reshape(B, H, W, g, C)
+    if padc:
+        x5 = jnp.pad(x5, ((0, 0), (0, 0), (0, 0), (0, 0), (0, padc)))
+    xg = x5.reshape(B, H, W, g * Cp)
+    xg = jnp.pad(xg, ((0, 0), (ph_pad, Hp - H - ph_pad),
+                      (ph_pad, Wp - W - ph_pad), (0, 0)))
+
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+    Gj = jnp.asarray(t.G, jnp.float32)
+    wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
+    if padc:
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padc), (0, 0)))
+    bias = jnp.zeros((Kfull,), x.dtype) if b is None else b
+    bg = bias.reshape(g * nkb, Kb)
+
+    ncb = Cp // Cb
+    kernel = functools.partial(_conv2d_fused_kernel, relu=relu, lrn=lrn,
+                               pool=pool, row_step=row_step)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, npr, g * nkb, ncb),
+        in_specs=[
+            pl.BlockSpec((1, Hp, Wp, Cb),
+                         lambda bb, i, k, c: (bb, 0, 0, (k // nkb) * ncb + c)),
+            pl.BlockSpec((1, t.n, t.n, Cb, Kb),
+                         lambda bb, i, k, c: (k // nkb, 0, 0, c, k % nkb)),
+            pl.BlockSpec((1, Kb), lambda bb, i, k, c: (k, 0)),
+            pl.BlockSpec((t.n, t.n), lambda bb, i, k, c: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda bb, i, k, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows_out, w_out, Kfull),
+                               lambda bb, i, k, c: (bb, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, npr * rows_out, w_out, Kfull),
+                                       x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((t.n, t.n, Rt, tw, Kb), jnp.float32),
+            pltpu.VMEM((Rt * mm, tw * mm, Kfull), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
+                                            ARBITRARY),
+        interpret=interpret,
+    )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
+      jnp.asarray(t.AT, jnp.float32))
+
+    if pool is not None:
+        return out[:, :ph_out]
+    return out[:, :out_h, :out_w]
+
+
 @functools.partial(jax.jit, static_argnames=("m", "padding", "relu", "groups",
-                                             "row_block", "c_block", "k_block",
-                                             "interpret"))
+                                             "lrn", "pool", "row_block",
+                                             "c_block", "k_block",
+                                             "pool_row_block", "interpret"))
 def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
-                    relu: bool = False, groups: int = 1, row_block: int = 8,
+                    relu: bool = False, groups: int = 1, lrn=None, pool=None,
+                    row_block: int = 8, pool_row_block: int = 4,
                     c_block: int = 128, k_block: int = 128,
                     interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
@@ -173,6 +366,14 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     the grid pipeline; tiles, transforms, Winograd GEMMs, channel-block
     accumulation, and the bias+ReLU epilogue all happen in-kernel.  Groups
     fold into the batch grid dimension (weight block picked by ``bb // B``).
+
+    Layer fusion (paper §3.5): with ``lrn`` (an LrnParams-like object) and/or
+    ``pool`` ((window, stride)) the cross-channel LRN and VALID max-pool run
+    in the kernel epilogue too — the grid is restructured so each row step
+    owns a pooled output region (``_conv2d_fused_call``), the k loop
+    deposits all g*K channel blocks into a full-channel VMEM scratch (LRN is
+    cross-channel, spanning group seams), and only the pooled, normalized
+    feature map is ever written to HBM.
 
     Stream-buffer residency (paper §3.5): like the DLA — whose stream
     buffers hold whole AlexNet feature-map planes in M20K — one full
@@ -185,6 +386,12 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     """
     r = w.shape[0]
     t = winograd_transform(m, r)
+    if lrn is not None or pool is not None:
+        return _conv2d_fused_call(x, w, b, t=t, padding=padding, relu=relu,
+                                  groups=groups, lrn=lrn, pool=pool,
+                                  pool_row_block=pool_row_block,
+                                  row_block=row_block, c_block=c_block,
+                                  k_block=k_block, interpret=interpret)
     B, H, W, Ct = x.shape
     Kt = w.shape[-1]
     g = groups

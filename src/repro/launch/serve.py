@@ -10,6 +10,7 @@ paper's own workload) goes through the bucketed, double-buffered
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
@@ -17,9 +18,27 @@ from ..configs import ASSIGNED, get_config
 from ..serving import (CnnEngine, CnnServeConfig, Engine, ImageRequest,
                        Request, ServeConfig)
 
+CNN_ROUTES = ("auto", "direct", "winograd", "pallas")
+
+
+def apply_cnn_route(cfg, route: str):
+    """Map a conv route name onto the CNN model config's route knobs.
+
+    ``auto`` keeps the config's own preference; the explicit routes force
+    every eligible conv through direct / pure-jnp Winograd / the Pallas
+    kernel (interpret mode off-TPU), so the serving path can exercise the
+    stream-buffered kernel end-to-end through :class:`CnnEngine`.
+    """
+    assert route in CNN_ROUTES, route
+    if route == "auto" or getattr(cfg, "family", None) != "cnn":
+        return cfg
+    return dataclasses.replace(cfg, use_winograd=route != "direct",
+                               use_pallas=route == "pallas")
+
 
 def serve_images(cfg, args) -> int:
     """Image-classification serving path (paper §3.5/§3.7 regime)."""
+    cfg = apply_cnn_route(cfg, getattr(args, "route", "auto"))
     scfg = CnnServeConfig(max_batch=args.max_batch,
                           data_parallel=args.data_parallel)
     eng = CnnEngine(cfg, scfg, seed=args.seed)
@@ -54,6 +73,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--data-parallel", action="store_true",
                     help="CNN path: shard buckets over all JAX devices")
+    ap.add_argument("--route", default="auto", choices=CNN_ROUTES,
+                    help="CNN path: conv route (pallas = stream-buffered "
+                         "kernel, interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

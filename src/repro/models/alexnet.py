@@ -1,20 +1,27 @@
 """AlexNet — the paper's own benchmark network, end-to-end in JAX.
 
-All layers run on-device (the paper's headline point vs conv-only FPGA work):
-conv (Winograd F(4,3) for the 3x3 layers, direct for conv1/conv2 as in the
-paper), ReLU, cross-channel LRN, max-pool, and the batched FC layers (§3.7).
-Grouped convolutions (conv2/4/5) follow Krizhevsky.
+All layers run on-device (the paper's headline point vs conv-only FPGA
+work): conv (Winograd F(4,3) for the 3x3 layers, direct for conv1/conv2 as
+in the paper), ReLU, cross-channel LRN, max-pool, and the batched FC layers
+(§3.7).  Each conv *layer* — including its LRN/pool epilogue — is one
+:class:`~repro.nn.conv.ConvSpec`, so on the Pallas route the post-conv
+stages run in VMEM and the full-resolution feature map never round-trips
+HBM between conv, norm, and pool (§3.5).  Grouped convolutions (conv2/4/5)
+follow Krizhevsky.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
-from typing import Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels.bfp_matmul.ops import bfp_matmul
 from ..nn.conv import ConvSpec, dispatch_conv
 from ..nn.module import param, split
+from ..nn.pooling import LrnParams
 
 
 @dataclass(frozen=True)
@@ -29,6 +36,7 @@ class AlexNetConfig:
     use_winograd: bool = True      # F(4,3) on the 3x3 stride-1 layers
     use_pallas: bool = False       # route 3x3 convs through the Pallas kernel
     fc_batch: int = 96             # paper's S_batch
+    fc_bfp: bool = False           # shared-exponent BFP FC weight stream §3.6
     lrn_n: int = 5
     lrn_k: float = 2.0
     lrn_alpha: float = 1e-4
@@ -40,17 +48,25 @@ class AlexNetConfig:
                        fc_dims=(64, 48, 10), num_classes=10, fc_batch=4)
 
 
-# (ConvSpec, lrn?, pool?) per conv layer — Krizhevsky geometry; every conv
-# fuses bias+ReLU and routes through repro.nn.conv.dispatch_conv (the 3x3
-# stride-1 layers are Winograd-eligible; conv1/conv2 go direct, as in the
-# paper).
-_LAYERS = [
-    (ConvSpec(kernel=11, stride=4, padding="VALID", relu=True), True, True),
-    (ConvSpec(kernel=5, groups=2, relu=True), True, True),
-    (ConvSpec(kernel=3, relu=True), False, False),
-    (ConvSpec(kernel=3, groups=2, relu=True), False, False),
-    (ConvSpec(kernel=3, groups=2, relu=True), False, True),
-]
+def layer_specs(cfg: "AlexNetConfig") -> List[ConvSpec]:
+    """The five conv layers as fused layer-level specs (Krizhevsky geometry).
+
+    conv1/conv2 carry LRN + pool, conv5 pool only; every conv fuses
+    bias+ReLU and routes through ``repro.nn.conv.dispatch_conv`` (the 3x3
+    stride-1 layers are Winograd-eligible; conv1/conv2 go direct, as in the
+    paper).
+    """
+    lrn = LrnParams(n=cfg.lrn_n, k=cfg.lrn_k, alpha=cfg.lrn_alpha,
+                    beta=cfg.lrn_beta)
+    return [
+        ConvSpec(kernel=11, stride=4, padding="VALID", relu=True,
+                 fuse_lrn=True, lrn=lrn, fuse_pool=True),
+        ConvSpec(kernel=5, groups=2, relu=True,
+                 fuse_lrn=True, lrn=lrn, fuse_pool=True),
+        ConvSpec(kernel=3, relu=True),
+        ConvSpec(kernel=3, groups=2, relu=True),
+        ConvSpec(kernel=3, groups=2, relu=True, fuse_pool=True),
+    ]
 
 
 def _route(cfg: "AlexNetConfig") -> str:
@@ -62,11 +78,11 @@ def _route(cfg: "AlexNetConfig") -> str:
 
 def init(key, cfg: AlexNetConfig):
     dtype = jnp.dtype(cfg.dtype)
-    keys = split(key, len(_LAYERS) + len(cfg.fc_dims))
+    specs = layer_specs(cfg)
+    keys = split(key, len(specs) + len(cfg.fc_dims))
     p = {}
     c_in = cfg.in_channels
-    for i, ((spec, _, _), c_out) in enumerate(zip(_LAYERS,
-                                                  cfg.conv_channels)):
+    for i, (spec, c_out) in enumerate(zip(specs, cfg.conv_channels)):
         k, g = spec.kernel, spec.groups
         p[f"conv{i+1}"] = {
             "w": param(keys[i], (k, k, c_in // g, c_out), dtype,
@@ -77,7 +93,7 @@ def init(key, cfg: AlexNetConfig):
     d_in = _fc_input_dim(cfg)
     for j, d_out in enumerate(cfg.fc_dims):
         p[f"fc{j+6}"] = {
-            "w": param(keys[len(_LAYERS) + j], (d_in, d_out), dtype),
+            "w": param(keys[len(specs) + j], (d_in, d_out), dtype),
             "b": jnp.zeros((d_out,), dtype),
         }
         d_in = d_out
@@ -86,11 +102,8 @@ def init(key, cfg: AlexNetConfig):
 
 def _feature_hw(cfg: AlexNetConfig) -> int:
     h = cfg.image_size
-    for (spec, _, pool) in _LAYERS:
-        h = ((h - spec.kernel) // spec.stride + 1 if spec.padding == "VALID"
-             else -(-h // spec.stride))
-        if pool:
-            h = (h - 3) // 2 + 1
+    for spec in layer_specs(cfg):
+        h = spec.out_hw(h)
     return h
 
 
@@ -98,42 +111,40 @@ def _fc_input_dim(cfg: AlexNetConfig) -> int:
     return _feature_hw(cfg) ** 2 * cfg.conv_channels[-1]
 
 
-def _lrn(x, cfg: AlexNetConfig):
-    """Cross-channel local response normalization (paper §2.2)."""
-    sq = jnp.square(x)
-    half = cfg.lrn_n // 2
-    pad = jnp.pad(sq, ((0, 0), (0, 0), (0, 0), (half, half)))
-    win = sum(pad[..., i:i + x.shape[-1]] for i in range(cfg.lrn_n))
-    return x / jnp.power(cfg.lrn_k + cfg.lrn_alpha / cfg.lrn_n * win,
-                         cfg.lrn_beta)
-
-
-def _maxpool(x):
-    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
-                                 (1, 2, 2, 1), "VALID")
-
-
 def features(params, cfg: AlexNetConfig, images):
-    """images (B, H, W, 3) -> flattened conv features (B, d)."""
+    """images (B, H, W, 3) -> flattened conv features (B, d).
+
+    One ``dispatch_conv`` per layer; the LRN/pool epilogues live in the
+    layer specs, so there are no free-standing norm/pool calls here.
+    """
     x = images.astype(jnp.dtype(cfg.dtype))
     route = _route(cfg)
-    for i, (spec, lrn, pool) in enumerate(_LAYERS):
+    for i, spec in enumerate(layer_specs(cfg)):
         p = params[f"conv{i+1}"]
         x = dispatch_conv(spec.with_route(route), x, p["w"], p["b"])
-        if lrn:
-            x = _lrn(x, cfg)
-        if pool:
-            x = _maxpool(x)
     return x.reshape(x.shape[0], -1)
 
 
 def classifier(params, cfg: AlexNetConfig, feats):
-    """Batched FC layers (paper §3.7: weights streamed, features cached)."""
+    """Batched FC layers (paper §3.7: weights streamed, features cached).
+
+    With ``cfg.fc_bfp`` the weight stream moves as shared-exponent int8
+    block floating point (§3.6, ``kernels/bfp_matmul``) — 1 byte/value on
+    the paper's stated FC bandwidth bottleneck — instead of f32.
+    """
     x = feats
     n_fc = len(cfg.fc_dims)
     for j in range(n_fc):
         p = params[f"fc{j+6}"]
-        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if cfg.fc_bfp:
+            # block must tile the contraction dim (reduced configs have
+            # small FC widths); 32 is the paper-faithful group size
+            blk = math.gcd(x.shape[-1], 32)
+            x = (bfp_matmul(x.astype(jnp.float32),
+                            p["w"].astype(jnp.float32), block=blk)
+                 + p["b"].astype(jnp.float32)).astype(x.dtype)
+        else:
+            x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
         if j < n_fc - 1:
             x = jax.nn.relu(x)
     return x

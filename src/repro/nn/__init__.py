@@ -1,1 +1,2 @@
-from . import attention, blocks, conv, flash, layers, mlp, module, moe, ssd  # noqa: F401
+from . import (attention, blocks, conv, flash, layers, mlp, module, moe,  # noqa: F401
+               pooling, ssd)

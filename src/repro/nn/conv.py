@@ -1,22 +1,30 @@
-"""Unified conv dispatch: declarative ConvSpec -> one entry point.
+"""Unified conv-layer dispatch: declarative ConvSpec -> one entry point.
 
-Models declare each conv layer as a :class:`ConvSpec` (kernel geometry,
-groups, fusion flags, route) and call :func:`dispatch_conv`; all routing
-policy — Winograd eligibility, Pallas vs jnp, direct fallback, grouped
-batching — lives here instead of ad-hoc per-model branching.
+Models declare each conv *layer* as a :class:`ConvSpec` — kernel geometry,
+groups, fusion flags (bias, ReLU, cross-channel LRN, max-pool), route — and
+call :func:`dispatch_conv`; all routing policy — Winograd eligibility,
+Pallas vs jnp, direct fallback, grouped batching — lives here instead of
+ad-hoc per-model branching.
 
 Routes
 ------
 ``direct``    ``lax.conv_general_dilated`` (any kernel/stride; groups via
-              ``feature_group_count``), bias + ReLU applied as epilogue.
+              ``feature_group_count``), bias/ReLU/LRN/pool as epilogue.
 ``winograd``  pure-jnp F(m,r) x F(m,r) path (differentiable; training).
 ``pallas``    stream-buffered Pallas kernel (in-kernel tiling, channel-block
-              reduction, fused bias+ReLU epilogue; inference).
+              reduction, fused bias+ReLU+LRN+pool epilogue; inference).
 ``auto``      ``winograd`` when eligible, else ``direct``.
 
 Winograd routes require stride 1 and a 3x3 kernel (the paper's F(4,3)
 layers); ineligible specs silently fall back to ``direct`` so models never
 need their own conv branching.
+
+Layer-level fusion (paper §3.5): with ``fuse_lrn`` / ``fuse_pool`` the
+post-conv stages run inside the conv call — in VMEM on the Pallas route, so
+the full-resolution feature map never round-trips HBM between conv, norm,
+and pool.  All three routes share one fused signature and stay numerically
+interchangeable against the unfused conv -> lrn -> maxpool reference
+(``repro.nn.pooling``).
 """
 from __future__ import annotations
 
@@ -27,25 +35,37 @@ import jax.numpy as jnp
 from ..core.winograd import conv2d_winograd
 from ..kernels.winograd.ops import conv2d as pallas_conv2d
 from ..kernels.winograd.ref import conv2d_ref
+from .pooling import LrnParams, apply_epilogue, pooled_hw
 
 ROUTES = ("auto", "direct", "winograd", "pallas")
 
 
 @dataclass(frozen=True)
 class ConvSpec:
-    """Declarative description of one 2D conv layer (NHWC / HWIO)."""
+    """Declarative description of one 2D conv *layer* (NHWC / HWIO).
+
+    Beyond the conv itself, the spec owns the whole layer epilogue: bias,
+    ReLU, cross-channel LRN, and spatial max-pool, in that order (the
+    Krizhevsky layer graph).  Flagged stages are fused into the conv call.
+    """
     kernel: int
     stride: int = 1
     padding: str = "SAME"           # "SAME" | "VALID"
     groups: int = 1
     fuse_bias: bool = True          # apply bias inside the conv call
     relu: bool = False              # fused ReLU epilogue
+    fuse_lrn: bool = False          # fused cross-channel LRN epilogue
+    lrn: LrnParams = LrnParams()    # LRN constants (used when fuse_lrn)
+    fuse_pool: bool = False         # fused VALID max-pool epilogue
+    pool_window: int = 3
+    pool_stride: int = 2
     route: str = "auto"             # "auto" | "direct" | "winograd" | "pallas"
     winograd_m: int = 4             # F(m, 3) output tile size
 
     def __post_init__(self):
         assert self.route in ROUTES, self.route
         assert self.padding in ("SAME", "VALID"), self.padding
+        assert self.pool_window >= 1 and self.pool_stride >= 1
 
     def with_route(self, route: str) -> "ConvSpec":
         return replace(self, route=route)
@@ -53,6 +73,14 @@ class ConvSpec:
     @property
     def winograd_eligible(self) -> bool:
         return self.stride == 1 and self.kernel == 3
+
+    def out_hw(self, h: int) -> int:
+        """Layer output extent for input extent ``h`` (conv then pool)."""
+        h = ((h - self.kernel) // self.stride + 1 if self.padding == "VALID"
+             else -(-h // self.stride))
+        if self.fuse_pool:
+            h = pooled_hw(h, self.pool_window, self.pool_stride)
+        return h
 
 
 def resolve_route(spec: ConvSpec) -> str:
@@ -69,28 +97,37 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
 
     Grouped convs are batched (``feature_group_count`` on the direct route,
     a group-folded kernel grid / vmap on the Winograd routes) — never a
-    Python loop over groups.
+    Python loop over groups.  LRN always spans the *full* concatenated
+    channel dimension, including across group seams (Krizhevsky conv2).
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
-    # Unfused bias is an epilogue *between* conv and ReLU (conv -> +b -> relu),
-    # so the in-kernel ReLU must be deferred along with it.
+    # Unfused bias is an epilogue *between* conv and ReLU
+    # (conv -> +b -> relu -> lrn -> pool), so every later stage must be
+    # deferred along with it.
     defer_bias = b is not None and not spec.fuse_bias
     bias = b if spec.fuse_bias else None
     relu = spec.relu and not defer_bias
+    lrn_p = spec.lrn if spec.fuse_lrn and not defer_bias else None
+    pool = ((spec.pool_window, spec.pool_stride)
+            if spec.fuse_pool and not defer_bias else None)
     route = resolve_route(spec)
     if route == "direct":
         y = conv2d_ref(x, w, bias, stride=spec.stride, padding=spec.padding,
-                       groups=spec.groups, relu=relu)
+                       groups=spec.groups, relu=relu, lrn=lrn_p, pool=pool)
     elif route == "pallas":
         y = pallas_conv2d(x, w, bias, m=spec.winograd_m, padding=spec.padding,
-                          relu=relu, groups=spec.groups, pallas=True,
-                          interpret=interpret)
+                          relu=relu, groups=spec.groups, lrn=lrn_p, pool=pool,
+                          pallas=True, interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
                             padding=spec.padding, relu=relu,
-                            groups=spec.groups)
+                            groups=spec.groups, lrn=lrn_p, pool=pool)
     if defer_bias:
         y = y + b.astype(y.dtype)
         if spec.relu:
             y = jnp.maximum(y, 0)
+        y = apply_epilogue(y,
+                           spec.lrn if spec.fuse_lrn else None,
+                           (spec.pool_window, spec.pool_stride)
+                           if spec.fuse_pool else None)
     return y

@@ -1,0 +1,69 @@
+"""Post-conv layer epilogues: cross-channel LRN + spatial max-pool.
+
+The paper's DLA runs *every* AlexNet stage on-chip — conv, ReLU, norm, pool
+(§2.2, §3.5) — so feature maps never round-trip external memory between
+layers.  These are the shared reference implementations of the two non-conv
+stages; the layer-level :class:`~repro.nn.conv.ConvSpec` fuses both into the
+conv call (in-kernel on the Pallas route, in-function on the jnp/direct
+routes), and this module is the single numerical definition all three routes
+and the tests compare against.
+
+This module is import-bottom (jax only) so the kernel/core layers below
+``nn.conv`` can use it without an import cycle.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LrnParams:
+    """Krizhevsky cross-channel local response normalization constants.
+
+    y[c] = x[c] / (k + alpha/n * sum_{|d| <= n//2} x[c+d]^2)^beta
+    """
+    n: int = 5
+    k: float = 2.0
+    alpha: float = 1e-4
+    beta: float = 0.75
+
+    def __post_init__(self):
+        assert self.n >= 1 and self.n % 2 == 1, self.n
+
+
+def lrn(x, p: LrnParams = LrnParams()):
+    """Cross-channel LRN on NHWC via one ``reduce_window`` squared-sum.
+
+    The window runs over the channel axis only; SAME padding contributes
+    zeros at the channel boundaries, exactly like the explicit zero-pad of
+    the textbook formulation.
+    """
+    win = jax.lax.reduce_window(jnp.square(x), 0.0, jax.lax.add,
+                                (1, 1, 1, p.n), (1, 1, 1, 1), "SAME")
+    return x / jnp.power(p.k + p.alpha / p.n * win, p.beta)
+
+
+def maxpool2d(x, window: int = 3, stride: int = 2):
+    """VALID spatial max-pool on NHWC (AlexNet: overlapping 3x3/stride-2)."""
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, window, window, 1),
+                                 (1, stride, stride, 1), "VALID")
+
+
+def pooled_hw(h: int, window: int = 3, stride: int = 2) -> int:
+    """Output extent of a VALID ``window``/``stride`` pool over ``h``."""
+    return (h - window) // stride + 1
+
+
+def apply_epilogue(y, lrn_params=None, pool=None):
+    """Post-conv layer epilogue: LRN (LrnParams or None) then max-pool
+    ((window, stride) or None) — the unfused reference the fused routes
+    must match, shared by all conv routes, benchmarks, and tests."""
+    if lrn_params is not None:
+        y = lrn(y, lrn_params)
+    if pool is not None:
+        y = maxpool2d(y, *pool)
+    return y

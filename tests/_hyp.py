@@ -9,10 +9,13 @@ installed.
 import pytest
 
 try:
-    from hypothesis import given, settings, strategies as st
+    from hypothesis import assume, given, settings, strategies as st
     HAVE_HYPOTHESIS = True
 except ImportError:           # tier-1 runs without extras
     HAVE_HYPOTHESIS = False
+
+    def assume(*_a, **_k):
+        return True
 
     class _AnyStrategy:
         """Stands in for ``strategies`` — any strategy call returns None."""

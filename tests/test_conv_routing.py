@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _hyp import HAVE_HYPOTHESIS, given, settings, st  # optional shim
+from _hyp import HAVE_HYPOTHESIS, assume, given, settings, st  # optional shim
 
 from repro.kernels.winograd.ref import conv2d_ref
 from repro.nn.conv import ROUTES, ConvSpec, dispatch_conv, resolve_route
@@ -80,38 +80,52 @@ def test_invalid_spec_rejected():
 # ---------------------------------------------------------------------------
 # property tests: route equivalence on random geometry (tests/_hyp.py shim)
 # ---------------------------------------------------------------------------
+def _conv_out_hw(h, kernel, stride, padding):
+    return ((h - kernel) // stride + 1 if padding == "VALID"
+            else -(-h // stride))
+
+
 def _run_spec(route, kernel, stride, padding, groups, relu, fuse_bias, seed,
-              interpret=None):
+              interpret=None, fuse_lrn=False, fuse_pool=False, H=8):
     rng = np.random.default_rng(seed)
     c_in, c_out = 4 * groups, 2 * groups
-    x = jnp.asarray(rng.standard_normal((1, 8, 8, c_in)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, H, H, c_in)), jnp.float32)
     w = jnp.asarray(rng.standard_normal(
         (kernel, kernel, c_in // groups, c_out)) * 0.3, jnp.float32)
     b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
     spec = ConvSpec(kernel=kernel, stride=stride, padding=padding,
                     groups=groups, relu=relu, fuse_bias=fuse_bias,
-                    route=route)
+                    fuse_lrn=fuse_lrn, fuse_pool=fuse_pool, route=route)
     out = dispatch_conv(spec, x, w, b, interpret=interpret)
     ref = conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
                      relu=relu)
+    from repro.nn.pooling import apply_epilogue
+    ref = apply_epilogue(ref, spec.lrn if fuse_lrn else None,
+                         (spec.pool_window, spec.pool_stride) if fuse_pool
+                         else None)
     return spec, np.asarray(out), np.asarray(ref)
 
 
 @given(kernel=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
        padding=st.sampled_from(["SAME", "VALID"]),
        groups=st.sampled_from([1, 2]), relu=st.booleans(),
-       fuse_bias=st.booleans(), seed=st.integers(0, 1000))
+       fuse_bias=st.booleans(), fuse_lrn=st.booleans(),
+       fuse_pool=st.booleans(), seed=st.integers(0, 1000))
 @settings(max_examples=25, deadline=None)
 def test_auto_and_winograd_routes_match_direct(kernel, stride, padding,
                                                groups, relu, fuse_bias,
-                                               seed):
-    """auto/winograd == direct oracle for random stride/padding/groups,
-    whether the spec resolves to winograd or silently falls back."""
+                                               fuse_lrn, fuse_pool, seed):
+    """auto/winograd == unfused conv->lrn->pool oracle for random
+    stride/padding/groups/fusion flags, whether the spec resolves to
+    winograd or silently falls back."""
+    H = 9
+    assume(not fuse_pool or _conv_out_hw(H, kernel, stride, padding) >= 3)
     for route in ("auto", "winograd"):
         spec, out, ref = _run_spec(route, kernel, stride, padding, groups,
-                                   relu, fuse_bias, seed)
+                                   relu, fuse_bias, seed, fuse_lrn=fuse_lrn,
+                                   fuse_pool=fuse_pool, H=H)
         assert out.shape == ref.shape, spec
-        if resolve_route(spec) == "direct":
+        if resolve_route(spec) == "direct" and not (fuse_lrn or fuse_pool):
             np.testing.assert_array_equal(out, ref, err_msg=str(spec))
         else:
             np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3,
@@ -121,16 +135,21 @@ def test_auto_and_winograd_routes_match_direct(kernel, stride, padding,
 @given(kernel=st.sampled_from([3, 5]), stride=st.sampled_from([1, 2]),
        padding=st.sampled_from(["SAME", "VALID"]),
        groups=st.sampled_from([1, 2]), relu=st.booleans(),
+       fuse_lrn=st.booleans(), fuse_pool=st.booleans(),
        seed=st.integers(0, 1000))
 @settings(max_examples=8, deadline=None)
 def test_pallas_route_matches_direct(kernel, stride, padding, groups, relu,
-                                     seed):
-    """pallas (interpret mode on CPU) == direct oracle; ineligible specs
-    exercise the silent pallas -> direct fallback."""
+                                     fuse_lrn, fuse_pool, seed):
+    """pallas (interpret mode on CPU) == unfused oracle, incl. the in-kernel
+    LRN/pool epilogue; ineligible specs exercise the silent pallas ->
+    direct fallback."""
+    H = 9
+    assume(not fuse_pool or _conv_out_hw(H, kernel, stride, padding) >= 3)
     spec, out, ref = _run_spec("pallas", kernel, stride, padding, groups,
-                               relu, True, seed, interpret=True)
+                               relu, True, seed, interpret=True,
+                               fuse_lrn=fuse_lrn, fuse_pool=fuse_pool, H=H)
     assert out.shape == ref.shape, spec
-    if resolve_route(spec) == "direct":
+    if resolve_route(spec) == "direct" and not (fuse_lrn or fuse_pool):
         np.testing.assert_array_equal(out, ref, err_msg=str(spec))
     else:
         np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3,

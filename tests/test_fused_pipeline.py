@@ -1,0 +1,217 @@
+"""Fused layer pipeline: in-kernel LRN + max-pool epilogue parity.
+
+The layer-level ConvSpec fuses cross-channel LRN and VALID max-pool into
+the conv call; these tests pin every route (direct / jnp-winograd / pallas
+interpret) against the unfused conv -> lrn -> maxpool reference
+(``repro.nn.pooling`` on top of ``conv2d_ref``), including grouped
+conv2-style layers (LRN windows crossing the group seam), odd feature
+sizes where the pool drops trailing rows, and the five AlexNet layer
+geometries end-to-end.  Also: the fused HBM traffic model is strictly
+lower than unfused for every fusing layer, and the BFP FC path tracks the
+f32 classifier.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.winograd import conv2d_hbm_bytes
+from repro.kernels.winograd.ref import conv2d_ref
+from repro.models import alexnet
+from repro.nn.conv import ConvSpec, dispatch_conv, resolve_route
+from repro.nn.pooling import LrnParams, apply_epilogue, lrn, pooled_hw
+
+ROUTES = ("direct", "winograd", "pallas")
+
+
+def _reference(x, w, b, spec: ConvSpec):
+    """Unfused oracle: conv(+bias+relu) -> lrn -> maxpool, stagewise."""
+    y = conv2d_ref(x, w, b, stride=spec.stride, padding=spec.padding,
+                   groups=spec.groups, relu=spec.relu)
+    return apply_epilogue(y, spec.lrn if spec.fuse_lrn else None,
+                          (spec.pool_window, spec.pool_stride)
+                          if spec.fuse_pool else None)
+
+
+def _run(spec: ConvSpec, H: int, c_in: int, c_out: int, seed=0, B=2):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((B, H, H, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (spec.kernel, spec.kernel, c_in // spec.groups, c_out)) * 0.3,
+        jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    out = dispatch_conv(spec, x, w, b, interpret=True)
+    ref = _reference(x, w, b, spec)
+    return np.asarray(out), np.asarray(ref)
+
+
+# the five AlexNet layer geometries (reduced channel counts), incl. the
+# direct-fallback conv1/conv2 and the grouped pool-only conv5
+ALEXNET_LAYERS = [
+    ("conv1", dict(kernel=11, stride=4, padding="VALID", relu=True,
+                   fuse_lrn=True, fuse_pool=True), 35, 3, 16),
+    ("conv2", dict(kernel=5, groups=2, relu=True, fuse_lrn=True,
+                   fuse_pool=True), 13, 16, 32),
+    ("conv3", dict(kernel=3, relu=True), 13, 32, 48),
+    ("conv4", dict(kernel=3, groups=2, relu=True), 13, 48, 48),
+    ("conv5", dict(kernel=3, groups=2, relu=True, fuse_pool=True),
+     13, 48, 32),
+]
+
+
+@pytest.mark.parametrize("route", ROUTES)
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", ALEXNET_LAYERS)
+def test_alexnet_layer_geometries_fused_matches_unfused(route, name, kw, H,
+                                                        c_in, c_out):
+    spec = ConvSpec(route=route, **kw)
+    out, ref = _run(spec, H, c_in, c_out)
+    assert out.shape == ref.shape, (name, out.shape, ref.shape)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4,
+                               err_msg=f"{name} via {route}")
+
+
+@pytest.mark.parametrize("route", ROUTES)
+@pytest.mark.parametrize("H", [7, 8, 9, 12])   # even sizes drop a conv row
+def test_fused_pool_odd_and_partial_sizes(route, H):
+    """Pool windows near the boundary: even conv outputs leave a dangling
+    row/col that VALID pooling drops; fused epilogues must agree."""
+    spec = ConvSpec(kernel=3, relu=True, fuse_lrn=True, fuse_pool=True,
+                    route=route)
+    out, ref = _run(spec, H, 8, 8, seed=H)
+    assert out.shape[1] == pooled_hw(H)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("route", ROUTES)
+def test_fused_lrn_crosses_group_seam(route):
+    """LRN spans the full concatenated channel dim (Krizhevsky conv2): the
+    fused output must match the cross-seam reference, which demonstrably
+    differs from applying LRN per group."""
+    spec = ConvSpec(kernel=3, groups=2, relu=True, fuse_lrn=True,
+                    route=route)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 9, 9, 12)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 6, 12)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((12,)), jnp.float32)
+    conv = conv2d_ref(x, w, b, groups=2, relu=True)
+    ref = lrn(conv, spec.lrn)                   # LRN over all 12 channels
+    per_group = np.concatenate(                 # LRN within each group of 6
+        [np.asarray(lrn(conv[..., g * 6:(g + 1) * 6], spec.lrn))
+         for g in range(2)], axis=-1)
+    assert not np.allclose(np.asarray(ref), per_group, rtol=1e-4, atol=1e-4), (
+        "test geometry must make the seam observable")
+    out = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("route", ROUTES)
+def test_fused_lrn_only_and_unfused_bias_defer(route):
+    """lrn without pool, and the deferred-bias epilogue ordering
+    (conv -> +b -> relu -> lrn -> pool) when fuse_bias=False."""
+    spec = ConvSpec(kernel=3, relu=True, fuse_lrn=True, route=route)
+    out, ref = _run(spec, 10, 8, 8, seed=5)
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    spec2 = ConvSpec(kernel=3, relu=True, fuse_bias=False, fuse_lrn=True,
+                     fuse_pool=True, route=route)
+    out2, ref2 = _run(spec2, 10, 8, 8, seed=6)
+    np.testing.assert_allclose(out2, ref2, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("c_block,k_block,groups", [
+    (4, 4, 2),     # ncb=3, nkb=2 per group: multi-block deposit into y_ref
+    (4, 5, 2),     # K=8 % 5 != 0 -> kernel widens Kb to K (no pad channels)
+    (128, 128, 1),  # single-block baseline on the same geometry
+])
+def test_pallas_fused_kernel_multiblock(c_block, k_block, groups):
+    """The fused kernel's channel-block reduction and per-k-block deposit
+    into the full-channel scratch, on non-trivial block decompositions
+    (several C blocks, several K blocks per group, non-dividing k_block)."""
+    from repro.kernels.winograd.winograd import conv2d_winograd
+    rng = np.random.default_rng(11)
+    c_in, c_out = 12 * groups, 8 * groups
+    x = jnp.asarray(rng.standard_normal((2, 17, 17, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (3, 3, c_in // groups, c_out)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    p = LrnParams()
+    out = conv2d_winograd(x, w, b, groups=groups, relu=True, lrn=p,
+                          pool=(3, 2), c_block=c_block, k_block=k_block,
+                          pool_row_block=2, interpret=True)
+    ref = apply_epilogue(conv2d_ref(x, w, b, groups=groups, relu=True),
+                         p, (3, 2))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_alexnet_features_has_no_freestanding_epilogues():
+    """The model declares LRN/pool in its layer specs (conv1, conv2 lrn+pool;
+    conv5 pool), and the legacy free-standing helpers are gone."""
+    cfg = get_config("alexnet")
+    specs = alexnet.layer_specs(cfg)
+    assert [s.fuse_lrn for s in specs] == [True, True, False, False, False]
+    assert [s.fuse_pool for s in specs] == [True, True, False, False, True]
+    assert not hasattr(alexnet, "_lrn") and not hasattr(alexnet, "_maxpool")
+    assert specs[0].lrn == LrnParams(n=cfg.lrn_n, k=cfg.lrn_k,
+                                     alpha=cfg.lrn_alpha, beta=cfg.lrn_beta)
+
+
+def test_alexnet_pallas_route_end_to_end():
+    """Full model through the Pallas fused kernels == direct route."""
+    cfg = get_config("alexnet").reduced()
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, cfg.image_size, cfg.image_size, 3))
+    ref = alexnet.apply(params,
+                        dataclasses.replace(cfg, use_winograd=False), imgs)
+    out = alexnet.apply(params, dataclasses.replace(cfg, use_pallas=True),
+                        imgs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_hbm_model_fused_strictly_lower_for_all_alexnet_layers():
+    """conv2d_hbm_bytes: every fusing AlexNet layer models strictly lower
+    fused traffic; non-fusing layers are traffic-neutral."""
+    cfg = get_config("alexnet")
+    h, c_in = cfg.image_size, cfg.in_channels
+    for spec, c_out in zip(alexnet.layer_specs(cfg), cfg.conv_channels):
+        wino = resolve_route(spec) in ("winograd", "pallas")
+        hb = conv2d_hbm_bytes(
+            1, h, h, c_in, c_out, spec.kernel,
+            spec.winograd_m if wino else None, stride=spec.stride,
+            padding=spec.padding, fuse_lrn=spec.fuse_lrn,
+            fuse_pool=spec.fuse_pool)
+        if spec.fuse_lrn or spec.fuse_pool:
+            assert hb["layer_fused_bytes"] < hb["layer_unfused_bytes"], spec
+            assert hb["fused_savings"] > 1.0
+        else:
+            assert hb["layer_fused_bytes"] == hb["layer_unfused_bytes"]
+        h, c_in = spec.out_hw(h), c_out
+
+
+def test_hbm_model_direct_layer_has_no_tile_tensor():
+    hb = conv2d_hbm_bytes(1, 227, 227, 3, 96, 11, None, stride=4,
+                          padding="VALID", fuse_lrn=True, fuse_pool=True)
+    assert hb["tile_inflation"] == 0.0
+    assert hb["stream_bytes"] == hb["host_tiled_bytes"]
+    assert hb["fused_savings"] > 2.0            # 3 round-trips -> 1 write
+
+
+def test_fc_bfp_parity_with_f32_classifier():
+    """§3.6 satellite: the BFP FC path tracks the exact f32 classifier
+    within the shared-exponent int8 quantization error."""
+    cfg = get_config("alexnet").reduced()
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    feats = jnp.asarray(rng.standard_normal(
+        (4, alexnet._fc_input_dim(cfg))), jnp.float32)
+    exact = np.asarray(alexnet.classifier(params, cfg, feats))
+    bfp = np.asarray(alexnet.classifier(
+        params, dataclasses.replace(cfg, fc_bfp=True), feats))
+    assert exact.shape == bfp.shape == (4, cfg.num_classes)
+    scale = np.abs(exact).max() + 1e-9
+    assert np.abs(bfp - exact).max() / scale < 5e-2
+    assert not np.array_equal(bfp, exact)       # the quantized path ran
