@@ -16,7 +16,7 @@ def rows():
 
     # winograd 1d (mamba conv shape: d_inner=1024 slice)
     from repro.core.winograd import conv1d_depthwise_causal as jnp1d
-    from repro.kernels.winograd.ref import conv1d_depthwise_causal_ref
+    from repro.kernels.conv.ref import conv1d_depthwise_causal_ref
     x = jnp.asarray(rng.standard_normal((4, 2048, 512)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((4, 512)), jnp.float32)
     t_ref = time_us(jax.jit(conv1d_depthwise_causal_ref), x, w)

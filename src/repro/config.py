@@ -95,6 +95,10 @@ class ArchConfig:
     logits_softcap: float = 0.0
     banded_attention: bool = False  # causal flash over lower-triangle chunk
     #                                 pairs only (~2x fewer attention FLOPs)
+    fc_bfp: bool = False           # stream the lm_head (FC) weights as
+    #                                shared-exponent int8 BFP (paper §3.6);
+    #                                decode is the same weight-bandwidth-
+    #                                bound regime as the paper's FC layers
 
     # --- derived -----------------------------------------------------------
     @property

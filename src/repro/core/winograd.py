@@ -25,6 +25,7 @@ n = m+r-1 Winograd-domain multiplies, e.g. F(4,3): 12 -> 6 (the paper's 2x).
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 from functools import lru_cache
 
@@ -92,7 +93,7 @@ def winograd_transform(m: int, r: int) -> WinogradTransform:
 
 # ---------------------------------------------------------------------------
 # pure-jnp convolutions in the Winograd domain (oracles + laptop path;
-# repro.kernels.winograd holds the Pallas TPU kernels)
+# repro.kernels.conv holds the Pallas TPU kernels)
 # ---------------------------------------------------------------------------
 def _tiles_1d(x, m: int, n: int, r: int):
     """x (B, L, C) -> causal overlapping tiles (B, nt, n, C), nt = ceil(L/m)."""
@@ -179,7 +180,7 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     expressed as n^2 independent (tiles x C) @ (C x K) matmuls (Lavin) — on
     TPU these are MXU-shaped GEMMs, the faithful analogue of the paper's PE
     dot products.  Signature mirrors the Pallas kernel
-    (``repro.kernels.winograd.conv2d_winograd``): optional bias ``b (K,)``,
+    (``repro.kernels.conv.winograd.conv2d_winograd``): optional bias ``b (K,)``,
     fused ``relu``, ``groups`` as a batched vmap (no Python loop), plus the
     layer epilogue — cross-channel LRN (``lrn``: LrnParams) then VALID
     max-pool (``pool``: (window, stride)) — so the routes stay numerically
@@ -219,85 +220,232 @@ def conv2d_direct(x, w, *, stride: int = 1, padding: str = "SAME"):
         dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)
 
 
+def auto_c_block(hp: int, wp: int, c: int, *, batch: int = 1,
+                 dtype_bytes: int = 4,
+                 budget_bytes: int = 8 * 2 ** 20) -> int:
+    """Channel block auto-sizing shared by the kernels and the HBM model.
+
+    Largest channel block (<= ``c``) whose *whole resident input block*
+    (batch, hp, wp, Cb) — the filter-cache grid keeps ``batch_block``
+    images' slabs in VMEM at once — fits the slab budget.  Every AlexNet
+    layer gets all of C resident even at batch_block=8 — the slab then
+    streams HBM->VMEM exactly once per image, with no re-fetch over the
+    channel-block reduction (paper §3.5: stream buffers hold whole
+    feature-map planes).  VGG-class 224x224 planes fall back to a smaller
+    block (the re-fetch trade documented in ``conv2d_hbm_bytes``).
+    """
+    per_chan = max(batch * hp * wp * dtype_bytes, 1)
+    fit = max(int(budget_bytes // per_chan), 1)
+    return c if fit >= c else max(min(fit, 128), 1)
+
+
+def auto_pool_rows(ph_out: int, pwin: int, ps: int, *, align: int = 1,
+                   row_align: int = 1, cols: int, kfull: int, batch: int = 1,
+                   dtype_bytes: int = 4,
+                   budget_bytes: int = 4 * 2 ** 20) -> int:
+    """Pooled-row block auto-sizing shared by the kernels and the HBM model.
+
+    Largest ``align``-multiple pooled-row block whose full-channel epilogue
+    scratch (batch, conv rows, cols, kfull) fits the budget — ideally the
+    whole pooled extent, so the row loop collapses to one step and a
+    grouped layer's slab is never re-fetched (the grouped block index
+    cycles per row block; see ``conv2d_hbm_bytes``).  ``row_align`` rounds
+    the conv rows up to the Winograd tile size where applicable.
+    """
+    Pb = align * (-(-max(ph_out, 1) // align))
+    while Pb > align:
+        rows = -(-(ps * (Pb - 1) + pwin) // row_align) * row_align
+        if batch * rows * cols * kfull * dtype_bytes <= budget_bytes:
+            break
+        Pb -= align
+    return Pb
+
+
 def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
                      m: int | None, *, dtype_bytes: int = 4,
-                     c_block: int = 128, k_block: int = 128,
-                     row_block: int = 8, padding: str = "SAME",
-                     stride: int = 1, fuse_lrn: bool = False,
+                     c_block: int | None = None, k_block: int = 128,
+                     row_block: int = 8, pool_row_block: int | None = None,
+                     padding: str = "SAME", stride: int = 1,
+                     relu: bool = True, fuse_lrn: bool = False,
                      fuse_pool: bool = False, pool_window: int = 3,
-                     pool_stride: int = 2) -> dict:
-    """Modeled HBM feature-map traffic for one conv *layer*.
+                     pool_stride: int = 2, groups: int = 1,
+                     route: str = "pallas", batch_block: int = 8) -> dict:
+    """Modeled HBM traffic for one conv *layer*, per resolved datapath.
 
-    Input side — host-tiled vs stream-buffered (Winograd routes, ``m`` set):
+    ``route`` is the resolved datapath (``nn.conv.resolve_kernel`` family):
 
-    * Host-tiled path (pre-refactor): the overlapping-tile tensor
-      (B, th, tw, n, n, C) is materialized in HBM by an XLA gather — written
-      once, then read once by the kernel — on top of the raw feature-map
-      read, an ~(n/m)^2 inflation of the dominant traffic term (§3.5).
-    * Stream-buffered path (in-kernel tiling): only the raw (halo-padded,
-      channel-padded to a c_block multiple) slab is read, re-fetched once
-      per (k_block, row_block) revisit because the channel-block reduction
-      is the innermost grid dimension.
+    * ``"pallas"`` — the stream-buffered kernels.  ``m`` set models the
+      Winograd kernel's halo-padded tile slab; ``m=None`` models the
+      strided *direct* kernel (AlexNet conv1's 11x11 s4, conv2's 5x5): a
+      ``(npr-1)*s*ps*Pb + s*(Rc-1)+r`` row slab at width ``s*(out_w-1)+r``
+      — the strided-fused layer terms.  Fusion flags are honored
+      *in-kernel*, so the fused layer writes only the final map.
+    * ``"winograd"`` — the pure-jnp path: the overlapping-tile tensor
+      (B, th, tw, n, n, C) is materialized in HBM by an XLA gather (written
+      once, read once) on top of the raw read — the ~(n/m)^2 inflation of
+      §3.5.  No on-chip fusion: fused == unfused.
+    * ``"direct"`` / ``"lax"`` — ``lax.conv``: raw read once.  The
+      in-function epilogue is separate XLA reduce ops, so no fusion credit:
+      fused == unfused.
 
-    ``m=None`` models a direct-route layer (AlexNet conv1/conv2): the raw
-    feature map is read once, no tile tensor exists on either path.
+    Input re-fetch (pallas): with one channel block (``c_block=None``
+    auto-sizes so AlexNet layers qualify) and no groups, the slab block
+    index is constant across the (row, k) revisits and Pallas elides the
+    repeated DMA; grouped layers cycle each group's slab once per row
+    block, and multiple c blocks re-stream the slab per
+    (row-block, k-block) revisit.
 
-    Output side — unfused vs fused layer epilogue (paper §3.5's headline:
-    feature maps never round-trip external memory between conv, norm, and
-    pool).  Unfused, the full-resolution conv output is written to HBM,
-    then re-read and re-written by LRN, then re-read by the pool which
-    writes the pooled map — up to 3 round-trips of the dominant tensor.
-    Fused, only the final (normalized, pooled) map is written once.
-    Weights move identically on all paths and are excluded.
+    Output side — the unfused baseline is the paper's strawman (§3.5: in
+    prior work "the output of each stage goes to DDR and back"): conv
+    writes the full-resolution map, bias+ReLU / LRN each read+rewrite it,
+    pool reads it and writes the pooled map.  Fused (pallas), only the
+    final normalized/pooled map is written once.
+
+    Weight side (reported separately from the layer totals, which count
+    feature maps only): the batch-innermost filter-cache grid fetches each
+    weight tile once per ``batch_block`` images; ``weight_hbm_nocache_bytes``
+    is the batch-outermost grid's once-per-image stream for comparison.
+
+    Keys ``layer_unfused_bytes``/``layer_fused_bytes`` compare fused vs
+    unfused *on this route*; ``layer_unfused_direct_bytes`` is the lax
+    stagewise baseline every route is measured against (the benchmark's
+    whole-network fused-pallas vs unfused-direct ratio).
     """
+    g = groups
     if padding == "SAME":
         out_h, out_w = -(-H // stride), -(-W // stride)
     else:
         out_h = (H - r) // stride + 1
         out_w = (W - r) // stride + 1
     raw = B * H * W * C * dtype_bytes
-    if m is None:                               # direct route: no tile tensor
+    ph = max((out_h - pool_window) // pool_stride + 1, 0)
+    pw = max((out_w - pool_window) // pool_stride + 1, 0)
+    Cg, Kg = C // g, K // g                     # per-group extents
+
+    Bb = max(1, min(batch_block, B))
+
+    def _blocks(hp, wp):
+        Cb = (auto_c_block(hp, wp, Cg, batch=Bb, dtype_bytes=dtype_bytes)
+              if c_block is None else min(c_block, Cg))
+        ncb = -(-Cg // Cb)
+        Kb = min(k_block, Kg)
+        nkb = Kg // Kb if Kg % Kb == 0 else 1   # kernel widens Kb to Kg
+        return Cb, ncb, nkb
+
+    def _wino_plan(with_pool):
+        t = winograd_transform(m, r)
+        tw = -(-out_w // t.m)
+        if with_pool:
+            q = t.m // math.gcd(pool_stride, t.m)
+            if pool_row_block is None:
+                Pb = auto_pool_rows(ph, pool_window, pool_stride, align=q,
+                                    row_align=t.m, cols=tw * t.m, kfull=K,
+                                    batch=Bb, dtype_bytes=dtype_bytes)
+            else:
+                Pb = q * (-(-max(min(pool_row_block, ph), 1) // q))
+            row_step = pool_stride * Pb // t.m
+            Rt = -(-(pool_stride * (Pb - 1) + pool_window) // t.m)
+            npr = -(-max(ph, 1) // Pb)
+            thp = (npr - 1) * row_step + Rt
+        else:
+            th = -(-out_h // t.m)
+            Rt = min(row_block, th)
+            npr = -(-th // Rt)
+            thp = npr * Rt
+        return thp * t.m + r - 1, tw * t.m + r - 1, npr
+
+    def _direct_plan(with_pool):
+        if with_pool:
+            if pool_row_block is None:
+                Pb = auto_pool_rows(ph, pool_window, pool_stride,
+                                    cols=out_w, kfull=K, batch=Bb,
+                                    dtype_bytes=dtype_bytes)
+            else:
+                Pb = max(min(pool_row_block, ph), 1)
+            Rc = pool_stride * (Pb - 1) + pool_window
+            step_in = stride * pool_stride * Pb
+            npr = -(-max(ph, 1) // Pb)
+        else:
+            Rc = min(row_block, out_h)
+            step_in = stride * Rc
+            npr = -(-out_h // Rc)
+        in_rows = stride * (Rc - 1) + r
+        return (npr - 1) * step_in + in_rows, stride * (out_w - 1) + r, npr
+
+    def _stream(with_pool):
+        hp, wp, npr = (_wino_plan(with_pool) if m is not None
+                       else _direct_plan(with_pool))
+        Cb, ncb, nkb = _blocks(hp, wp)
+        # the slab block index (k // nkb) * ncb + c is constant across every
+        # step only when g == 1 and ncb == 1 (one fetch, DMA elided);
+        # grouped layers cycle the group's slab per row block even with all
+        # of C resident, and multiple c blocks re-stream per (row, k) revisit
+        if ncb > 1:
+            refetch = nkb * npr
+        elif g > 1:
+            refetch = npr
+        else:
+            refetch = 1
+        return B * hp * wp * (g * ncb * Cb) * dtype_bytes * refetch, npr
+
+    # --- input side ---------------------------------------------------------
+    if m is None:
         tile_tensor = 0
-        host_tiled = stream = raw
     else:
         t = winograd_transform(m, r)
         th, tw = -(-out_h // t.m), -(-out_w // t.m)
         tile_tensor = B * th * tw * t.n * t.n * C * dtype_bytes
-        host_tiled = raw + 2 * tile_tensor      # read raw + write/read tiles
-        Rb = min(row_block, th)
-        Hp = -(-th // Rb) * Rb * t.m + r - 1
-        Wp = tw * t.m + r - 1
-        Cb = min(c_block, C)
-        nc = -(-C // Cb)
-        Cp = nc * Cb                            # kernel pads C to c_block
-        # single channel block: the slab block index is constant across the
-        # (row, k) revisits, so Pallas elides the repeated DMA — one fetch
-        # per batch element.  Multiple c blocks: the innermost c dim changes
-        # the block index every step, so every (row, k) revisit re-streams C.
-        refetch = 1 if nc == 1 else -(-K // k_block) * (-(-th // Rb))
-        stream = B * Hp * Wp * Cp * dtype_bytes * refetch
+    host_tiled = raw + 2 * tile_tensor          # read raw + write/read tiles
+    if route == "pallas":
+        stream, npr_f = _stream(fuse_pool)
+        stream_unfused, npr_u = _stream(False)
+    elif route == "winograd":
+        stream = stream_unfused = host_tiled
+        npr_f = npr_u = 1
+    else:                                       # lax direct
+        stream = stream_unfused = raw
+        npr_f = npr_u = 1
 
+    # --- output side: stagewise strawman vs in-kernel fused -----------------
     conv_out = B * out_h * out_w * K * dtype_bytes
-    ph = max((out_h - pool_window) // pool_stride + 1, 0)
-    pw = max((out_w - pool_window) // pool_stride + 1, 0)
     pooled = B * ph * pw * K * dtype_bytes
     final = pooled if fuse_pool else conv_out
-    # unfused epilogue: conv writes out; LRN reads + rewrites it; pool reads
-    # the (normalized) map and writes the pooled one
-    unfused_epilogue = (conv_out + (2 * conv_out if fuse_lrn else 0)
-                        + ((conv_out + pooled) if fuse_pool else 0))
-    layer_unfused = stream + unfused_epilogue
-    layer_fused = stream + final
+    stage_passes = (conv_out + (2 * conv_out if relu else 0)
+                    + (2 * conv_out if fuse_lrn else 0)
+                    + ((conv_out + pooled) if fuse_pool else 0))
+    layer_unfused = stream_unfused + stage_passes
+    layer_fused = (stream + final if route == "pallas" else layer_unfused)
+    layer_unfused_direct = raw + stage_passes
+
+    # --- weight side (filter cache) -----------------------------------------
+    wunit = (winograd_transform(m, r).n ** 2 if m is not None else r * r)
+    weight_bytes = wunit * Cg * Kg * g * dtype_bytes
+    Bo = -(-B // Bb)
+    if route == "pallas":
+        weight_hbm = weight_bytes * npr_f * Bo
+        weight_nocache = weight_bytes * npr_f * B
+    else:
+        weight_hbm = weight_nocache = weight_bytes
     return {
+        "route": route,
+        "raw_bytes": raw,
         "host_tiled_bytes": host_tiled,
         "stream_bytes": stream,
+        "stream_unfused_bytes": stream_unfused,
         "tile_inflation": tile_tensor / raw,
         "savings": host_tiled / stream,
         "conv_out_bytes": conv_out,
+        "pooled_bytes": pooled,
         "final_out_bytes": final,
+        "stage_pass_bytes": stage_passes,
         "layer_unfused_bytes": layer_unfused,
         "layer_fused_bytes": layer_fused,
+        "layer_unfused_direct_bytes": layer_unfused_direct,
         "fused_savings": layer_unfused / layer_fused,
+        "weight_bytes": weight_bytes,
+        "weight_hbm_bytes": weight_hbm,
+        "weight_hbm_nocache_bytes": weight_nocache,
+        "filter_cache_reuse": weight_nocache / weight_hbm,
     }
 
 

@@ -1,7 +1,10 @@
 """Public entry for the shared-exponent BFP matmul."""
 from __future__ import annotations
 
+import math
+
 import jax
+import jax.numpy as jnp
 
 from ...core import bfp
 from . import bfp_matmul as _k
@@ -17,3 +20,18 @@ def bfp_matmul(x, w, *, block: int = 32, bits: int = 8, pallas: bool = True,
     wm, we = _k.quantize_weights(w, block=block, bits=bits)
     return _k.bfp_matmul_pallas(x, wm, we, block=block, bits=bits,
                                 interpret=interpret)
+
+
+def bfp_linear(x, w, *, block: int = 32):
+    """(..., K) @ (K, N) f32 with the weight stream in int8 BFP (§3.6).
+
+    The FC-layer form both weight-bandwidth-bound readouts share
+    (``models/alexnet.py::classifier``, ``models/lm.py::_readout``): the
+    exponent block must tile the contraction dim, so a non-dividing
+    ``block`` shrinks to the gcd (reduced configs have small FC widths;
+    32 is the paper-faithful group size).
+    """
+    k = x.shape[-1]
+    y = bfp_matmul(x.reshape(-1, k).astype(jnp.float32),
+                   w.astype(jnp.float32), block=math.gcd(k, block))
+    return y.reshape(*x.shape[:-1], w.shape[-1])

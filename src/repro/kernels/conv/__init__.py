@@ -1,0 +1,9 @@
+"""Stream-buffered Pallas conv kernels (paper §3.3/§3.5).
+
+``winograd.py`` — Winograd-domain F(m,r) kernel (stride-1 layers);
+``direct.py`` — strided direct kernel (any kernel size / stride / groups,
+AlexNet conv1's 11x11 s4 datapath); ``epilogue.py`` — the shared in-VMEM
+bias/ReLU/LRN/max-pool layer epilogue and block helpers; ``ops.py`` — the
+public entry points; ``ref.py`` — the lax oracles.
+"""
+from . import direct, epilogue, ops, ref, winograd  # noqa: F401

@@ -1,0 +1,232 @@
+"""Stream-buffered Pallas direct conv kernel — the paper's non-Winograd
+first-layer datapath (§3.3, §3.5), generalized.
+
+The DLA runs AlexNet's 11x11 stride-4 conv1 through the *same* stream-
+buffer pipeline as the Winograd layers: the PE array is fed raw feature-map
+slabs from on-chip buffers and the filters come from the filter cache —
+no layer ever detours through external memory just because its geometry is
+not F(4,3)-shaped.  This kernel is that datapath on TPU: arbitrary kernel
+size, stride, groups, and SAME/VALID padding, with the identical fused
+bias + ReLU + cross-channel-LRN + max-pool epilogue (``epilogue.py``,
+shared with the Winograd kernel) and the identical
+(B/Bb, row blocks, g*K blocks, C blocks, Bb) filter-cache grid.
+
+Compute shape: the conv is phrased as r GEMMs per grid step — for each
+filter row ``di`` the r width-taps are stacked into the contraction dim, so
+the MXU sees (rows*cols, r*Cb) @ (r*Cb, Kb) — rather than r^2 scalar-tap
+multiplies (PipeCNN's flattened-window trick, MXU-shaped like the Winograd
+formulation's n^2 GEMMs).
+
+Dataflow per grid step (image slot ``bi`` of the ``batch_block`` in
+flight):
+
+* the halo-padded input plane (Bb, Hp, Wp, Cb) is VMEM-resident; the step
+  slices its ``in_rows = s*(Rc-1)+r`` raw rows with stride-s strided
+  slices (no im2col tensor in HBM),
+* channel blocks accumulate into a per-image VMEM scratch
+  (``acc_ref[bi]``, the PE daisy-chain),
+* the last c block deposits bias+ReLU'd channels into the full-channel
+  ``y_ref[bi]`` scratch, and the last (k, c) step runs LRN + pool in VMEM
+  and writes only the pooled map (§3.5 — the conv-resolution feature map
+  never reaches HBM).
+
+With ``pool`` set, each row step owns ``Pb`` pooled rows: it computes the
+``Rc = ps*(Pb-1)+pwin`` conv rows those need but advances only
+``s*ps*Pb`` input rows, keeping the pool's output-side halo in VMEM (the
+direct analogue of the Winograd kernel's tile-aligned pooled-row blocks —
+no tile-alignment constraint here, since rows are computed directly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ...core.winograd import auto_pool_rows
+from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+from .epilogue import batch_blocks, channel_blocks, fused_epilogue, \
+    grouped_channel_pad, k_blocks
+
+
+def same_pad(extent: int, r: int, stride: int) -> tuple[int, int, int]:
+    """(out, pad_lo, pad_hi) for SAME padding, matching lax.conv semantics."""
+    out = -(-extent // stride)
+    total = max((out - 1) * stride + r - extent, 0)
+    return out, total // 2, total - total // 2
+
+
+def _direct_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, y_ref, *,
+                   stride: int, relu: bool, lrn, pool, step_in: int,
+                   in_rows: int):
+    s = stride
+    _, Rc, wo, Kb = acc_ref.shape
+    ib = pl.program_id(1)
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+    c = pl.program_id(3)
+    nc = pl.num_programs(3)
+    bi = pl.program_id(4)                           # filter-cache image slot
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[bi] = jnp.zeros(acc_ref.shape[1:], acc_ref.dtype)
+
+    rows = x_ref[bi, pl.ds(ib * step_in, in_rows)]  # (in_rows, Wp, Cb)
+    _, Wp, Cb = rows.shape
+    r = w_ref.shape[1]
+    w = w_ref[0].astype(jnp.float32)                # (r, r, Cb, Kb)
+    acc = jnp.zeros((Rc, wo, Kb), jnp.float32)
+    for di in range(r):
+        # conv rows hit by filter row di, still at full input width
+        sub = jax.lax.slice(rows, (di, 0, 0),
+                            (di + s * (Rc - 1) + 1, Wp, Cb), (s, 1, 1))
+        # r width-taps stacked into the contraction dim: one
+        # (Rc*wo, r*Cb) @ (r*Cb, Kb) MXU GEMM per filter row
+        taps = jnp.stack(
+            [jax.lax.slice(sub, (0, dj, 0),
+                           (Rc, dj + s * (wo - 1) + 1, Cb), (1, s, 1))
+             for dj in range(r)], axis=0).astype(jnp.float32)
+        acc += jnp.einsum("jrwc,jck->rwk", taps, w[di])
+    acc_ref[bi] += acc                              # one scratch RMW per step
+
+    @pl.when(c == nc - 1)
+    def _store_kblock():
+        y = acc_ref[bi] + b_ref[0].astype(jnp.float32)
+        if relu:
+            y = jnp.maximum(y, 0.0)
+        # channel blocks are group-major contiguous: block k -> offset k*Kb
+        y_ref[bi, :, :, pl.ds(k * Kb, Kb)] = y
+
+    @pl.when((c == nc - 1) & (k == nk - 1))
+    def _epilogue():
+        out_ref[bi] = fused_epilogue(
+            y_ref[bi], lrn, pool, out_ref.shape[1],
+            out_ref.shape[2]).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "padding", "relu",
+                                             "groups", "lrn", "pool",
+                                             "row_block", "pool_row_block",
+                                             "c_block", "k_block",
+                                             "batch_block", "interpret"))
+def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
+                  relu: bool = False, groups: int = 1, lrn=None, pool=None,
+                  row_block: int = 8, pool_row_block: int | None = None,
+                  c_block: int | None = None, k_block: int = 128,
+                  batch_block: int = 8, interpret: bool = True):
+    """x (B,H,W,C); w (r,r,C//groups,K); any r/stride/groups, fused layer.
+
+    Same contract as the Winograd kernel (``winograd.conv2d_winograd``):
+    optional bias ``b (K,)``, fused ``relu``, grouped conv on the
+    group-major channel layout, and the in-VMEM ``lrn``/``pool`` epilogue —
+    so ``nn.conv.dispatch_conv`` can send *any* ConvSpec here and every
+    AlexNet layer (conv1's 11x11 stride 4 included) runs fully in-VMEM on
+    the ``pallas`` route.
+
+    ``c_block=None`` auto-sizes the channel block so the whole resident
+    (batch_block, Hp, Wp, Cb) input block fits the VMEM slab budget, and
+    ``pool_row_block=None`` grows the pooled-row block to the whole pooled
+    extent while the epilogue scratch fits — AlexNet layers keep all of C
+    resident and (grouped layers included, whose slab block index cycles
+    per row block) stream the slab HBM->VMEM once per image.
+    """
+    r = w.shape[0]
+    s = stride
+    assert w.shape[0] == w.shape[1], "square filters only"
+    B, H, W, Ct = x.shape
+    g = groups
+    Kt = w.shape[-1]
+    assert Ct % g == 0 and Kt % g == 0 and w.shape[2] == Ct // g, (
+        "grouped conv shape mismatch")
+    C, K = Ct // g, Kt // g
+    if padding == "SAME":
+        out_h, ph_lo, _ = same_pad(H, r, s)
+        out_w, pw_lo, _ = same_pad(W, r, s)
+    else:
+        ph_lo = pw_lo = 0
+        out_h, out_w = (H - r) // s + 1, (W - r) // s + 1
+    assert out_h >= 1 and out_w >= 1, (H, W, r, s, padding)
+
+    Bb, Bp = batch_blocks(B, batch_block)
+    if pool is not None:
+        pwin, ps = pool
+        ph_out = (out_h - pwin) // ps + 1
+        pw_out = (out_w - pwin) // ps + 1
+        assert ph_out >= 1 and pw_out >= 1, (
+            f"pool {pool} larger than conv output {out_h}x{out_w}")
+        if pool_row_block is None:
+            # own the whole pooled extent when the epilogue scratch fits —
+            # one row step, so grouped layers never re-fetch their slab
+            Pb = auto_pool_rows(ph_out, pwin, ps, cols=out_w, kfull=g * K,
+                                batch=Bb)
+        else:
+            Pb = min(pool_row_block, ph_out)
+        Rc = ps * (Pb - 1) + pwin               # conv rows each step owns
+        step_in = s * ps * Pb                   # input rows advanced per step
+        npr = -(-ph_out // Pb)
+        rows_out, w_out = Pb, pw_out
+    else:
+        Rc = min(row_block, out_h)
+        step_in = s * Rc
+        npr = -(-out_h // Rc)
+        rows_out, w_out = Rc, out_w
+    in_rows = s * (Rc - 1) + r                  # raw rows per step (w/ halo)
+    Hp = (npr - 1) * step_in + in_rows
+    Wp = s * (out_w - 1) + r
+
+    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
+    Cp = C + (-C) % Cb
+    ncb = Cp // Cb
+    Kb = k_blocks(K, k_block)
+    nkb = K // Kb
+    Kfull = g * K
+
+    xg, _ = grouped_channel_pad(x, g, Cb)
+    # strided convs can leave trailing rows/cols no output window reads —
+    # crop them before padding up to the slab extent; a pool with
+    # stride > window additionally skips trailing *conv* rows, so the row
+    # plan may read fewer rows than the conv extent (Hp < padded H)
+    used_h = min(H, s * (out_h - 1) + r - ph_lo, Hp - ph_lo)
+    used_w = min(W, s * (out_w - 1) + r - pw_lo)
+    xg = xg[:, :used_h, :used_w]
+    xg = jnp.pad(xg, ((0, Bp - B), (ph_lo, Hp - used_h - ph_lo),
+                      (pw_lo, Wp - used_w - pw_lo), (0, 0)))
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+    if Cp > C:
+        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, 0)))
+    bias = jnp.zeros((Kfull,), x.dtype) if b is None else b
+    bg = bias.reshape(g * nkb, Kb)
+
+    kernel = functools.partial(_direct_kernel, stride=s, relu=relu, lrn=lrn,
+                               pool=pool, step_in=step_in, in_rows=in_rows)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Bp // Bb, npr, g * nkb, ncb, Bb),
+        in_specs=[
+            pl.BlockSpec((Bb, Hp, Wp, Cb),
+                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+                         (bo, 0, 0, (k // nkb) * ncb + c)),
+            pl.BlockSpec((1, r, r, Cb, Kb),
+                         lambda bo, i, k, c, bi, nkb=nkb:
+                         (k // nkb, 0, 0, c, k % nkb)),
+            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((Bb, rows_out, w_out, Kfull),
+                               lambda bo, i, k, c, bi: (bo, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, npr * rows_out, w_out, Kfull),
+                                       x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Bb, Rc, out_w, Kb), jnp.float32),
+            pltpu.VMEM((Bb, Rc, out_w, Kfull), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
+                                            ARBITRARY, ARBITRARY),
+        interpret=interpret,
+    )(xg, wg, bg)
+
+    if pool is not None:
+        return out[:B, :ph_out]
+    return out[:B, :out_h]

@@ -1,0 +1,116 @@
+"""Shared in-kernel layer-epilogue machinery for the fused conv kernels.
+
+Both Pallas conv kernels — the Winograd-domain kernel (``winograd.py``) and
+the strided direct kernel (``direct.py``) — end the same way (paper §3.5):
+per-K-block bias+ReLU results are deposited into a full-channel VMEM
+scratch, and the very last (k, c) grid step runs the cross-channel LRN and
+VALID max-pool entirely in VMEM before writing only the pooled, normalized
+feature map to HBM.  This module is that shared tail — the epilogue math
+exists exactly once — plus the host-side channel/batch block helpers both
+``pallas_call`` setups use.
+
+Everything here runs *inside* a kernel (on VMEM-resident arrays) except the
+``*_blocks`` helpers, which are host-side setup.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.winograd import auto_c_block
+
+
+# ---------------------------------------------------------------------------
+# in-kernel epilogue stages
+# ---------------------------------------------------------------------------
+def lrn_banded(yf, lrn):
+    """Cross-channel LRN on a VMEM-resident (rows, cols, K) f32 slab.
+
+    The squared-sum over the +/- n//2 channel window is phrased as one
+    (rows*cols, K) @ (K, K) banded matmul — MXU-shaped, like the conv GEMMs
+    themselves — instead of a K-step reduce loop.
+    """
+    Kf = yf.shape[-1]
+    half = lrn.n // 2
+    ci = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 0)
+    cj = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 1)
+    band = (jnp.abs(ci - cj) <= half).astype(jnp.float32)
+    win = jax.lax.dot_general(
+        (yf * yf).reshape(-1, Kf), band, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(yf.shape)
+    return yf / jnp.power(lrn.k + lrn.alpha / lrn.n * win, lrn.beta)
+
+
+def maxpool_strided(yf, pool, pr: int, pw: int):
+    """VALID max-pool of (rows, cols, K) via window**2 strided slices."""
+    pwin, ps = pool
+    Kf = yf.shape[-1]
+    yp = None
+    for di in range(pwin):
+        for dj in range(pwin):
+            sl = jax.lax.slice(
+                yf, (di, dj, 0),
+                (di + ps * (pr - 1) + 1, dj + ps * (pw - 1) + 1, Kf),
+                (ps, ps, 1))
+            yp = sl if yp is None else jnp.maximum(yp, sl)
+    return yp
+
+
+def fused_epilogue(yf, lrn, pool, pr: int, pw: int):
+    """LRN (or None) then max-pool (or None) on the full-channel VMEM slab.
+
+    ``yf`` is (rows, cols, K) f32 with rows >= the rows this grid step owns;
+    returns the (pr, pw, K) block to write (pool) or the first ``pr`` rows
+    (no pool — trailing rows belong to the next step or are padding).
+    """
+    if lrn is not None:
+        yf = lrn_banded(yf, lrn)
+    if pool is not None:
+        return maxpool_strided(yf, pool, pr, pw)
+    return yf[:pr]
+
+
+# ---------------------------------------------------------------------------
+# host-side block helpers shared by both pallas_call setups
+# ---------------------------------------------------------------------------
+def channel_blocks(C: int, c_block: int | None, hp: int, wp: int,
+                   batch: int = 1, *, dtype_bytes: int = 4) -> int:
+    """Channel block size: explicit, or auto-sized so the whole resident
+    (batch, hp, wp, Cb) input block fits the VMEM slab budget."""
+    if c_block is None:
+        return auto_c_block(hp, wp, C, batch=batch, dtype_bytes=dtype_bytes)
+    return min(c_block, C)
+
+
+def k_blocks(K: int, k_block: int) -> int:
+    """Output-channel block.  Blocks must tile K *exactly*: zero-pad channels
+    inside an LRN window would shadow the real cross-seam neighbours, so a
+    non-dividing ``k_block`` widens to K."""
+    Kb = min(k_block, K)
+    return K if K % Kb else Kb
+
+
+def batch_blocks(B: int, batch_block: int) -> tuple[int, int]:
+    """(Bb, Bp): filter-cache depth and the zero-padded batch extent.
+
+    ``Bb`` images ride in the innermost grid dimension with the weight-block
+    index held constant, so each weight tile streams HBM->VMEM once per
+    ``Bb`` images — the paper's §3.5 filter cache (weights reused across the
+    batch) rather than once per image.
+    """
+    Bb = max(1, min(batch_block, B))
+    return Bb, -(-B // Bb) * Bb
+
+
+def grouped_channel_pad(x, g: int, Cb: int):
+    """(B,H,W,g*C) -> (B,H,W,g*Cp) with each group's channels zero-padded to
+    a ``Cb`` multiple (group-major layout, so the kernel's channel-block
+    index ``(k // nkb) * ncb + c`` lands on the right group)."""
+    B, H, W, Ct = x.shape
+    C = Ct // g
+    padc = (-C) % Cb
+    if not padc:
+        return x, C
+    x5 = x.reshape(B, H, W, g, C)
+    x5 = jnp.pad(x5, ((0, 0), (0, 0), (0, 0), (0, 0), (0, padc)))
+    return x5.reshape(B, H, W, g * (C + padc)), C

@@ -1,8 +1,14 @@
-"""Public entry points for the Winograd conv kernels.
+"""Public entry points for the conv kernel family.
 
-``pallas=True`` routes to the Pallas TPU kernels in ``winograd.py``
-(interpret mode on CPU); ``pallas=False`` uses the pure-jnp Winograd path in
-``repro.core.winograd`` (same transforms, no kernel).
+Two Pallas datapaths share one fused-layer contract (bias, ReLU, groups,
+in-VMEM LRN + max-pool epilogue):
+
+* :func:`conv2d` — the Winograd-domain kernel (``winograd.py``) for
+  stride-1 layers; ``pallas=False`` falls back to the differentiable
+  pure-jnp Winograd path in ``repro.core.winograd``.
+* :func:`conv2d_direct` — the strided direct kernel (``direct.py``) for
+  any kernel size / stride / groups (AlexNet conv1's 11x11 stride 4);
+  ``pallas=False`` falls back to the ``lax.conv_general_dilated`` oracle.
 
 The depthwise-causal op carries a custom VJP (Pallas kernels have no
 autodiff rule): dx is the same Winograd kernel run on the time-reversed
@@ -17,7 +23,9 @@ import jax
 import jax.numpy as jnp
 
 from ...core import winograd as wg
+from . import direct as _d
 from . import winograd as _k
+from .ref import conv2d_ref
 
 
 def _interp(interpret):
@@ -75,9 +83,10 @@ def conv2d(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     Both routes share one signature so they stay numerically
     interchangeable: ``pallas=True`` runs the stream-buffered Pallas kernel
     (in-kernel tiling + channel-block reduction + in-VMEM LRN/pool
-    epilogue), ``pallas=False`` the differentiable pure-jnp Winograd path.
-    ``lrn`` is an :class:`repro.nn.pooling.LrnParams` (or None); ``pool`` is
-    a (window, stride) pair for a VALID max-pool (or None).
+    epilogue + filter-cache batch grid), ``pallas=False`` the
+    differentiable pure-jnp Winograd path.  ``lrn`` is an
+    :class:`repro.nn.pooling.LrnParams` (or None); ``pool`` is a
+    (window, stride) pair for a VALID max-pool (or None).
     """
     if pallas:
         return _k.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
@@ -85,3 +94,21 @@ def conv2d(x, w, b=None, *, m: int = 4, padding: str = "SAME",
                                   interpret=_interp(interpret))
     return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
                               groups=groups, lrn=lrn, pool=pool)
+
+
+def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
+                  relu: bool = False, groups: int = 1, lrn=None, pool=None,
+                  pallas: bool = True, interpret: bool | None = None):
+    """Fused direct conv layer for any kernel/stride geometry.
+
+    ``pallas=True`` runs the strided stream-buffered kernel (``direct.py``)
+    — AlexNet's conv1/conv2 datapath on the ``pallas`` route;
+    ``pallas=False`` is the ``lax.conv_general_dilated`` oracle with the
+    same fused-layer signature (``ref.conv2d_ref``).
+    """
+    if pallas:
+        return _d.conv2d_direct(x, w, b, stride=stride, padding=padding,
+                                relu=relu, groups=groups, lrn=lrn, pool=pool,
+                                interpret=_interp(interpret))
+    return conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
+                      relu=relu, lrn=lrn, pool=pool)

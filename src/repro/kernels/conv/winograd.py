@@ -15,13 +15,22 @@ accumulation into a VMEM scratch (the PE "daisy-chained" partial sums), so
 large-C layers never need all of C resident at once.  Bias + ReLU fuse into
 the kernel epilogue (the DLA's post-PE activation stage) behind a flag.
 
-Grouped convolution folds groups into the batch grid dimension — the weight
-BlockSpec picks the group as `bb // B` — so conv2/4/5 of AlexNet run as one
-kernel launch with no host loop or concatenate.
+Filter cache (paper §3.5): the grid iterates ``batch_block`` images in the
+*innermost* dimension with the weight-block index held constant, so each
+transformed-filter tile streams HBM->VMEM once per ``batch_block`` images
+instead of once per image — the DLA's filter cache, which reuses weights
+across the batch while the stream buffers feed new feature maps.  The
+per-image accumulators and full-channel epilogue scratch carry a leading
+``batch_block`` dim so every in-flight image owns its partial sums.
 
-VMEM budget per grid step (2D): slab Hp*Wp*Cb + filters n^2*Cb*Kb + tiles
-Rb*tw*n^2*Cb + acc n^2*Rb*tw*Kb floats; defaults keep this < 16 MB for
-AlexNet-sized layers.
+Grouped convolution folds groups into the K grid dimension (weight block
+``k // nkb``, input channel block ``(k // nkb) * ncb + c`` on the
+group-major channel layout), so conv2/4/5 of AlexNet run as one kernel
+launch with no host loop or concatenate — and the fused epilogue sees the
+full concatenated channel dim (LRN windows cross group seams).
+
+The in-kernel LRN + max-pool epilogue lives in ``epilogue.py``, shared with
+the strided direct kernel (``direct.py``).
 """
 from __future__ import annotations
 
@@ -33,8 +42,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ...core.winograd import winograd_transform
+from ...core.winograd import auto_pool_rows, winograd_transform
 from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+from .epilogue import batch_blocks, channel_blocks, fused_epilogue, \
+    grouped_channel_pad, k_blocks
 
 
 # ---------------------------------------------------------------------------
@@ -118,47 +129,51 @@ def conv1d_depthwise_causal(x, w, b=None, *, m: int | None = None,
 # ---------------------------------------------------------------------------
 # 2D conv (AlexNet 3x3 -> F(4,3) x F(4,3))
 # ---------------------------------------------------------------------------
-def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
-                   relu: bool):
-    mm, n = at_ref.shape
-    Rb = out_ref.shape[1] // mm
-    tw = out_ref.shape[2] // mm
-    ib = pl.program_id(1)
-    c = pl.program_id(3)
-    nc = pl.num_programs(3)
-
-    @pl.when(c == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    # raw slab rows for this tile-row block (halo overlap r-1 stays in VMEM)
-    rows = x_ref[0, pl.ds(ib * Rb * mm, Rb * mm + n - mm)]  # (rows, Wp, Cb)
+def _tiles_from_rows(rows, n: int, mm: int, nr: int, nw: int):
+    """Overlapping n x n tiles from a VMEM row slab via n^2 strided slices:
+    plane (di, dj) holds element (di, dj) of every tile -> (n,n,nr,nw,Cb)."""
     Cb = rows.shape[-1]
-    # overlapping n x n tiles via n^2 strided slices: plane (di, dj) holds
-    # element (di, dj) of every tile -> (n, n, Rb, tw, Cb)
-    tiles = jnp.stack(
+    return jnp.stack(
         [jnp.stack(
             [jax.lax.slice(rows, (di, dj, 0),
-                           (di + (Rb - 1) * mm + 1, dj + (tw - 1) * mm + 1,
+                           (di + (nr - 1) * mm + 1, dj + (nw - 1) * mm + 1,
                             Cb), (mm, mm, 1))
              for dj in range(n)], axis=0)
          for di in range(n)], axis=0).astype(jnp.float32)
+
+
+def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
+                   relu: bool):
+    mm, n = at_ref.shape
+    _, _, _, Rb, tw, Kb = acc_ref.shape
+    ib = pl.program_id(1)
+    c = pl.program_id(3)
+    nc = pl.num_programs(3)
+    bi = pl.program_id(4)                           # filter-cache image slot
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[bi] = jnp.zeros(acc_ref.shape[1:], acc_ref.dtype)
+
+    # raw slab rows for this tile-row block (halo overlap r-1 stays in VMEM)
+    rows = x_ref[bi, pl.ds(ib * Rb * mm, Rb * mm + n - mm)]  # (rows, Wp, Cb)
+    tiles = _tiles_from_rows(rows, n, mm, Rb, tw)
     BT = bt_ref[...]
     v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
     u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
     # n^2 batched GEMMs on the MXU: (Rb*tw, Cb) @ (Cb, Kb) per (i, j);
     # accumulated over channel blocks in VMEM scratch (PE partial sums)
-    acc_ref[...] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
+    acc_ref[bi] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
 
     @pl.when(c == nc - 1)
     def _epilogue():
         AT = at_ref[...]
-        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[...])
+        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[bi])
         y = jnp.einsum("qj,pjrwk->rpwqk", AT, y)    # (Rb, m, tw, m, Kb)
         y = y.reshape(Rb * mm, tw * mm, -1) + b_ref[0]
         if relu:
             y = jnp.maximum(y, 0.0)
-        out_ref[0] = y.astype(out_ref.dtype)
+        out_ref[bi] = y.astype(out_ref.dtype)
 
 
 def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
@@ -169,92 +184,65 @@ def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
     The k grid dimension spans *all* g*K output channels (groups included);
     each (k, c=last) step deposits its channel block into the full-channel
     ``y_ref`` scratch, and the very last (k, c) step runs the cross-channel
-    LRN + spatial max-pool epilogue and writes only the pooled, normalized
-    slab to HBM — the conv-resolution feature map never leaves VMEM (§3.5).
+    LRN + spatial max-pool epilogue (``epilogue.fused_epilogue``) and writes
+    only the pooled, normalized slab to HBM — the conv-resolution feature
+    map never leaves VMEM (§3.5).
     """
     mm, n = at_ref.shape
-    _, _, Rt, tw, Kb = acc_ref.shape
+    _, _, _, Rt, tw, Kb = acc_ref.shape
     ib = pl.program_id(1)
     k = pl.program_id(2)
     nk = pl.num_programs(2)
     c = pl.program_id(3)
     nc = pl.num_programs(3)
+    bi = pl.program_id(4)                           # filter-cache image slot
 
     @pl.when(c == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        acc_ref[bi] = jnp.zeros(acc_ref.shape[1:], acc_ref.dtype)
 
     # raw slab rows for this output-owning block; successive blocks overlap
     # by Rt - row_step tile rows (the output-side pool halo, kept in VMEM)
-    rows = x_ref[0, pl.ds(ib * row_step * mm, Rt * mm + n - mm)]
-    Cb = rows.shape[-1]
-    tiles = jnp.stack(
-        [jnp.stack(
-            [jax.lax.slice(rows, (di, dj, 0),
-                           (di + (Rt - 1) * mm + 1, dj + (tw - 1) * mm + 1,
-                            Cb), (mm, mm, 1))
-             for dj in range(n)], axis=0)
-         for di in range(n)], axis=0).astype(jnp.float32)
+    rows = x_ref[bi, pl.ds(ib * row_step * mm, Rt * mm + n - mm)]
+    tiles = _tiles_from_rows(rows, n, mm, Rt, tw)
     BT = bt_ref[...]
     v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
     u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
-    acc_ref[...] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
+    acc_ref[bi] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
 
     @pl.when(c == nc - 1)
     def _store_kblock():
         AT = at_ref[...]
-        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[...])
+        y = jnp.einsum("pi,ijrwk->pjrwk", AT, acc_ref[bi])
         y = jnp.einsum("qj,pjrwk->rpwqk", AT, y)    # (Rt, m, tw, m, Kb)
         y = y.reshape(Rt * mm, tw * mm, Kb) + b_ref[0]
         if relu:
             y = jnp.maximum(y, 0.0)
         # channel blocks are group-major contiguous, so block k lands at
         # offset k*Kb of the full concatenated channel dim
-        y_ref[:, :, pl.ds(k * Kb, Kb)] = y
+        y_ref[bi, :, :, pl.ds(k * Kb, Kb)] = y
 
     @pl.when((c == nc - 1) & (k == nk - 1))
     def _epilogue():
-        yf = y_ref[...]                             # (Rt*m, tw*m, Kfull)
-        Kf = yf.shape[-1]
-        if lrn is not None:
-            # cross-channel squared-sum as one (rows*cols, Kf) @ (Kf, Kf)
-            # banded matmul — MXU-shaped, like the conv GEMMs themselves
-            half = lrn.n // 2
-            ci = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 0)
-            cj = jax.lax.broadcasted_iota(jnp.int32, (Kf, Kf), 1)
-            band = (jnp.abs(ci - cj) <= half).astype(jnp.float32)
-            win = jax.lax.dot_general(
-                (yf * yf).reshape(-1, Kf), band, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32).reshape(yf.shape)
-            yf = yf / jnp.power(lrn.k + lrn.alpha / lrn.n * win, lrn.beta)
-        if pool is not None:
-            pwin, ps = pool
-            Pr, Pw = out_ref.shape[1], out_ref.shape[2]
-            yp = None
-            for di in range(pwin):
-                for dj in range(pwin):
-                    sl = jax.lax.slice(
-                        yf, (di, dj, 0),
-                        (di + ps * (Pr - 1) + 1, dj + ps * (Pw - 1) + 1, Kf),
-                        (ps, ps, 1))
-                    yp = sl if yp is None else jnp.maximum(yp, sl)
-            out_ref[0] = yp.astype(out_ref.dtype)
-        else:
-            out_ref[0] = yf[: out_ref.shape[1]].astype(out_ref.dtype)
+        out_ref[bi] = fused_epilogue(
+            y_ref[bi], lrn, pool, out_ref.shape[1],
+            out_ref.shape[2]).astype(out_ref.dtype)
 
 
 def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
                        pool_row_block, row_block, c_block, k_block,
-                       interpret):
+                       batch_block, interpret):
     """pallas_call setup for the layer-fused kernel (lrn and/or pool set).
 
-    Grid restructure vs the plain kernel: the batch dim is B (groups move
+    Grid (B/Bb, pooled-row blocks, g*K blocks, C blocks, Bb): groups move
     into the k dim so the epilogue sees the full concatenated channel dim —
-    LRN windows legitimately cross group seams, as in Krizhevsky conv2),
-    and each row step *owns a pooled output region*: it computes the
-    Rt = ceil((ps*(Pb-1)+pwin)/m) Winograd tile rows its Pb pooled rows
-    need, advancing only row_step = ps*Pb/m tile rows per step, so the
-    pool window never crosses a grid step's slab.
+    LRN windows legitimately cross group seams, as in Krizhevsky conv2 —
+    and ``Bb = batch_block`` images iterate innermost so weight tiles stay
+    VMEM-resident across images (the filter cache).  Each row step *owns a
+    pooled output region*: it computes the Rt = ceil((ps*(Pb-1)+w)/m)
+    Winograd tile rows its Pb pooled rows need, advancing only
+    row_step = ps*Pb/m tile rows per step, so the pool window never crosses
+    a grid step's slab.
     """
     r = w.shape[0]
     mm = t.m
@@ -268,6 +256,7 @@ def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
         ph_pad = 0
         out_h, out_w = H - r + 1, W - r + 1
     tw = -(-out_w // mm)
+    Bb, Bp = batch_blocks(B, batch_block)
 
     if pool is not None:
         pwin, ps = pool
@@ -277,7 +266,13 @@ def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
             f"pool {pool} larger than conv output {out_h}x{out_w}")
         # alignment: each step's first conv row ps*Pb*i must be tile-aligned
         q = mm // math.gcd(ps, mm)
-        Pb = q * (-(-min(pool_row_block, ph_out) // q))
+        if pool_row_block is None:
+            # own the whole pooled extent when the epilogue scratch fits —
+            # one row step, so grouped layers never re-fetch their slab
+            Pb = auto_pool_rows(ph_out, pwin, ps, align=q, row_align=mm,
+                                cols=tw * mm, kfull=g * K, batch=Bb)
+        else:
+            Pb = q * (-(-min(pool_row_block, ph_out) // q))
         row_step = ps * Pb // mm
         Rt = -(-(ps * (Pb - 1) + pwin) // mm)
         npr = -(-ph_out // Pb)
@@ -291,81 +286,87 @@ def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
     Hp = thp * mm + r - 1
     Wp = tw * mm + r - 1
 
-    Cb = min(c_block, C)
-    padc = (-C) % Cb
-    Cp = C + padc
+    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
+    Cp = C + (-C) % Cb
     # no K padding: zero pad channels inside an LRN window would shadow the
     # real cross-seam neighbours, so blocks must tile K exactly
-    Kb = min(k_block, K)
-    if K % Kb:
-        Kb = K
+    Kb = k_blocks(K, k_block)
     nkb = K // Kb
+    ncb = Cp // Cb
     Kfull = g * K
 
-    x5 = x.reshape(B, H, W, g, C)
-    if padc:
-        x5 = jnp.pad(x5, ((0, 0), (0, 0), (0, 0), (0, 0), (0, padc)))
-    xg = x5.reshape(B, H, W, g * Cp)
-    xg = jnp.pad(xg, ((0, 0), (ph_pad, Hp - H - ph_pad),
+    xg, _ = grouped_channel_pad(x, g, Cb)
+    # a pool with stride > window skips trailing conv rows, so the pooled
+    # row plan may read fewer rows than the conv extent — crop, then pad
+    used_h = min(H, Hp - ph_pad)
+    xg = xg[:, :used_h]
+    xg = jnp.pad(xg, ((0, Bp - B), (ph_pad, Hp - used_h - ph_pad),
                       (ph_pad, Wp - W - ph_pad), (0, 0)))
 
     wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
     Gj = jnp.asarray(t.G, jnp.float32)
     wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
-    if padc:
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padc), (0, 0)))
+    if Cp > C:
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, 0)))
     bias = jnp.zeros((Kfull,), x.dtype) if b is None else b
     bg = bias.reshape(g * nkb, Kb)
 
-    ncb = Cp // Cb
     kernel = functools.partial(_conv2d_fused_kernel, relu=relu, lrn=lrn,
                                pool=pool, row_step=row_step)
     out = pl.pallas_call(
         kernel,
-        grid=(B, npr, g * nkb, ncb),
+        grid=(Bp // Bb, npr, g * nkb, ncb, Bb),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, Cb),
-                         lambda bb, i, k, c: (bb, 0, 0, (k // nkb) * ncb + c)),
+            pl.BlockSpec((Bb, Hp, Wp, Cb),
+                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+                         (bo, 0, 0, (k // nkb) * ncb + c)),
             pl.BlockSpec((1, t.n, t.n, Cb, Kb),
-                         lambda bb, i, k, c: (k // nkb, 0, 0, c, k % nkb)),
-            pl.BlockSpec((1, Kb), lambda bb, i, k, c: (k, 0)),
-            pl.BlockSpec((t.n, t.n), lambda bb, i, k, c: (0, 0)),
-            pl.BlockSpec((t.m, t.n), lambda bb, i, k, c: (0, 0)),
+                         lambda bo, i, k, c, bi, nkb=nkb:
+                         (k // nkb, 0, 0, c, k % nkb)),
+            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+            pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, rows_out, w_out, Kfull),
-                               lambda bb, i, k, c: (bb, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, npr * rows_out, w_out, Kfull),
+        out_specs=pl.BlockSpec((Bb, rows_out, w_out, Kfull),
+                               lambda bo, i, k, c, bi: (bo, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bp, npr * rows_out, w_out, Kfull),
                                        x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((t.n, t.n, Rt, tw, Kb), jnp.float32),
-            pltpu.VMEM((Rt * mm, tw * mm, Kfull), jnp.float32),
+            pltpu.VMEM((Bb, t.n, t.n, Rt, tw, Kb), jnp.float32),
+            pltpu.VMEM((Bb, Rt * mm, tw * mm, Kfull), jnp.float32),
         ],
         compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
-                                            ARBITRARY),
+                                            ARBITRARY, ARBITRARY),
         interpret=interpret,
     )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
     if pool is not None:
-        return out[:, :ph_out]
-    return out[:, :out_h, :out_w]
+        return out[:B, :ph_out]
+    return out[:B, :out_h, :out_w]
 
 
 @functools.partial(jax.jit, static_argnames=("m", "padding", "relu", "groups",
                                              "lrn", "pool", "row_block",
                                              "c_block", "k_block",
-                                             "pool_row_block", "interpret"))
+                                             "pool_row_block", "batch_block",
+                                             "interpret"))
 def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
                     relu: bool = False, groups: int = 1, lrn=None, pool=None,
-                    row_block: int = 8, pool_row_block: int = 4,
-                    c_block: int = 128, k_block: int = 128,
-                    interpret: bool = True):
+                    row_block: int = 8, pool_row_block: int | None = None,
+                    c_block: int | None = None, k_block: int = 128,
+                    batch_block: int = 8, interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
 
     Fused pipeline: raw (halo-padded) feature map slabs stream HBM->VMEM via
     the grid pipeline; tiles, transforms, Winograd GEMMs, channel-block
     accumulation, and the bias+ReLU epilogue all happen in-kernel.  Groups
-    fold into the batch grid dimension (weight block picked by ``bb // B``).
+    fold into the K grid dimension on a group-major channel layout.
+
+    Filter cache (paper §3.5): ``batch_block`` images ride the innermost
+    grid dimension with the weight-block index constant, so each transformed
+    filter tile is fetched once per ``batch_block`` images instead of once
+    per image; per-image accumulators carry the extra leading dim.
 
     Layer fusion (paper §3.5): with ``lrn`` (an LrnParams-like object) and/or
     ``pool`` ((window, stride)) the cross-channel LRN and VALID max-pool run
@@ -377,12 +378,11 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
 
     Stream-buffer residency (paper §3.5): like the DLA — whose stream
     buffers hold whole AlexNet feature-map planes in M20K — one full
-    (Hp, Wp, c_block) image plane is VMEM-resident per step; ``c_block``
-    bounds the channel footprint (large C never fully resident), while the
-    spatial plane must fit (13x13..56x56-class layers do; ~224x224 at
-    c_block=128 would not — shrink ``c_block`` there).  ``row_block`` tiles
-    the *compute* (tiles/scratch), not input residency; smaller row_block
-    trades VMEM scratch for slab re-fetches (see ``conv2d_hbm_bytes``).
+    (Hp, Wp, c_block) image plane is VMEM-resident per image slot;
+    ``c_block=None`` auto-sizes the channel block so the slab fits the VMEM
+    budget (AlexNet layers get all of C resident — no slab re-fetch over the
+    channel-block reduction), and ``row_block`` tiles the *compute*
+    (tiles/scratch), not input residency (see ``conv2d_hbm_bytes``).
     """
     r = w.shape[0]
     t = winograd_transform(m, r)
@@ -391,7 +391,8 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
                                   groups=groups, lrn=lrn, pool=pool,
                                   pool_row_block=pool_row_block,
                                   row_block=row_block, c_block=c_block,
-                                  k_block=k_block, interpret=interpret)
+                                  k_block=k_block, batch_block=batch_block,
+                                  interpret=interpret)
     B, H, W, Ct = x.shape
     Kt = w.shape[-1]
     g = groups
@@ -410,53 +411,60 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     Hp = thp * t.m + r - 1
     Wp = tw * t.m + r - 1
 
-    # groups -> leading (batch) axis; raw zero-pad only, no tile gather
-    xg = jnp.moveaxis(x.reshape(B, H, W, g, C), 3, 0).reshape(g * B, H, W, C)
-    xg = jnp.pad(xg, ((0, 0), (ph, Hp - H - ph), (ph, Wp - W - ph), (0, 0)))
+    Bb, Bp = batch_blocks(B, batch_block)
+    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
+    Cp = C + (-C) % Cb
+    ncb = Cp // Cb
+    Kb = min(k_block, K)
+    padk = (-K) % Kb
+    Kp = K + padk
+    nkb = Kp // Kb
+
+    # group-major channel layout, raw zero-pad only — no tile gather
+    xg, _ = grouped_channel_pad(x, g, Cb)
+    xg = jnp.pad(xg, ((0, Bp - B), (ph, Hp - H - ph), (ph, Wp - W - ph),
+                      (0, 0)))
     wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
 
     # filter transform host-side (tiny): V = G w G^T per group
     Gj = jnp.asarray(t.G, jnp.float32)
     wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
-
-    Cb = min(c_block, C)
-    padc = (-C) % Cb
-    if padc:
-        xg = jnp.pad(xg, ((0, 0), (0, 0), (0, 0), (0, padc)))
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, padc), (0, 0)))
-    Kb = min(k_block, K)
-    padk = (-K) % Kb
-    if padk:
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, 0), (0, padk)))
-    Cp, Kp = C + padc, K + padk
+    if Cp > C or padk:
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, padk)))
     bias = jnp.zeros((Kt,), x.dtype) if b is None else b
     bg = bias.reshape(g, K)
     if padk:
         bg = jnp.pad(bg, ((0, 0), (0, padk)))
+    bg = bg.reshape(g * nkb, Kb)
 
     kernel = functools.partial(_conv2d_kernel, relu=relu)
     out = pl.pallas_call(
         kernel,
-        grid=(g * B, thp // Rb, Kp // Kb, Cp // Cb),
+        grid=(Bp // Bb, thp // Rb, g * nkb, ncb, Bb),
         in_specs=[
-            pl.BlockSpec((1, Hp, Wp, Cb),
-                         lambda bb, i, k, c: (bb, 0, 0, c)),
+            pl.BlockSpec((Bb, Hp, Wp, Cb),
+                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+                         (bo, 0, 0, (k // nkb) * ncb + c)),
             pl.BlockSpec((1, t.n, t.n, Cb, Kb),
-                         lambda bb, i, k, c: (bb // B, 0, 0, c, k)),
-            pl.BlockSpec((1, Kb), lambda bb, i, k, c: (bb // B, k)),
-            pl.BlockSpec((t.n, t.n), lambda bb, i, k, c: (0, 0)),
-            pl.BlockSpec((t.m, t.n), lambda bb, i, k, c: (0, 0)),
+                         lambda bo, i, k, c, bi, nkb=nkb:
+                         (k // nkb, 0, 0, c, k % nkb)),
+            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+            pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
+            pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, Rb * t.m, tw * t.m, Kb),
-                               lambda bb, i, k, c: (bb, i, 0, k)),
-        out_shape=jax.ShapeDtypeStruct((g * B, thp * t.m, tw * t.m, Kp),
+        out_specs=pl.BlockSpec((Bb, Rb * t.m, tw * t.m, Kb),
+                               lambda bo, i, k, c, bi: (bo, i, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((Bp, thp * t.m, tw * t.m, g * Kp),
                                        x.dtype),
-        scratch_shapes=[pltpu.VMEM((t.n, t.n, Rb, tw, Kb), jnp.float32)],
-        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, PARALLEL,
-                                            ARBITRARY),
+        scratch_shapes=[pltpu.VMEM((Bb, t.n, t.n, Rb, tw, Kb), jnp.float32)],
+        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
+                                            ARBITRARY, ARBITRARY),
         interpret=interpret,
     )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
-    y = out[:, :out_h, :out_w, :K].reshape(g, B, out_h, out_w, K)
-    return y.transpose(1, 2, 3, 0, 4).reshape(B, out_h, out_w, g * K)
+    y = out[:B, :out_h, :out_w]
+    if padk:
+        y = y.reshape(B, out_h, out_w, g, Kp)[..., :K]
+        y = y.reshape(B, out_h, out_w, g * K)
+    return y

@@ -39,6 +39,12 @@ def apply_cnn_route(cfg, route: str):
 def serve_images(cfg, args) -> int:
     """Image-classification serving path (paper §3.5/§3.7 regime)."""
     cfg = apply_cnn_route(cfg, getattr(args, "route", "auto"))
+    if hasattr(cfg, "conv_channels"):
+        # per-layer resolved datapaths — `--route pallas` must show every
+        # layer on a Pallas kernel, not a silent lax fallback
+        from ..models.alexnet import layer_routes
+        routes = layer_routes(cfg)
+        print("conv routes: " + " ".join(f"{n}={r}" for n, r in routes))
     scfg = CnnServeConfig(max_batch=args.max_batch,
                           data_parallel=args.data_parallel)
     eng = CnnEngine(cfg, scfg, seed=args.seed)

@@ -1,25 +1,27 @@
 """AlexNet — the paper's own benchmark network, end-to-end in JAX.
 
 All layers run on-device (the paper's headline point vs conv-only FPGA
-work): conv (Winograd F(4,3) for the 3x3 layers, direct for conv1/conv2 as
-in the paper), ReLU, cross-channel LRN, max-pool, and the batched FC layers
-(§3.7).  Each conv *layer* — including its LRN/pool epilogue — is one
-:class:`~repro.nn.conv.ConvSpec`, so on the Pallas route the post-conv
-stages run in VMEM and the full-resolution feature map never round-trips
-HBM between conv, norm, and pool (§3.5).  Grouped convolutions (conv2/4/5)
+work): conv (Winograd F(4,3) for the 3x3 layers, the strided direct
+datapath for conv1/conv2 as in the paper), ReLU, cross-channel LRN,
+max-pool, and the batched FC layers (§3.7).  Each conv *layer* — including
+its LRN/pool epilogue — is one :class:`~repro.nn.conv.ConvSpec`, and all
+*five* layers are pallas-servable: under ``use_pallas`` the 3x3 layers hit
+the Winograd-domain kernel and conv1 (11x11 stride 4) / conv2 (5x5) hit
+the strided direct kernel, so every layer's post-conv stages run in VMEM
+and no feature map round-trips HBM between conv, norm, and pool (§3.5) —
+no layer falls back to ``lax.conv``.  Grouped convolutions (conv2/4/5)
 follow Krizhevsky.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, replace
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from ..kernels.bfp_matmul.ops import bfp_matmul
-from ..nn.conv import ConvSpec, dispatch_conv
+from ..kernels.bfp_matmul.ops import bfp_linear
+from ..nn.conv import ConvSpec, dispatch_conv, resolve_kernel
 from ..nn.module import param, split
 from ..nn.pooling import LrnParams
 
@@ -53,8 +55,9 @@ def layer_specs(cfg: "AlexNetConfig") -> List[ConvSpec]:
 
     conv1/conv2 carry LRN + pool, conv5 pool only; every conv fuses
     bias+ReLU and routes through ``repro.nn.conv.dispatch_conv`` (the 3x3
-    stride-1 layers are Winograd-eligible; conv1/conv2 go direct, as in the
-    paper).
+    stride-1 layers are Winograd-eligible; conv1/conv2 take the direct
+    datapath — the strided Pallas kernel on the pallas route — as in the
+    paper's non-Winograd first layer).
     """
     lrn = LrnParams(n=cfg.lrn_n, k=cfg.lrn_k, alpha=cfg.lrn_alpha,
                     beta=cfg.lrn_beta)
@@ -74,6 +77,21 @@ def _route(cfg: "AlexNetConfig") -> str:
     if not cfg.use_winograd:
         return "direct"
     return "pallas" if cfg.use_pallas else "winograd"
+
+
+def layer_routes(cfg: "AlexNetConfig") -> List[Tuple[str, str]]:
+    """(layer name, fully resolved datapath) per conv layer — what serving
+    logs print so ``--route pallas`` shows conv1/conv2 on ``pallas-direct``
+    instead of silently degrading.  Shape-aware: each layer's input extent
+    is threaded through, so the report matches what dispatch_conv runs."""
+    route = _route(cfg)
+    routes = []
+    h = cfg.image_size
+    for i, spec in enumerate(layer_specs(cfg)):
+        routes.append((f"conv{i + 1}",
+                       resolve_kernel(spec.with_route(route), in_hw=h)))
+        h = spec.out_hw(h)
+    return routes
 
 
 def init(key, cfg: AlexNetConfig):
@@ -137,11 +155,7 @@ def classifier(params, cfg: AlexNetConfig, feats):
     for j in range(n_fc):
         p = params[f"fc{j+6}"]
         if cfg.fc_bfp:
-            # block must tile the contraction dim (reduced configs have
-            # small FC widths); 32 is the paper-faithful group size
-            blk = math.gcd(x.shape[-1], 32)
-            x = (bfp_matmul(x.astype(jnp.float32),
-                            p["w"].astype(jnp.float32), block=blk)
+            x = (bfp_linear(x, p["w"])
                  + p["b"].astype(jnp.float32)).astype(x.dtype)
         else:
             x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)

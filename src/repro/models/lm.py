@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from ..config import ArchConfig
+from ..kernels.bfp_matmul.ops import bfp_linear
 from ..nn.blocks import stack_apply, stack_cache_shape, stack_init
 from ..nn.layers import embed, embed_attend, embed_init, linear, linear_init, norm, norm_init
 from ..nn.module import split
@@ -32,6 +33,12 @@ def _readout(params, cfg, x):
     x = x.astype(jnp.dtype(cfg.dtype))
     if cfg.tie_embeddings:
         logits = embed_attend(params["embed"], x)
+    elif cfg.fc_bfp:
+        # paper §3.6 on the decode engine's FC path: every decode step
+        # streams the full (d_model, vocab) head, so the weight bandwidth
+        # bound is the paper's FC regime — move the stream as
+        # shared-exponent int8 BFP (1 byte/value) instead of f32
+        logits = bfp_linear(x, params["lm_head"]["w"])
     else:
         logits = linear(params["lm_head"], x, dtype=jnp.float32)
     return constrain(logits, ("batch", "seq", "vocab"))

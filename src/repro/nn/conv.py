@@ -11,18 +11,26 @@ Routes
 ``direct``    ``lax.conv_general_dilated`` (any kernel/stride; groups via
               ``feature_group_count``), bias/ReLU/LRN/pool as epilogue.
 ``winograd``  pure-jnp F(m,r) x F(m,r) path (differentiable; training).
-``pallas``    stream-buffered Pallas kernel (in-kernel tiling, channel-block
-              reduction, fused bias+ReLU+LRN+pool epilogue; inference).
+``pallas``    stream-buffered Pallas kernels (in-kernel tiling,
+              channel-block reduction, filter-cache batch grid, fused
+              bias+ReLU+LRN+pool epilogue; inference).
 ``auto``      ``winograd`` when eligible, else ``direct``.
 
-Winograd routes require stride 1 and a 3x3 kernel (the paper's F(4,3)
-layers); ineligible specs silently fall back to ``direct`` so models never
-need their own conv branching.
+Winograd math requires stride 1 and a 3x3 kernel (the paper's F(4,3)
+layers).  The ``pallas`` route serves *every* geometry: Winograd-eligible
+specs hit the Winograd-domain kernel, everything else (AlexNet's 11x11
+stride-4 conv1, the 5x5 conv2, pointwise, ...) hits the strided direct
+kernel — like the paper's DLA, whose stream buffers feed both the Winograd
+PEs and the non-Winograd first layer (§3.3/§3.5).  Only the pure-jnp
+``winograd`` route still falls back to ``direct`` on ineligible specs.
+:func:`resolve_kernel` exposes the fully resolved datapath
+(``pallas-winograd`` / ``pallas-direct`` / ``winograd`` / ``direct``) so
+serving can log per-layer routes instead of degrading silently.
 
 Layer-level fusion (paper §3.5): with ``fuse_lrn`` / ``fuse_pool`` the
 post-conv stages run inside the conv call — in VMEM on the Pallas route, so
 the full-resolution feature map never round-trips HBM between conv, norm,
-and pool.  All three routes share one fused signature and stay numerically
+and pool.  All routes share one fused signature and stay numerically
 interchangeable against the unfused conv -> lrn -> maxpool reference
 (``repro.nn.pooling``).
 """
@@ -33,11 +41,31 @@ from dataclasses import dataclass, replace
 import jax.numpy as jnp
 
 from ..core.winograd import conv2d_winograd
-from ..kernels.winograd.ops import conv2d as pallas_conv2d
-from ..kernels.winograd.ref import conv2d_ref
+from ..kernels.conv.ops import conv2d as pallas_conv2d
+from ..kernels.conv.ops import conv2d_direct as pallas_conv2d_direct
+from ..kernels.conv.ref import conv2d_ref
 from .pooling import LrnParams, apply_epilogue, pooled_hw
 
 ROUTES = ("auto", "direct", "winograd", "pallas")
+
+# fully resolved datapaths reported by resolve_kernel
+KERNELS = ("direct", "winograd", "pallas-winograd", "pallas-direct")
+
+# resolved datapath -> (conv2d_hbm_bytes route, uses winograd transform):
+# the one place benchmarks/tests translate a datapath into model terms
+MODEL_ROUTES = {
+    "pallas-winograd": ("pallas", True),
+    "pallas-direct": ("pallas", False),
+    "winograd": ("winograd", True),
+    "direct": ("direct", False),
+}
+
+
+def conv_out_hw(extent: int, kernel: int, stride: int, padding: str) -> int:
+    """Conv output extent (lax SAME/VALID semantics) — the one formula
+    every spec/guard/model shares."""
+    return ((extent - kernel) // stride + 1 if padding == "VALID"
+            else -(-extent // stride))
 
 
 @dataclass(frozen=True)
@@ -76,28 +104,56 @@ class ConvSpec:
 
     def out_hw(self, h: int) -> int:
         """Layer output extent for input extent ``h`` (conv then pool)."""
-        h = ((h - self.kernel) // self.stride + 1 if self.padding == "VALID"
-             else -(-h // self.stride))
+        h = conv_out_hw(h, self.kernel, self.stride, self.padding)
         if self.fuse_pool:
             h = pooled_hw(h, self.pool_window, self.pool_stride)
         return h
 
 
 def resolve_route(spec: ConvSpec) -> str:
-    """Final route after eligibility fallback (never returns "auto")."""
+    """Final route after eligibility fallback (never returns "auto").
+
+    ``pallas`` is always honored — the strided direct kernel serves every
+    geometry the Winograd kernel cannot.  Only the pure-jnp ``winograd``
+    route (stride-1 3x3 math, no direct twin) still falls back to
+    ``direct``.
+    """
     if spec.route == "auto":
         return "winograd" if spec.winograd_eligible else "direct"
-    if spec.route in ("winograd", "pallas") and not spec.winograd_eligible:
+    if spec.route == "winograd" and not spec.winograd_eligible:
         return "direct"
     return spec.route
+
+
+def resolve_kernel(spec: ConvSpec, in_hw=None) -> str:
+    """The fully resolved datapath this spec will execute — what serving
+    logs report per layer (``--route pallas`` shows ``pallas-direct`` for
+    conv1/conv2 instead of silently degrading to lax).
+
+    Pass ``in_hw`` (an int extent or an (h, w) pair) to also resolve the
+    one shape-dependent fallback exactly as ``dispatch_conv`` will: a
+    fused pool window larger than the conv output has no VALID pooled
+    region for a Pallas row block to own, so the lax path runs (and emits
+    the empty pooled map).  Without ``in_hw`` that case reports the Pallas
+    kernel the spec would use on a large-enough input.
+    """
+    route = resolve_route(spec)
+    if route != "pallas":
+        return route
+    if in_hw is not None and spec.fuse_pool:
+        hw = (in_hw, in_hw) if isinstance(in_hw, int) else in_hw
+        if min(conv_out_hw(e, spec.kernel, spec.stride, spec.padding)
+               for e in hw) < spec.pool_window:
+            return "direct"
+    return "pallas-winograd" if spec.winograd_eligible else "pallas-direct"
 
 
 def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
     """Run one conv layer per its spec.  x (B,H,W,C), w (k,k,C//g,K), b (K,).
 
     Grouped convs are batched (``feature_group_count`` on the direct route,
-    a group-folded kernel grid / vmap on the Winograd routes) — never a
-    Python loop over groups.  LRN always spans the *full* concatenated
+    a group-folded kernel grid / vmap on the Winograd/Pallas routes) — never
+    a Python loop over groups.  LRN always spans the *full* concatenated
     channel dimension, including across group seams (Krizhevsky conv2).
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
@@ -110,14 +166,19 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
     lrn_p = spec.lrn if spec.fuse_lrn and not defer_bias else None
     pool = ((spec.pool_window, spec.pool_stride)
             if spec.fuse_pool and not defer_bias else None)
-    route = resolve_route(spec)
-    if route == "direct":
+    kernel = resolve_kernel(spec, in_hw=(x.shape[1], x.shape[2]))
+    if kernel == "direct":
         y = conv2d_ref(x, w, bias, stride=spec.stride, padding=spec.padding,
                        groups=spec.groups, relu=relu, lrn=lrn_p, pool=pool)
-    elif route == "pallas":
+    elif kernel == "pallas-winograd":
         y = pallas_conv2d(x, w, bias, m=spec.winograd_m, padding=spec.padding,
                           relu=relu, groups=spec.groups, lrn=lrn_p, pool=pool,
                           pallas=True, interpret=interpret)
+    elif kernel == "pallas-direct":
+        y = pallas_conv2d_direct(x, w, bias, stride=spec.stride,
+                                 padding=spec.padding, relu=relu,
+                                 groups=spec.groups, lrn=lrn_p, pool=pool,
+                                 pallas=True, interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
                             padding=spec.padding, relu=relu,

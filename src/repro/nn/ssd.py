@@ -25,13 +25,13 @@ from .module import split
 
 # --------------------------------------------------------------------------
 # depthwise causal conv1d (k taps, pure jnp baseline; Pallas Winograd kernel
-# in repro.kernels.winograd is the drop-in optimized version)
+# in repro.kernels.conv is the drop-in optimized version)
 # --------------------------------------------------------------------------
 def causal_conv1d(w, b, x, use_winograd: bool = False):
     """x (B, L, ch); w (k, ch); left-padded causal depthwise conv.
 
     use_winograd routes through the pure-jnp F(3,4) Winograd path — the
-    GSPMD-partitionable twin of the Pallas kernel in kernels/winograd (which
+    GSPMD-partitionable twin of the Pallas kernel in kernels/conv (which
     is used directly on single TPU cores / under shard_map)."""
     if use_winograd:
         from ..core.winograd import conv1d_depthwise_causal as wg_conv

@@ -1,10 +1,14 @@
-"""nn/conv.py routing: resolve_route truth table + dispatch equivalence.
+"""nn/conv.py routing: resolve_route/resolve_kernel truth table + dispatch
+equivalence.
 
 `resolve_route` is the single policy point every model conv goes through
 (PR-1's ConvSpec dispatch layer); these tests pin the full route x
 eligibility truth table and, property-based, that every route agrees with
-the direct `lax.conv_general_dilated` oracle for random geometry —
-including the silent ``pallas``/``winograd`` -> ``direct`` fallback.
+the direct `lax.conv_general_dilated` oracle for random geometry.  Since
+the strided direct Pallas kernel landed, ``route="pallas"`` never silently
+degrades: Winograd-ineligible specs resolve to ``pallas-direct`` (the
+paper's non-Winograd first-layer datapath), and only the pure-jnp
+``winograd`` route still falls back to ``direct``.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -12,8 +16,9 @@ import pytest
 
 from _hyp import HAVE_HYPOTHESIS, assume, given, settings, st  # optional shim
 
-from repro.kernels.winograd.ref import conv2d_ref
-from repro.nn.conv import ROUTES, ConvSpec, dispatch_conv, resolve_route
+from repro.kernels.conv.ref import conv2d_ref
+from repro.nn.conv import (KERNELS, ROUTES, ConvSpec, conv_out_hw,
+                           dispatch_conv, resolve_kernel, resolve_route)
 
 # geometry -> winograd eligibility (stride 1 and 3x3 kernel, paper F(4,3))
 GEOMETRIES = [
@@ -36,34 +41,84 @@ def test_resolve_route_truth_table(route, kernel, stride, eligible):
         expect = "direct"                      # explicit direct never changes
     elif route == "auto":
         expect = "winograd" if eligible else "direct"
-    else:  # winograd / pallas honored only when eligible
-        expect = route if eligible else "direct"
+    elif route == "winograd":                  # jnp path: stride-1 3x3 only
+        expect = "winograd" if eligible else "direct"
+    else:                                      # pallas serves every geometry
+        expect = "pallas"
     assert got == expect, (spec, got, expect)
     assert got != "auto"                       # always fully resolved
+
+
+@pytest.mark.parametrize("kernel,stride,eligible", GEOMETRIES)
+def test_resolve_kernel_exposes_pallas_datapath(kernel, stride, eligible):
+    """The resolved-datapath helper serving logs use: pallas specs report
+    which Pallas kernel will run instead of degrading silently."""
+    spec = ConvSpec(kernel=kernel, stride=stride, route="pallas")
+    got = resolve_kernel(spec)
+    assert got == ("pallas-winograd" if eligible else "pallas-direct")
+    for route in ("auto", "direct", "winograd"):
+        k = resolve_kernel(ConvSpec(kernel=kernel, stride=stride,
+                                    route=route))
+        assert k == resolve_route(ConvSpec(kernel=kernel, stride=stride,
+                                           route=route))
+        assert k in KERNELS
 
 
 def test_resolve_route_never_auto_never_invalid():
     for route in ROUTES:
         for kernel, stride, _ in GEOMETRIES:
-            r = resolve_route(ConvSpec(kernel=kernel, stride=stride,
-                                       route=route))
-            assert r in ("direct", "winograd", "pallas")
+            spec = ConvSpec(kernel=kernel, stride=stride, route=route)
+            assert resolve_route(spec) in ("direct", "winograd", "pallas")
+            assert resolve_kernel(spec) in KERNELS
 
 
-def test_silent_pallas_fallback_is_exactly_direct():
-    """Ineligible pallas/winograd specs take the *identical* code path as
-    route="direct": bit-equal outputs, not merely close."""
+def test_silent_winograd_fallback_is_exactly_direct():
+    """Ineligible *winograd* specs take the identical code path as
+    route="direct": bit-equal outputs, not merely close.  (pallas no longer
+    falls back — it runs the strided direct kernel; checked for closeness.)
+    """
     rng = np.random.default_rng(5)
     x = jnp.asarray(rng.standard_normal((2, 9, 9, 4)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((5, 5, 2, 6)) * 0.2, jnp.float32)
     b = jnp.asarray(rng.standard_normal((6,)), jnp.float32)
     kw = dict(kernel=5, stride=2, groups=2, relu=True)
     ref = dispatch_conv(ConvSpec(route="direct", **kw), x, w, b)
-    for route in ("pallas", "winograd", "auto"):
+    for route in ("winograd", "auto"):
         spec = ConvSpec(route=route, **kw)
         assert resolve_route(spec) == "direct"
         out = dispatch_conv(spec, x, w, b)
         assert np.array_equal(np.asarray(out), np.asarray(ref)), route
+    spec = ConvSpec(route="pallas", **kw)
+    assert resolve_kernel(spec) == "pallas-direct"
+    out = dispatch_conv(spec, x, w, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_pool_larger_than_output_falls_back():
+    """The single remaining pallas fallback: a fused pool window larger
+    than the conv output has no VALID pooled region for the kernel's
+    row-blocks to own, so dispatch degrades to the lax path (which emits
+    an empty pooled map) — on both the direct and the winograd datapath."""
+    # pallas-direct: stride 2, conv out 2x2 < pool window
+    spec = ConvSpec(kernel=3, stride=2, padding="VALID", fuse_pool=True,
+                    pool_window=3, route="pallas")
+    x = jnp.zeros((1, 5, 5, 4), jnp.float32)
+    w = jnp.zeros((3, 3, 4, 4), jnp.float32)
+    out = dispatch_conv(spec, x, w, None, interpret=True)
+    assert out.shape[1] == 0                   # same as the lax reference
+    # pallas-winograd: stride-1 3x3 VALID on 4x4 input, conv out 2x2 < 3
+    spec = ConvSpec(kernel=3, padding="VALID", fuse_pool=True,
+                    pool_window=3, route="pallas")
+    assert resolve_kernel(spec) == "pallas-winograd"
+    # shape-aware resolution reports the fallback dispatch will take, so
+    # serving logs / benchmark rows can't claim pallas while lax runs
+    assert resolve_kernel(spec, in_hw=4) == "direct"
+    assert resolve_kernel(spec, in_hw=(9, 4)) == "direct"
+    assert resolve_kernel(spec, in_hw=9) == "pallas-winograd"
+    out = dispatch_conv(spec, jnp.zeros((1, 4, 4, 4), jnp.float32), w, None,
+                        interpret=True)
+    assert out.shape[1] == 0
 
 
 def test_invalid_spec_rejected():
@@ -80,11 +135,6 @@ def test_invalid_spec_rejected():
 # ---------------------------------------------------------------------------
 # property tests: route equivalence on random geometry (tests/_hyp.py shim)
 # ---------------------------------------------------------------------------
-def _conv_out_hw(h, kernel, stride, padding):
-    return ((h - kernel) // stride + 1 if padding == "VALID"
-            else -(-h // stride))
-
-
 def _run_spec(route, kernel, stride, padding, groups, relu, fuse_bias, seed,
               interpret=None, fuse_lrn=False, fuse_pool=False, H=8):
     rng = np.random.default_rng(seed)
@@ -119,7 +169,7 @@ def test_auto_and_winograd_routes_match_direct(kernel, stride, padding,
     stride/padding/groups/fusion flags, whether the spec resolves to
     winograd or silently falls back."""
     H = 9
-    assume(not fuse_pool or _conv_out_hw(H, kernel, stride, padding) >= 3)
+    assume(not fuse_pool or conv_out_hw(H, kernel, stride, padding) >= 3)
     for route in ("auto", "winograd"):
         spec, out, ref = _run_spec(route, kernel, stride, padding, groups,
                                    relu, fuse_bias, seed, fuse_lrn=fuse_lrn,
@@ -141,19 +191,18 @@ def test_auto_and_winograd_routes_match_direct(kernel, stride, padding,
 def test_pallas_route_matches_direct(kernel, stride, padding, groups, relu,
                                      fuse_lrn, fuse_pool, seed):
     """pallas (interpret mode on CPU) == unfused oracle, incl. the in-kernel
-    LRN/pool epilogue; ineligible specs exercise the silent pallas ->
-    direct fallback."""
+    LRN/pool epilogue; ineligible specs now exercise the strided *direct
+    Pallas kernel* (never a silent lax fallback).  The wider
+    kernel-size/stride sweep lives in tests/test_direct_conv.py."""
     H = 9
-    assume(not fuse_pool or _conv_out_hw(H, kernel, stride, padding) >= 3)
+    assume(not fuse_pool or conv_out_hw(H, kernel, stride, padding) >= 3)
     spec, out, ref = _run_spec("pallas", kernel, stride, padding, groups,
                                relu, True, seed, interpret=True,
                                fuse_lrn=fuse_lrn, fuse_pool=fuse_pool, H=H)
+    assert resolve_route(spec) == "pallas"
     assert out.shape == ref.shape, spec
-    if resolve_route(spec) == "direct" and not (fuse_lrn or fuse_pool):
-        np.testing.assert_array_equal(out, ref, err_msg=str(spec))
-    else:
-        np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3,
-                                   err_msg=str(spec))
+    np.testing.assert_allclose(out, ref, rtol=2e-3, atol=2e-3,
+                               err_msg=str(spec))
 
 
 def test_property_suite_present():

@@ -1,0 +1,168 @@
+"""Strided direct Pallas conv kernel vs the lax oracle (paper §3.3/§3.5).
+
+The direct kernel is the pallas route's datapath for every geometry the
+Winograd kernel can't take (AlexNet conv1's 11x11 stride 4, conv2's 5x5,
+pointwise, ...).  The hypothesis suite sweeps random kernel sizes (1-11),
+strides (1-4), groups, SAME/VALID, and the fusion flags against
+``lax.conv_general_dilated`` (+ the unfused epilogue reference) in
+interpret mode on CPU; deterministic sweeps pin the AlexNet geometries,
+block decompositions, and the filter-cache batch grid.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import assume, given, settings, st  # optional-hypothesis shim
+
+from repro.kernels.conv.direct import conv2d_direct, same_pad
+from repro.kernels.conv.ref import conv2d_ref
+from repro.nn.conv import conv_out_hw
+from repro.nn.pooling import LrnParams, apply_epilogue
+
+
+def _ref(x, w, b, *, stride, padding, groups=1, relu=False, lrn=None,
+         pool=None):
+    y = conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
+                   relu=relu)
+    return apply_epilogue(y, lrn, pool)
+
+
+@given(kernel=st.integers(1, 11), stride=st.integers(1, 4),
+       padding=st.sampled_from(["SAME", "VALID"]),
+       groups=st.sampled_from([1, 2]), relu=st.booleans(),
+       fuse_lrn=st.booleans(), fuse_pool=st.booleans(),
+       seed=st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_direct_kernel_matches_lax_oracle(kernel, stride, padding, groups,
+                                          relu, fuse_lrn, fuse_pool, seed):
+    """Random geometry sweep: the strided Pallas kernel == lax conv + the
+    unfused conv->lrn->pool reference."""
+    H = max(kernel + 2, 3 * stride)
+    assume(conv_out_hw(H, kernel, stride, padding) >= 1)
+    assume(not fuse_pool or conv_out_hw(H, kernel, stride, padding) >= 3)
+    rng = np.random.default_rng(seed)
+    c_in, c_out = 4 * groups, 2 * groups
+    x = jnp.asarray(rng.standard_normal((2, H, H, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (kernel, kernel, c_in // groups, c_out)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    lrn = LrnParams() if fuse_lrn else None
+    pool = (3, 2) if fuse_pool else None
+    out = conv2d_direct(x, w, b, stride=stride, padding=padding,
+                        groups=groups, relu=relu, lrn=lrn, pool=pool,
+                        interpret=True)
+    ref = _ref(x, w, b, stride=stride, padding=padding, groups=groups,
+               relu=relu, lrn=lrn, pool=pool)
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+# the strided AlexNet geometries the Winograd kernel cannot serve
+ALEXNET_DIRECT = [
+    ("conv1", dict(stride=4, padding="VALID", relu=True,
+                   lrn=LrnParams(), pool=(3, 2)), 11, 35, 3, 16),
+    ("conv2", dict(stride=1, padding="SAME", groups=2, relu=True,
+                   lrn=LrnParams(), pool=(3, 2)), 5, 13, 16, 32),
+]
+
+
+@pytest.mark.parametrize("name,kw,r,H,c_in,c_out", ALEXNET_DIRECT)
+def test_direct_kernel_alexnet_geometries(name, kw, r, H, c_in, c_out):
+    rng = np.random.default_rng(hash(name) % 100)
+    x = jnp.asarray(rng.standard_normal((3, H, H, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (r, r, c_in // kw.get("groups", 1), c_out)) * r ** -2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    out = conv2d_direct(x, w, b, interpret=True, **kw)
+    ref = _ref(x, w, b, groups=kw.get("groups", 1), stride=kw["stride"],
+               padding=kw["padding"], relu=kw["relu"], lrn=kw["lrn"],
+               pool=kw["pool"])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4, err_msg=name)
+
+
+@pytest.mark.parametrize("c_block,k_block,batch_block", [
+    (4, 4, 1),     # multi c/k blocks, no filter-cache batching
+    (4, 5, 2),     # non-dividing k_block widens to K; Bb=2 over B=3
+    (None, 128, 8),  # auto c_block (full C resident), Bb > B clamps
+])
+def test_direct_kernel_block_decompositions(c_block, k_block, batch_block):
+    """Channel-block reduction, per-k-block deposit, and the batch-innermost
+    filter-cache grid must be invisible in the output for any blocking."""
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.standard_normal((3, 17, 17, 12)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((5, 5, 6, 8)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((8,)), jnp.float32)
+    p = LrnParams()
+    out = conv2d_direct(x, w, b, stride=2, groups=2, relu=True, lrn=p,
+                        pool=(3, 2), c_block=c_block, k_block=k_block,
+                        batch_block=batch_block, interpret=True)
+    ref = _ref(x, w, b, stride=2, padding="SAME", groups=2, relu=True, lrn=p,
+               pool=(3, 2))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_winograd_kernel_filter_cache_batching():
+    """Same invariant on the Winograd kernel's batch-innermost grid: any
+    batch_block (dividing or not) gives the per-image answer."""
+    from repro.kernels.conv.winograd import conv2d_winograd
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((5, 13, 13, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 3, 4, 6)) * 0.2, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((6,)), jnp.float32)
+    ref = conv2d_ref(x, w, b, groups=2, relu=True)
+    for bb in (1, 2, 5, 8):
+        out = conv2d_winograd(x, w, b, groups=2, relu=True,
+                              batch_block=bb, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4, err_msg=f"Bb={bb}")
+
+
+def test_same_pad_matches_lax_semantics():
+    """same_pad must reproduce XLA's SAME padding split exactly (low side
+    gets the floor) for every (extent, kernel, stride)."""
+    for extent in (5, 7, 10, 13, 27):
+        for r in (1, 2, 3, 5, 11):
+            for s in (1, 2, 3, 4):
+                out, lo, hi = same_pad(extent, r, s)
+                assert out == -(-extent // s)
+                assert lo + hi == max((out - 1) * s + r - extent, 0)
+                assert lo == (lo + hi) // 2
+
+
+def test_fused_pool_stride_exceeds_window_both_kernels():
+    """pool_stride > pool_window: the pooled windows skip trailing conv
+    rows, so the row plan reads fewer rows than the conv extent — both
+    Pallas kernels must crop instead of mis-padding (negative pad crash)."""
+    from repro.kernels.conv.winograd import conv2d_winograd
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((1, 12, 12, 4)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((3, 3, 4, 4)) * 0.3, jnp.float32)
+    out = conv2d_direct(x, wd, None, stride=2, padding="VALID", relu=True,
+                        pool=(3, 4), interpret=True)
+    ref = _ref(x, wd, None, stride=2, padding="VALID", relu=True,
+               pool=(3, 4))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    out = conv2d_winograd(x, wd, None, padding="VALID", relu=True,
+                          pool=(3, 4), interpret=True)
+    ref = _ref(x, wd, None, stride=1, padding="VALID", relu=True,
+               pool=(3, 4))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_direct_kernel_even_stride_tail_rows():
+    """VALID stride-3 on an extent the windows don't cover exactly: the
+    kernel must crop the unread tail rows/cols, not mis-pad them."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((1, 14, 11, 4)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((4, 4, 4, 5)) * 0.2, jnp.float32)
+    out = conv2d_direct(x, w, None, stride=3, padding="VALID",
+                        interpret=True)
+    ref = _ref(x, w, None, stride=3, padding="VALID")
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)

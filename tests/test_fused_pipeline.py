@@ -19,9 +19,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.winograd import conv2d_hbm_bytes
-from repro.kernels.winograd.ref import conv2d_ref
+from repro.kernels.conv.ref import conv2d_ref
 from repro.models import alexnet
-from repro.nn.conv import ConvSpec, dispatch_conv, resolve_route
+from repro.nn.conv import ConvSpec, dispatch_conv, resolve_kernel
 from repro.nn.pooling import LrnParams, apply_epilogue, lrn, pooled_hw
 
 ROUTES = ("direct", "winograd", "pallas")
@@ -49,7 +49,8 @@ def _run(spec: ConvSpec, H: int, c_in: int, c_out: int, seed=0, B=2):
 
 
 # the five AlexNet layer geometries (reduced channel counts), incl. the
-# direct-fallback conv1/conv2 and the grouped pool-only conv5
+# strided conv1/conv2 (the direct Pallas kernel on route="pallas") and the
+# grouped pool-only conv5
 ALEXNET_LAYERS = [
     ("conv1", dict(kernel=11, stride=4, padding="VALID", relu=True,
                    fuse_lrn=True, fuse_pool=True), 35, 3, 16),
@@ -129,7 +130,7 @@ def test_pallas_fused_kernel_multiblock(c_block, k_block, groups):
     """The fused kernel's channel-block reduction and per-k-block deposit
     into the full-channel scratch, on non-trivial block decompositions
     (several C blocks, several K blocks per group, non-dividing k_block)."""
-    from repro.kernels.winograd.winograd import conv2d_winograd
+    from repro.kernels.conv.winograd import conv2d_winograd
     rng = np.random.default_rng(11)
     c_in, c_out = 12 * groups, 8 * groups
     x = jnp.asarray(rng.standard_normal((2, 17, 17, c_in)), jnp.float32)
@@ -172,32 +173,67 @@ def test_alexnet_pallas_route_end_to_end():
                                rtol=1e-4, atol=1e-4)
 
 
+def _layer_hbm(spec, B, h, c_in, c_out, route):
+    from repro.nn.conv import MODEL_ROUTES
+    model_route, wino = MODEL_ROUTES[route]
+    return conv2d_hbm_bytes(
+        B, h, h, c_in, c_out, spec.kernel,
+        spec.winograd_m if wino else None, stride=spec.stride,
+        padding=spec.padding, relu=spec.relu, fuse_lrn=spec.fuse_lrn,
+        fuse_pool=spec.fuse_pool, groups=spec.groups, route=model_route)
+
+
 def test_hbm_model_fused_strictly_lower_for_all_alexnet_layers():
-    """conv2d_hbm_bytes: every fusing AlexNet layer models strictly lower
-    fused traffic; non-fusing layers are traffic-neutral."""
+    """conv2d_hbm_bytes, full 227px config on the pallas route: every one
+    of the five layers — conv1's strided direct kernel included — models
+    fused traffic strictly below the unfused stagewise baseline, and below
+    the lax unfused-direct baseline too."""
     cfg = get_config("alexnet")
     h, c_in = cfg.image_size, cfg.in_channels
     for spec, c_out in zip(alexnet.layer_specs(cfg), cfg.conv_channels):
-        wino = resolve_route(spec) in ("winograd", "pallas")
-        hb = conv2d_hbm_bytes(
-            1, h, h, c_in, c_out, spec.kernel,
-            spec.winograd_m if wino else None, stride=spec.stride,
-            padding=spec.padding, fuse_lrn=spec.fuse_lrn,
-            fuse_pool=spec.fuse_pool)
-        if spec.fuse_lrn or spec.fuse_pool:
-            assert hb["layer_fused_bytes"] < hb["layer_unfused_bytes"], spec
-            assert hb["fused_savings"] > 1.0
-        else:
-            assert hb["layer_fused_bytes"] == hb["layer_unfused_bytes"]
+        route = resolve_kernel(spec.with_route("pallas"))
+        assert route.startswith("pallas"), spec
+        hb = _layer_hbm(spec, 1, h, c_in, c_out, route)
+        assert hb["layer_fused_bytes"] < hb["layer_unfused_bytes"], spec
+        assert hb["layer_fused_bytes"] < hb["layer_unfused_direct_bytes"]
+        assert hb["fused_savings"] > 1.0
         h, c_in = spec.out_hw(h), c_out
 
 
-def test_hbm_model_direct_layer_has_no_tile_tensor():
+def test_hbm_model_lax_route_gets_no_fusion_credit():
+    """On the lax direct route the in-function epilogue is still separate
+    XLA ops — the model must not credit on-chip fusion there."""
+    cfg = get_config("alexnet")
+    spec = alexnet.layer_specs(cfg)[0]          # conv1, lrn+pool
+    hb = _layer_hbm(spec, 1, cfg.image_size, cfg.in_channels,
+                    cfg.conv_channels[0], "direct")
+    assert hb["layer_fused_bytes"] == hb["layer_unfused_bytes"]
+    assert hb["stream_bytes"] == hb["raw_bytes"]
+    assert hb["fused_savings"] == 1.0
+
+
+def test_hbm_model_direct_kernel_strided_slab_terms():
+    """m=None + pallas models the strided direct kernel: no tile tensor, a
+    halo-padded slab (>= raw, bounded), and the fused layer writes only the
+    pooled map — strictly below the 3-round-trip unfused baseline."""
     hb = conv2d_hbm_bytes(1, 227, 227, 3, 96, 11, None, stride=4,
-                          padding="VALID", fuse_lrn=True, fuse_pool=True)
+                          padding="VALID", relu=True, fuse_lrn=True,
+                          fuse_pool=True, route="pallas")
     assert hb["tile_inflation"] == 0.0
-    assert hb["stream_bytes"] == hb["host_tiled_bytes"]
+    raw = 227 * 227 * 3 * 4
+    assert raw <= hb["stream_bytes"] <= 1.3 * raw   # halo/pool-overlap pad
     assert hb["fused_savings"] > 2.0            # 3 round-trips -> 1 write
+    assert hb["layer_fused_bytes"] < hb["layer_unfused_direct_bytes"]
+
+
+def test_hbm_model_filter_cache_reuse():
+    """The batch-innermost grid fetches each weight tile once per
+    batch_block images; the model's weight stream reflects the reuse."""
+    hb = conv2d_hbm_bytes(8, 13, 13, 256, 384, 3, 4, batch_block=8)
+    assert hb["filter_cache_reuse"] == 8.0
+    assert hb["weight_hbm_bytes"] * 8 == hb["weight_hbm_nocache_bytes"]
+    hb1 = conv2d_hbm_bytes(8, 13, 13, 256, 384, 3, 4, batch_block=1)
+    assert hb1["filter_cache_reuse"] == 1.0
 
 
 def test_fc_bfp_parity_with_f32_classifier():

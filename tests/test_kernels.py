@@ -9,8 +9,8 @@ from repro.kernels.bfp_matmul import ops as bfp_ops
 from repro.kernels.bfp_matmul import ref as bfp_ref
 from repro.kernels.ssd import ref as ssd_ref
 from repro.kernels.ssd import ssd as ssd_k
-from repro.kernels.winograd import ref as wg_ref
-from repro.kernels.winograd import winograd as wg_k
+from repro.kernels.conv import ref as wg_ref
+from repro.kernels.conv import winograd as wg_k
 
 
 # --------------------------------------------------------------------------
@@ -91,7 +91,7 @@ def test_wino2d_kernel_fused_epilogue_and_groups(padding):
 
 
 def test_wino1d_custom_vjp_matches_ref():
-    from repro.kernels.winograd.ops import conv1d_depthwise_causal as op
+    from repro.kernels.conv.ops import conv1d_depthwise_causal as op
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((2, 29, 8)), jnp.float32)
     w = jnp.asarray(rng.standard_normal((4, 8)), jnp.float32)

@@ -101,3 +101,33 @@ def test_batching_amortizes_weight_stream():
     t1 = run(1)
     t8 = run(8)
     assert t8 < t1 * 8 * 0.8     # batching is strictly sublinear
+
+
+def test_fc_bfp_decode_logits_parity():
+    """§3.6 on the decode engine's FC path: with ``fc_bfp`` the lm_head
+    weight stream moves as shared-exponent int8 BFP; logits must track the
+    f32 readout within quantization error in both prefill and decode-shaped
+    calls, and the engine must serve end-to-end with it."""
+    import dataclasses
+
+    cfg = get_config("starcoder2-15b").reduced()
+    assert not cfg.tie_embeddings          # fc_bfp targets the lm_head
+    cfg_bfp = dataclasses.replace(cfg, fc_bfp=True)
+    mod = model_for(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(np.arange(1, 9)[None], jnp.int32)
+    exact, _, _ = mod.apply(params, cfg, toks, mode="train")
+    quant, _, _ = mod.apply(params, cfg_bfp, toks, mode="train")
+    exact, quant = np.asarray(exact), np.asarray(quant)
+    assert exact.shape == quant.shape
+    scale = np.abs(exact).max() + 1e-9
+    assert np.abs(quant - exact).max() / scale < 5e-2
+    assert not np.array_equal(quant, exact)    # the quantized path ran
+
+    # end-to-end through the token-decode Engine (decode-mode readout)
+    eng = Engine(cfg_bfp, ServeConfig(max_batch=2, max_len=32,
+                                      prefill_bucket=8), seed=0)
+    req = Request(prompt=[1, 2, 3, 4], max_new=4)
+    eng.submit(req)
+    eng.run_until_done()
+    assert req.done and len(req.generated) == 4

@@ -9,7 +9,7 @@ from _hyp import given, settings, st  # optional-hypothesis shim
 from repro.core.winograd import (conv1d_depthwise_causal, conv2d_direct,
                                  conv2d_hbm_bytes, conv2d_winograd,
                                  conv_flops, winograd_transform)
-from repro.kernels.winograd.ref import conv2d_ref
+from repro.kernels.conv.ref import conv2d_ref
 from repro.nn.conv import ConvSpec, dispatch_conv, resolve_route
 
 
@@ -128,12 +128,13 @@ def test_fused_matches_unfused_reference():
 
 
 def test_dispatch_route_fallback():
-    """Non-eligible specs (stride/kernel) fall back to direct — no model
-    branching needed."""
+    """Non-eligible specs fall back per route policy: the jnp winograd path
+    (stride-1 3x3 math only) degrades to direct, while pallas serves every
+    geometry via the strided direct kernel — no model branching needed."""
     assert resolve_route(ConvSpec(kernel=3)) == "winograd"
     assert resolve_route(ConvSpec(kernel=3, route="pallas")) == "pallas"
     assert resolve_route(ConvSpec(kernel=11, stride=4, route="pallas")) == \
-        "direct"
+        "pallas"
     assert resolve_route(ConvSpec(kernel=5, route="winograd")) == "direct"
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((1, 11, 11, 4)), jnp.float32)
