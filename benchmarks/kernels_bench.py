@@ -48,7 +48,45 @@ def rows():
                     "derived": (f"host_tiled_MB={hb['host_tiled_bytes']/2**20:.1f}"
                                 f";stream_MB={hb['stream_bytes']/2**20:.1f}"
                                 f";tile_inflation={hb['tile_inflation']:.2f}x"
-                                f";hbm_savings={hb['savings']:.2f}x")})
+                                f";hbm_savings={hb['savings']:.2f}x"
+                                f";w_exposed_on_KB="
+                                f"{hb['weight_exposed_prefetch_bytes']/2**10:.1f}"
+                                f";w_exposed_off_KB="
+                                f"{hb['weight_exposed_noprefetch_bytes']/2**10:.1f}")})
+
+    # strided direct kernel (conv1's 11x11 s4 datapath) vs the lax oracle,
+    # Pallas interpret on CPU — plus the same modeled-bytes columns the
+    # Winograd rows carry (m=None -> the strided-slab direct-route terms)
+    from repro.kernels.conv.direct import conv2d_direct as pallas_direct
+    from repro.kernels.conv.ref import conv2d_ref
+    xd = jnp.asarray(rng.standard_normal((4, 35, 35, 3)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((11, 11, 3, 16)) * 11 ** -2,
+                     jnp.float32)
+    t_lax = time_us(jax.jit(lambda a, b: conv2d_ref(
+        a, b, None, stride=4, padding="VALID", relu=True)), xd, wd)
+    t_pd = time_us(lambda a, b: pallas_direct(
+        a, b, stride=4, padding="VALID", relu=True, interpret=True), xd, wd)
+    out.append({"name": "kernels/direct2d_conv1_11x11s4",
+                "us_per_call": t_pd,
+                "derived": (f"lax_us={t_lax:.0f};shape=4x35x35x3k11s4"
+                            f";pallas_interpret=cpu")})
+    for name, (H, C, K, r, s, g) in (
+            ("conv1_227x227x3", (227, 3, 96, 11, 4, 1)),
+            ("conv2_27x27x96g2", (27, 96, 256, 5, 1, 2))):
+        hb = conv2d_hbm_bytes(8, H, H, C, K, r, None, stride=s, groups=g,
+                              padding="VALID" if s > 1 else "SAME",
+                              fuse_lrn=True, fuse_pool=True)
+        out.append({"name": f"kernels/direct2d_hbm_{name}",
+                    "us_per_call": 0.0,
+                    "derived": (f"host_tiled_MB={hb['host_tiled_bytes']/2**20:.1f}"
+                                f";stream_MB={hb['stream_bytes']/2**20:.1f}"
+                                f";tile_inflation={hb['tile_inflation']:.2f}x"
+                                f";hbm_savings={hb['savings']:.2f}x"
+                                f";fused_savings={hb['fused_savings']:.2f}x"
+                                f";w_exposed_on_KB="
+                                f"{hb['weight_exposed_prefetch_bytes']/2**10:.1f}"
+                                f";w_exposed_off_KB="
+                                f"{hb['weight_exposed_noprefetch_bytes']/2**10:.1f}")})
 
     # bfp matmul (decode weight-streaming shape)
     from repro.core.bfp import bfp_matmul

@@ -37,6 +37,10 @@ def main():
     ap.add_argument("--route", default="auto", choices=CNN_ROUTES,
                     help="CNN path: conv route (pallas = stream-buffered "
                          "kernel end-to-end through CnnEngine)")
+    ap.add_argument("--prefetch", default="on", choices=("on", "off"),
+                    help="CNN path: Pallas weight stream — double-buffered "
+                         "manual-DMA filter prefetch (on) vs synchronous "
+                         "fetches (off; bit-equal)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -492,6 +492,114 @@ def from_compiled(compiled, hlo_text: str, *, arch: str, shape: str,
     )
 
 
+# ---------------------------------------------------------------------------
+# conv-layer roofline (paper Table 2/3 regime: one fused conv layer)
+# ---------------------------------------------------------------------------
+@dataclass
+class ConvLayerRoofline:
+    """Roofline terms for one fused conv layer, weight stream included.
+
+    Memory time counts the modeled *fused* feature-map traffic plus only
+    the **exposed** weight bytes — the §3.5 double-buffered manual-DMA
+    stream hides ``weight_hidden_bytes`` under MXU compute, so those never
+    contribute to the memory wall (the paper's "filters for the next layer
+    are prefetched while the current layer is computed").  ``ai_total``
+    is the classic arithmetic intensity over *all* moved bytes;
+    ``ai_exposed`` is the effective intensity the PEs see once the
+    prefetch hides the steady-state filter stream.
+    """
+    name: str
+    flops: float                    # 2 * MACs for the layer (batch incl.)
+    feature_bytes: float            # modeled fused feature-map HBM traffic
+    weight_bytes: float             # total filter stream (cache-reused)
+    weight_exposed_bytes: float     # fetches not hidden by the DMA overlap
+    weight_prefetch: bool = True
+
+    @property
+    def weight_hidden_bytes(self) -> float:
+        return self.weight_bytes - self.weight_exposed_bytes
+
+    @property
+    def total_bytes(self) -> float:
+        return self.feature_bytes + self.weight_bytes
+
+    @property
+    def exposed_bytes(self) -> float:
+        return self.feature_bytes + self.weight_exposed_bytes
+
+    @property
+    def ai_total(self) -> float:
+        return self.flops / self.total_bytes if self.total_bytes else 0.0
+
+    @property
+    def ai_exposed(self) -> float:
+        return self.flops / self.exposed_bytes if self.exposed_bytes else 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.exposed_bytes / HBM_BW
+
+    @property
+    def bound(self) -> str:
+        return "compute" if self.t_compute >= self.t_memory else "memory"
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name, "flops": self.flops,
+            "feature_bytes": self.feature_bytes,
+            "weight_bytes": self.weight_bytes,
+            "weight_exposed_bytes": self.weight_exposed_bytes,
+            "weight_hidden_bytes": self.weight_hidden_bytes,
+            "weight_prefetch": self.weight_prefetch,
+            "ai_total": self.ai_total, "ai_exposed": self.ai_exposed,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "bound": self.bound,
+        }
+
+
+def conv_layer_roofline(name: str, hbm: dict, *, flops: float,
+                        weight_prefetch: bool = True) -> ConvLayerRoofline:
+    """Build the layer roofline from a ``conv2d_hbm_bytes`` dict.
+
+    ``hbm`` supplies the fused feature-map traffic
+    (``layer_fused_bytes``), the filter-cache weight stream
+    (``weight_hbm_bytes``), and the prefetch split
+    (``weight_exposed_{prefetch,noprefetch}_bytes``); ``flops`` is the
+    layer's 2*MACs on its actual datapath (``conv_flops``), batch
+    included.
+    """
+    exposed = hbm["weight_exposed_prefetch_bytes" if weight_prefetch
+                  else "weight_exposed_noprefetch_bytes"]
+    return ConvLayerRoofline(
+        name=name, flops=flops,
+        feature_bytes=float(hbm["layer_fused_bytes"]),
+        weight_bytes=float(hbm["weight_hbm_bytes"]),
+        weight_exposed_bytes=float(exposed),
+        weight_prefetch=weight_prefetch)
+
+
+def network_conv_roofline(layers: list) -> dict:
+    """Whole-network aggregate of :class:`ConvLayerRoofline` terms."""
+    flops = sum(l.flops for l in layers)
+    feat = sum(l.feature_bytes for l in layers)
+    wtot = sum(l.weight_bytes for l in layers)
+    wexp = sum(l.weight_exposed_bytes for l in layers)
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = (feat + wexp) / HBM_BW
+    return {
+        "flops": flops, "feature_bytes": feat, "weight_bytes": wtot,
+        "weight_exposed_bytes": wexp, "weight_hidden_bytes": wtot - wexp,
+        "ai_total": flops / (feat + wtot) if feat + wtot else 0.0,
+        "ai_exposed": flops / (feat + wexp) if feat + wexp else 0.0,
+        "t_compute": t_c, "t_memory": t_m,
+        "bound": "compute" if t_c >= t_m else "memory",
+    }
+
+
 def model_flops_estimate(cfg, shape) -> float:
     """6*N*D with N = active params (excl. embeddings' readout is included
     as in common MFU practice: use all matmul params actually touched)."""

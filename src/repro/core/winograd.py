@@ -269,7 +269,8 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
                      relu: bool = True, fuse_lrn: bool = False,
                      fuse_pool: bool = False, pool_window: int = 3,
                      pool_stride: int = 2, groups: int = 1,
-                     route: str = "pallas", batch_block: int = 8) -> dict:
+                     route: str = "pallas", batch_block: int = 8,
+                     weight_prefetch: bool = True) -> dict:
     """Modeled HBM traffic for one conv *layer*, per resolved datapath.
 
     ``route`` is the resolved datapath (``nn.conv.resolve_kernel`` family):
@@ -305,6 +306,17 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
     feature maps only): the batch-innermost filter-cache grid fetches each
     weight tile once per ``batch_block`` images; ``weight_hbm_nocache_bytes``
     is the batch-outermost grid's once-per-image stream for comparison.
+    The manual-DMA double-buffered stream (``kernels/conv/dma.py``) splits
+    the fetched bytes into *exposed* vs *prefetch-hidden*: with
+    ``weight_prefetch`` only each filter-cache generation's warmup tile
+    (``weight_tile_bytes`` x batch-outer blocks; the stream restarts per
+    generation so the batch grid dim stays parallel) is exposed — every
+    later fetch is issued one transition early and overlaps MXU compute —
+    while without it all ``weight_fetches`` synchronous copies stall the
+    PEs
+    (``weight_exposed_prefetch_bytes`` / ``weight_exposed_noprefetch_bytes``
+    report both; ``weight_hbm_exposed_bytes`` follows the flag).  Non-
+    Pallas routes have no in-kernel stream: everything is exposed.
 
     Keys ``layer_unfused_bytes``/``layer_fused_bytes`` compare fused vs
     unfused *on this route*; ``layer_unfused_direct_bytes`` is the lax
@@ -386,7 +398,8 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
             refetch = npr
         else:
             refetch = 1
-        return B * hp * wp * (g * ncb * Cb) * dtype_bytes * refetch, npr
+        return (B * hp * wp * (g * ncb * Cb) * dtype_bytes * refetch, npr,
+                (Cb, ncb, nkb))
 
     # --- input side ---------------------------------------------------------
     if m is None:
@@ -397,14 +410,16 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
         tile_tensor = B * th * tw * t.n * t.n * C * dtype_bytes
     host_tiled = raw + 2 * tile_tensor          # read raw + write/read tiles
     if route == "pallas":
-        stream, npr_f = _stream(fuse_pool)
-        stream_unfused, npr_u = _stream(False)
+        stream, npr_f, blocks_f = _stream(fuse_pool)
+        stream_unfused, npr_u, _ = _stream(False)
     elif route == "winograd":
         stream = stream_unfused = host_tiled
         npr_f = npr_u = 1
+        blocks_f = None
     else:                                       # lax direct
         stream = stream_unfused = raw
         npr_f = npr_u = 1
+        blocks_f = None
 
     # --- output side: stagewise strawman vs in-kernel fused -----------------
     conv_out = B * out_h * out_w * K * dtype_bytes
@@ -417,15 +432,34 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
     layer_fused = (stream + final if route == "pallas" else layer_unfused)
     layer_unfused_direct = raw + stage_passes
 
-    # --- weight side (filter cache) -----------------------------------------
+    # --- weight side (filter cache + manual-DMA prefetch) -------------------
     wunit = (winograd_transform(m, r).n ** 2 if m is not None else r * r)
     weight_bytes = wunit * Cg * Kg * g * dtype_bytes
     Bo = -(-B // Bb)
     if route == "pallas":
-        weight_hbm = weight_bytes * npr_f * Bo
-        weight_nocache = weight_bytes * npr_f * B
+        Cb, ncb, nkb = blocks_f
+        Kb = Kg // nkb
+        # the DMA moves whole padded tiles; one (wunit, Cb, Kb) tile per
+        # (k, c) transition, the stream re-running per row block and per
+        # filter-cache generation (batch-outer step) — except a
+        # single-tile stream, which the kernels fetch once and keep
+        # resident for the whole launch (dma.fetch_weight_tile)
+        tile_bytes = wunit * Cb * Kb * dtype_bytes
+        tiles = g * nkb * ncb
+        fetches = tiles * npr_f * Bo if tiles > 1 else 1
+        weight_hbm = tile_bytes * fetches
+        weight_nocache = tile_bytes * (tiles * npr_f if tiles > 1 else 1) * B
+        # double-buffered: only each filter-cache generation's warmup tile
+        # is exposed (the stream restarts per batch-outer block so the
+        # batch grid dim stays parallel); prefetch off exposes every fetch
+        exposed_pref = tile_bytes * (Bo if tiles > 1 else 1)
+        exposed_nopref = weight_hbm
     else:
         weight_hbm = weight_nocache = weight_bytes
+        tile_bytes = weight_bytes
+        fetches = 1
+        exposed_pref = exposed_nopref = weight_bytes
+    weight_exposed = exposed_pref if weight_prefetch else exposed_nopref
     return {
         "route": route,
         "raw_bytes": raw,
@@ -446,6 +480,12 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
         "weight_hbm_bytes": weight_hbm,
         "weight_hbm_nocache_bytes": weight_nocache,
         "filter_cache_reuse": weight_nocache / weight_hbm,
+        "weight_tile_bytes": tile_bytes,
+        "weight_fetches": fetches,
+        "weight_exposed_prefetch_bytes": exposed_pref,
+        "weight_exposed_noprefetch_bytes": exposed_nopref,
+        "weight_hbm_exposed_bytes": weight_exposed,
+        "weight_hbm_hidden_bytes": weight_hbm - weight_exposed,
     }
 
 

@@ -10,28 +10,47 @@ from ...core import bfp
 from . import bfp_matmul as _k
 
 
+def fc_block(k: int, block: int = 32) -> int:
+    """The exponent-block size ``bfp_linear`` resolves for contraction dim
+    ``k`` — must tile ``k`` exactly, so a non-dividing block shrinks to the
+    gcd (reduced configs have small FC widths; 32 is paper-faithful)."""
+    return math.gcd(k, block)
+
+
+def quantize_weights(w, *, block: int = 32, bits: int = 8):
+    """Pre-quantize an FC weight stream: (K,N) f32 -> (int8 mantissas,
+    per-block exponents).  A pure function of the weights, so a model can
+    stage the next layer's quantized stream while the current layer
+    computes (§3.5's cross-layer prefetch applied to the §3.6 BFP FC
+    path) — pass the pair to :func:`bfp_matmul` / :func:`bfp_linear` as
+    ``quantized``."""
+    return _k.quantize_weights(w.astype(jnp.float32), block=block, bits=bits)
+
+
 def bfp_matmul(x, w, *, block: int = 32, bits: int = 8, pallas: bool = True,
-               interpret: bool | None = None):
+               quantized=None, interpret: bool | None = None):
     """(M,K) @ (K,N) in shared-exponent block floating point."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     if not pallas:
         return bfp.bfp_matmul(x, w, block=block, bits=bits)
-    wm, we = _k.quantize_weights(w, block=block, bits=bits)
+    wm, we = (quantized if quantized is not None
+              else _k.quantize_weights(w, block=block, bits=bits))
     return _k.bfp_matmul_pallas(x, wm, we, block=block, bits=bits,
                                 interpret=interpret)
 
 
-def bfp_linear(x, w, *, block: int = 32):
+def bfp_linear(x, w, *, block: int = 32, quantized=None):
     """(..., K) @ (K, N) f32 with the weight stream in int8 BFP (§3.6).
 
     The FC-layer form both weight-bandwidth-bound readouts share
     (``models/alexnet.py::classifier``, ``models/lm.py::_readout``): the
-    exponent block must tile the contraction dim, so a non-dividing
-    ``block`` shrinks to the gcd (reduced configs have small FC widths;
-    32 is the paper-faithful group size).
+    exponent block resolves via :func:`fc_block`.  ``quantized`` is a
+    staged ``quantize_weights(w, block=fc_block(K, block))`` pair — the
+    quantization is then skipped in-trace (cross-layer weight staging).
     """
     k = x.shape[-1]
     y = bfp_matmul(x.reshape(-1, k).astype(jnp.float32),
-                   w.astype(jnp.float32), block=math.gcd(k, block))
+                   w.astype(jnp.float32), block=fc_block(k, block),
+                   quantized=quantized)
     return y.reshape(*x.shape[:-1], w.shape[-1])

@@ -2,8 +2,12 @@
 
 ``winograd.py`` — Winograd-domain F(m,r) kernel (stride-1 layers);
 ``direct.py`` — strided direct kernel (any kernel size / stride / groups,
-AlexNet conv1's 11x11 s4 datapath); ``epilogue.py`` — the shared in-VMEM
-bias/ReLU/LRN/max-pool layer epilogue and block helpers; ``ops.py`` — the
-public entry points; ``ref.py`` — the lax oracles.
+AlexNet conv1's 11x11 s4 datapath); ``dma.py`` — the manual-DMA
+double-buffered weight pipeline (2-slot filter prefetch, tile packing,
+cross-layer ``WeightStager``) shared by both kernels; ``epilogue.py`` —
+the shared in-VMEM bias/ReLU/LRN/max-pool layer epilogue and block
+helpers; ``ops.py`` — the public entry points; ``ref.py`` — the lax
+oracles.
 """
-from . import direct, epilogue, ops, ref, winograd  # noqa: F401
+from . import dma, direct, epilogue, ops, ref, winograd  # noqa: F401
+from .dma import WeightStager  # noqa: F401

@@ -17,6 +17,15 @@ the MXU sees (rows*cols, r*Cb) @ (r*Cb, Kb) — rather than r^2 scalar-tap
 multiplies (PipeCNN's flattened-window trick, MXU-shaped like the Winograd
 formulation's n^2 GEMMs).
 
+Weight path (§3.5 filter prefetch, shared machinery in ``dma.py``): the
+filters arrive *tile-packed* in an ANY/HBM-space ref and move by explicit
+``pltpu.make_async_copy`` into a 2-slot VMEM scratch — at each (k, c) tile
+transition the next tile's copy is issued before this step's GEMMs and the
+only wait is the slot swap, so the weight stream is double-buffered under
+MXU compute.  ``pack_weights``/``weight_plan`` expose the packing as a pure
+function of shapes so a model can stage layer N+1's slab while layer N
+computes (``nn/conv.py::pack_conv_weights``).
+
 Dataflow per grid step (image slot ``bi`` of the ``batch_block`` in
 flight):
 
@@ -39,6 +48,7 @@ no tile-alignment constraint here, since rows are computed directly).
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +56,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.winograd import auto_pool_rows
-from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+from ..compat import tpu_compiler_params
+from . import dma
 from .epilogue import batch_blocks, channel_blocks, fused_epilogue, \
     grouped_channel_pad, k_blocks
 
@@ -58,9 +69,123 @@ def same_pad(extent: int, r: int, stride: int) -> tuple[int, int, int]:
     return out, total // 2, total - total // 2
 
 
-def _direct_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, y_ref, *,
-                   stride: int, relu: bool, lrn, pool, step_in: int,
-                   in_rows: int):
+@dataclass(frozen=True)
+class DirectPlan:
+    """Host-side launch plan: every derived extent of one kernel call.
+
+    Pure function of shapes + static params (``plan``), so the weight
+    packing (``pack_weights``) can run ahead of the input tensor — the
+    cross-layer staging hook.
+    """
+    r: int
+    s: int
+    g: int
+    C: int                  # channels per group
+    K: int                  # out channels per group
+    out_h: int
+    out_w: int
+    ph_lo: int
+    pw_lo: int
+    ph_out: int             # pooled output rows (== out_h when no pool)
+    pw_out: int
+    Rc: int                 # conv rows each row step computes
+    step_in: int            # input rows advanced per row step
+    in_rows: int            # raw rows read per step (with halo)
+    npr: int                # row steps
+    rows_out: int
+    w_out: int
+    Hp: int
+    Wp: int
+    Bb: int
+    Bp: int
+    Cb: int
+    Cp: int
+    ncb: int
+    Kb: int
+    nkb: int
+
+    @property
+    def Kfull(self) -> int:
+        return self.g * self.K
+
+    @property
+    def weights(self) -> dma.WeightPlan:
+        return dma.WeightPlan(g=self.g, nkb=self.nkb, ncb=self.ncb,
+                              Cb=self.Cb, Kb=self.Kb,
+                              spatial=(self.r, self.r))
+
+
+def plan(x_shape, w_shape, *, stride: int = 1, padding: str = "SAME",
+         pool=None, groups: int = 1, row_block: int = 8,
+         pool_row_block: int | None = None, c_block: int | None = None,
+         k_block: int = 128, batch_block: int = 8) -> DirectPlan:
+    """Derive the full launch plan from shapes + static params."""
+    r, s, g = w_shape[0], stride, groups
+    assert w_shape[0] == w_shape[1], "square filters only"
+    B, H, W, Ct = x_shape
+    Kt = w_shape[-1]
+    assert Ct % g == 0 and Kt % g == 0 and w_shape[2] == Ct // g, (
+        "grouped conv shape mismatch")
+    C, K = Ct // g, Kt // g
+    if padding == "SAME":
+        out_h, ph_lo, _ = same_pad(H, r, s)
+        out_w, pw_lo, _ = same_pad(W, r, s)
+    else:
+        ph_lo = pw_lo = 0
+        out_h, out_w = (H - r) // s + 1, (W - r) // s + 1
+    assert out_h >= 1 and out_w >= 1, (H, W, r, s, padding)
+
+    Bb, Bp = batch_blocks(B, batch_block)
+    if pool is not None:
+        pwin, ps = pool
+        ph_out = (out_h - pwin) // ps + 1
+        pw_out = (out_w - pwin) // ps + 1
+        assert ph_out >= 1 and pw_out >= 1, (
+            f"pool {pool} larger than conv output {out_h}x{out_w}")
+        if pool_row_block is None:
+            # own the whole pooled extent when the epilogue scratch fits —
+            # one row step, so grouped layers never re-fetch their slab
+            Pb = auto_pool_rows(ph_out, pwin, ps, cols=out_w, kfull=g * K,
+                                batch=Bb)
+        else:
+            Pb = min(pool_row_block, ph_out)
+        Rc = ps * (Pb - 1) + pwin               # conv rows each step owns
+        step_in = s * ps * Pb                   # input rows advanced per step
+        npr = -(-ph_out // Pb)
+        rows_out, w_out = Pb, pw_out
+    else:
+        ph_out, pw_out = out_h, out_w
+        Rc = min(row_block, out_h)
+        step_in = s * Rc
+        npr = -(-out_h // Rc)
+        rows_out, w_out = Rc, out_w
+    in_rows = s * (Rc - 1) + r                  # raw rows per step (w/ halo)
+    Hp = (npr - 1) * step_in + in_rows
+    Wp = s * (out_w - 1) + r
+
+    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
+    Cp = C + (-C) % Cb
+    Kb = k_blocks(K, k_block)
+    return DirectPlan(r=r, s=s, g=g, C=C, K=K, out_h=out_h, out_w=out_w,
+                      ph_lo=ph_lo, pw_lo=pw_lo, ph_out=ph_out, pw_out=pw_out,
+                      Rc=Rc, step_in=step_in, in_rows=in_rows, npr=npr,
+                      rows_out=rows_out, w_out=w_out, Hp=Hp, Wp=Wp,
+                      Bb=Bb, Bp=Bp, Cb=Cb, Cp=Cp, ncb=Cp // Cb,
+                      Kb=Kb, nkb=K // Kb)
+
+
+def pack_weights(w, p: DirectPlan):
+    """(r, r, C, g*K) -> (n_tiles, r, r, Cb, Kb) DMA tile layout."""
+    r, g, C, K = p.r, p.g, p.C, p.K
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+    if p.Cp > C:
+        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, 0), (0, p.Cp - C), (0, 0)))
+    return dma.pack_weight_tiles(wg, p.weights)
+
+
+def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
+                   sem, *, stride: int, relu: bool, lrn, pool, step_in: int,
+                   in_rows: int, prefetch: bool, single: bool):
     s = stride
     _, Rc, wo, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -69,6 +194,8 @@ def _direct_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, y_ref, *,
     c = pl.program_id(3)
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
+    w = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
+                              single=single).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -76,8 +203,7 @@ def _direct_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, y_ref, *,
 
     rows = x_ref[bi, pl.ds(ib * step_in, in_rows)]  # (in_rows, Wp, Cb)
     _, Wp, Cb = rows.shape
-    r = w_ref.shape[1]
-    w = w_ref[0].astype(jnp.float32)                # (r, r, Cb, Kb)
+    r = w.shape[0]
     acc = jnp.zeros((Rc, wo, Kb), jnp.float32)
     for di in range(r):
         # conv rows hit by filter row di, still at full input width
@@ -111,12 +237,15 @@ def _direct_kernel(x_ref, w_ref, b_ref, out_ref, acc_ref, y_ref, *,
                                              "groups", "lrn", "pool",
                                              "row_block", "pool_row_block",
                                              "c_block", "k_block",
-                                             "batch_block", "interpret"))
-def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
-                  relu: bool = False, groups: int = 1, lrn=None, pool=None,
-                  row_block: int = 8, pool_row_block: int | None = None,
+                                             "batch_block", "weight_prefetch",
+                                             "interpret"))
+def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
+                  padding: str = "SAME", relu: bool = False, groups: int = 1,
+                  lrn=None, pool=None, row_block: int = 8,
+                  pool_row_block: int | None = None,
                   c_block: int | None = None, k_block: int = 128,
-                  batch_block: int = 8, interpret: bool = True):
+                  batch_block: int = 8, weight_prefetch: bool = True,
+                  interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); any r/stride/groups, fused layer.
 
     Same contract as the Winograd kernel (``winograd.conv2d_winograd``):
@@ -126,6 +255,13 @@ def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
     AlexNet layer (conv1's 11x11 stride 4 included) runs fully in-VMEM on
     the ``pallas`` route.
 
+    Weight stream: ``pack_weights(w, plan(...))`` tiles the filters; the
+    kernel double-buffers them HBM->VMEM by manual async copy
+    (``weight_prefetch=True``; ``False`` runs the same copies synchronously
+    — bit-equal, every fetch exposed).  Pass ``w_packed`` (a slab staged by
+    ``nn.conv.pack_conv_weights`` while the previous layer computed) to
+    skip the in-trace packing.
+
     ``c_block=None`` auto-sizes the channel block so the whole resident
     (batch_block, Hp, Wp, Cb) input block fits the VMEM slab budget, and
     ``pool_row_block=None`` grows the pooled-row block to the whole pooled
@@ -133,100 +269,61 @@ def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
     resident and (grouped layers included, whose slab block index cycles
     per row block) stream the slab HBM->VMEM once per image.
     """
-    r = w.shape[0]
-    s = stride
-    assert w.shape[0] == w.shape[1], "square filters only"
-    B, H, W, Ct = x.shape
-    g = groups
-    Kt = w.shape[-1]
-    assert Ct % g == 0 and Kt % g == 0 and w.shape[2] == Ct // g, (
-        "grouped conv shape mismatch")
-    C, K = Ct // g, Kt // g
-    if padding == "SAME":
-        out_h, ph_lo, _ = same_pad(H, r, s)
-        out_w, pw_lo, _ = same_pad(W, r, s)
-    else:
-        ph_lo = pw_lo = 0
-        out_h, out_w = (H - r) // s + 1, (W - r) // s + 1
-    assert out_h >= 1 and out_w >= 1, (H, W, r, s, padding)
+    p = plan(x.shape, w.shape, stride=stride, padding=padding, pool=pool,
+             groups=groups, row_block=row_block,
+             pool_row_block=pool_row_block, c_block=c_block,
+             k_block=k_block, batch_block=batch_block)
+    B, H, W, _ = x.shape
+    s, r, g = p.s, p.r, p.g
 
-    Bb, Bp = batch_blocks(B, batch_block)
-    if pool is not None:
-        pwin, ps = pool
-        ph_out = (out_h - pwin) // ps + 1
-        pw_out = (out_w - pwin) // ps + 1
-        assert ph_out >= 1 and pw_out >= 1, (
-            f"pool {pool} larger than conv output {out_h}x{out_w}")
-        if pool_row_block is None:
-            # own the whole pooled extent when the epilogue scratch fits —
-            # one row step, so grouped layers never re-fetch their slab
-            Pb = auto_pool_rows(ph_out, pwin, ps, cols=out_w, kfull=g * K,
-                                batch=Bb)
-        else:
-            Pb = min(pool_row_block, ph_out)
-        Rc = ps * (Pb - 1) + pwin               # conv rows each step owns
-        step_in = s * ps * Pb                   # input rows advanced per step
-        npr = -(-ph_out // Pb)
-        rows_out, w_out = Pb, pw_out
-    else:
-        Rc = min(row_block, out_h)
-        step_in = s * Rc
-        npr = -(-out_h // Rc)
-        rows_out, w_out = Rc, out_w
-    in_rows = s * (Rc - 1) + r                  # raw rows per step (w/ halo)
-    Hp = (npr - 1) * step_in + in_rows
-    Wp = s * (out_w - 1) + r
-
-    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
-    Cp = C + (-C) % Cb
-    ncb = Cp // Cb
-    Kb = k_blocks(K, k_block)
-    nkb = K // Kb
-    Kfull = g * K
-
-    xg, _ = grouped_channel_pad(x, g, Cb)
+    xg, _ = grouped_channel_pad(x, g, p.Cb)
     # strided convs can leave trailing rows/cols no output window reads —
     # crop them before padding up to the slab extent; a pool with
     # stride > window additionally skips trailing *conv* rows, so the row
     # plan may read fewer rows than the conv extent (Hp < padded H)
-    used_h = min(H, s * (out_h - 1) + r - ph_lo, Hp - ph_lo)
-    used_w = min(W, s * (out_w - 1) + r - pw_lo)
+    used_h = min(H, s * (p.out_h - 1) + r - p.ph_lo, p.Hp - p.ph_lo)
+    used_w = min(W, s * (p.out_w - 1) + r - p.pw_lo)
     xg = xg[:, :used_h, :used_w]
-    xg = jnp.pad(xg, ((0, Bp - B), (ph_lo, Hp - used_h - ph_lo),
-                      (pw_lo, Wp - used_w - pw_lo), (0, 0)))
-    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
-    if Cp > C:
-        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, 0)))
-    bias = jnp.zeros((Kfull,), x.dtype) if b is None else b
-    bg = bias.reshape(g * nkb, Kb)
+    xg = jnp.pad(xg, ((0, p.Bp - B), (p.ph_lo, p.Hp - used_h - p.ph_lo),
+                      (p.pw_lo, p.Wp - used_w - p.pw_lo), (0, 0)))
+    w_tiles = dma.resolve_slab(w, w_packed, p.weights,
+                               lambda w: pack_weights(w, p))
+    bias = jnp.zeros((p.Kfull,), x.dtype) if b is None else b
+    bg = bias.reshape(g * p.nkb, p.Kb)
 
+    single = p.weights.n_tiles == 1
     kernel = functools.partial(_direct_kernel, stride=s, relu=relu, lrn=lrn,
-                               pool=pool, step_in=step_in, in_rows=in_rows)
+                               pool=pool, step_in=p.step_in,
+                               in_rows=p.in_rows, prefetch=weight_prefetch,
+                               single=single)
     out = pl.pallas_call(
         kernel,
-        grid=(Bp // Bb, npr, g * nkb, ncb, Bb),
+        grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
-            pl.BlockSpec((Bb, Hp, Wp, Cb),
-                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+            pl.BlockSpec((p.Bb, p.Hp, p.Wp, p.Cb),
+                         lambda bo, i, k, c, bi, nkb=p.nkb, ncb=p.ncb:
                          (bo, 0, 0, (k // nkb) * ncb + c)),
-            pl.BlockSpec((1, r, r, Cb, Kb),
-                         lambda bo, i, k, c, bi, nkb=nkb:
-                         (k // nkb, 0, 0, c, k % nkb)),
-            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+            # tile-packed weights: a single tile rides the BlockSpec
+            # pipeline (fetched once, resident); a multi-tile stream stays
+            # in ANY space and moves by manual double-buffered DMA
+            (dma.single_tile_spec(p.weights) if single
+             else pl.BlockSpec(memory_space=pltpu.ANY)),
+            pl.BlockSpec((1, p.Kb), lambda bo, i, k, c, bi: (k, 0)),
         ],
-        out_specs=pl.BlockSpec((Bb, rows_out, w_out, Kfull),
+        out_specs=pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
                                lambda bo, i, k, c, bi: (bo, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Bp, npr * rows_out, w_out, Kfull),
-                                       x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((Bb, Rc, out_w, Kb), jnp.float32),
-            pltpu.VMEM((Bb, Rc, out_w, Kfull), jnp.float32),
+            pltpu.VMEM((p.Bb, p.Rc, p.out_w, p.Kb), jnp.float32),
+            pltpu.VMEM((p.Bb, p.Rc, p.out_w, p.Kfull), jnp.float32),
+            *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
+                                    single=single),
         ],
-        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
-                                            ARBITRARY, ARBITRARY),
+        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
         interpret=interpret,
-    )(xg, wg, bg)
+    )(xg, w_tiles, bg)
 
     if pool is not None:
-        return out[:B, :ph_out]
-    return out[:B, :out_h]
+        return out[:B, :p.ph_out]
+    return out[:B, :p.out_h]

@@ -1,0 +1,275 @@
+"""Manual-DMA double-buffered weight pipeline shared by both conv kernels.
+
+Paper §3.5: "filters for the next convolution layer are prefetched while the
+current layer is computed" — the DLA's filter cache is fed by a dedicated
+data mover that runs *ahead* of the PE array, so the PEs never stall on a
+weight fetch.  PR-4's filter-cache grid already reused a weight tile across
+``batch_block`` images, but every weight-tile *transition* was still a
+synchronous Pallas pipeline fetch serialized against the GEMMs.  This module
+replaces that with the DLA's scheme at both levels:
+
+In-kernel (this module + ``winograd.py``/``direct.py``): weights enter the
+kernel as a *tile-packed* array left in HBM/ANY memory space — no BlockSpec
+pipelining — and move via explicit ``pltpu.make_async_copy`` into a 2-slot
+VMEM scratch.  At each tile transition the copy for the *next* tile is
+issued into the spare slot before the current step's GEMMs run, and a
+transition only ever waits on the copy issued one transition earlier — the
+slot swap.  The filter stream is therefore fully double-buffered under MXU
+compute; with ``prefetch=False`` the same DMA runs start+wait synchronously
+at each transition (the exposed baseline the benchmarks compare against).
+Both modes move identical bytes to identical slots, so outputs are
+bit-equal (``tests/test_fused_pipeline.py``).
+
+Cross-layer (``WeightStager`` + ``nn/conv.py::pack_conv_weights`` +
+``models/alexnet.py``): the host-side packing — Winograd filter transform,
+group/channel blocking, tile layout, optional §3.6 BFP quantization — is a
+pure function of the layer spec and input *shape*, so layer N+1's slab can
+be staged (async-dispatched and cached) while layer N computes.
+
+Tile order contract: tile ``lin = k * ncb + c`` for grid indices
+``k in [0, g*nkb)`` (group-major K blocks) and ``c in [0, ncb)`` — exactly
+the (k, c) loop order of the shared
+``(B/Bb, row blocks, g*K blocks, C blocks, Bb)`` kernel grid, so the
+stream advances one tile per (k, c) step and wraps to tile 0 when the row
+block (or batch block) increments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import ARBITRARY, PARALLEL
+
+
+@dataclass(frozen=True)
+class WeightPlan:
+    """Blocking of one layer's weight slab into DMA tiles.
+
+    ``spatial`` is the per-tile filter extent — ``(n, n)`` Winograd-domain
+    or ``(r, r)`` direct.  The packed array is
+    ``(n_tiles, *spatial, Cb, Kb)`` with tile ``lin = k * ncb + c``.
+    """
+    g: int                  # groups
+    nkb: int                # K blocks per group
+    ncb: int                # C blocks
+    Cb: int                 # channel block
+    Kb: int                 # output-channel block
+    spatial: tuple          # per-tile filter dims
+
+    @property
+    def n_tiles(self) -> int:
+        return self.g * self.nkb * self.ncb
+
+    @property
+    def tile_shape(self) -> tuple:
+        return (*self.spatial, self.Cb, self.Kb)
+
+
+def pack_weight_tiles(wg, plan: WeightPlan):
+    """(g, *spatial, ncb*Cb, nkb*Kb) blocked weights -> (n_tiles, *tile).
+
+    The (g, kb, cb) tile index must match the kernel grid's weight walk —
+    group ``k // nkb``, K block ``k % nkb``, C block ``c`` — so the packed
+    order is (g, nkb, ncb): ``lin = k * ncb + c``.
+    """
+    g, ncb, Cb, nkb, Kb = plan.g, plan.ncb, plan.Cb, plan.nkb, plan.Kb
+    ns = len(plan.spatial)
+    assert wg.shape == (g, *plan.spatial, ncb * Cb, nkb * Kb), (
+        wg.shape, plan)
+    w7 = wg.reshape(g, *plan.spatial, ncb, Cb, nkb, Kb)
+    # (g, *spatial, ncb, Cb, nkb, Kb) -> (g, nkb, ncb, *spatial, Cb, Kb)
+    perm = (0, ns + 3, ns + 1, *range(1, ns + 1), ns + 2, ns + 4)
+    return w7.transpose(perm).reshape(plan.n_tiles, *plan.tile_shape)
+
+
+def weight_dma_scratch(plan: WeightPlan, dtype, *, single: bool = False):
+    """The two scratch allocations the 2-slot pipeline needs, in the order
+    the kernels append them: (2-slot VMEM tile buffer, 2 DMA semaphores).
+    Single-tile mode keeps the kernel signature (the BlockSpec path never
+    touches either) but shrinks the buffer to a degenerate element — a
+    full 2-slot copy of the whole resident slab would be dead VMEM."""
+    shape = (2,) + ((1,) * len(plan.tile_shape) if single
+                    else plan.tile_shape)
+    return (pltpu.VMEM(shape, dtype), pltpu.SemaphoreType.DMA((2,)))
+
+
+def single_tile_spec(plan: WeightPlan):
+    """BlockSpec for a single-tile weight stream: the one tile rides the
+    ordinary Pallas pipeline at a constant block index (fetched once,
+    resident for the launch) instead of the manual-DMA path."""
+    nd = len(plan.tile_shape) + 1
+    return pl.BlockSpec((1, *plan.tile_shape), lambda *_, nd=nd: (0,) * nd)
+
+
+def resolve_slab(w, w_packed, plan: WeightPlan, pack_fn):
+    """The weight slab a kernel launch will stream: the staged array when
+    one was handed in, else packed in-trace — with the one shape check
+    that keeps a stale slab from ever reaching the DMA (shared by every
+    pallas_call site so the contract cannot diverge between kernels)."""
+    w_tiles = pack_fn(w) if w_packed is None else w_packed
+    assert w_tiles.shape == (plan.n_tiles, *plan.tile_shape), (
+        "staged weight slab does not match this call's plan",
+        w_tiles.shape, plan)
+    return w_tiles
+
+
+def grid_semantics(single: bool):
+    """Dimension semantics for the shared (batch, rows, k, c, images) conv
+    grid under the DMA weight stream: the stream restarts per batch-outer
+    block, so the batch dim is always parallel; the slot state spanning
+    the row/k/c walk keeps those dims arbitrary on multi-tile launches,
+    while a single-tile launch (no slot state at all) frees the row dim
+    too.  The image-slot dim stays arbitrary (filter-cache accumulators).
+    """
+    return (PARALLEL, PARALLEL if single else ARBITRARY,
+            ARBITRARY, ARBITRARY, ARBITRARY)
+
+
+def stream_positions(ib, k, c, *, npr: int, nk: int, nc: int):
+    """Weight-stream coordinates of one grid step.
+
+    The stream is self-contained *per batch-outer block*: the transition
+    counter restarts at every filter-cache generation, so the batch grid
+    dimension carries no cross-block DMA state and can stay ``parallel``
+    (each core's slice warms up its own stream; one exposed warmup tile
+    per generation instead of per launch).
+
+    Returns ``(trans, lin, lin_next, last)``: the in-generation transition
+    counter (slot parity rides this, not ``lin`` — the per-row-block
+    stream length ``nk*nc`` may be odd), the current/next tile indices
+    (the stream wraps to tile 0 when the row block advances), and whether
+    this is the generation's final transition (no further copy to issue).
+    """
+    lin = k * nc + c
+    trans = (ib * nk + k) * nc + c
+    lin_next = jax.lax.rem(lin + 1, nk * nc)
+    last = trans + 1 >= npr * nk * nc
+    return trans, lin, lin_next, last
+
+
+def weight_stream_transition(w_tiles, wbuf, sem, *, trans, lin, lin_next,
+                             last, prefetch: bool):
+    """Run the 2-slot DMA schedule at one weight-tile transition.
+
+    ``prefetch=True`` (double-buffered): the very first transition warms up
+    its own copy; every non-final transition issues the *next* tile's copy
+    into the spare slot before the caller's GEMMs; the only wait is on the
+    copy issued one transition earlier (the slot swap), so steady-state
+    fetches overlap MXU compute entirely.  ``prefetch=False`` start+waits
+    the same copy synchronously — same bytes, same slots, bit-equal output,
+    but every fetch is exposed.  Call under ``pl.when(bi == 0)`` (the first
+    image slot of the tile); later image slots read the resident slot.
+    """
+    slot = jax.lax.rem(trans, 2)
+    if prefetch:
+        @pl.when(trans == 0)
+        def _warmup():
+            pltpu.make_async_copy(w_tiles.at[lin], wbuf.at[slot],
+                                  sem.at[slot]).start()
+
+        @pl.when(jnp.logical_not(last))
+        def _issue_next():
+            nxt = jax.lax.rem(trans + 1, 2)
+            pltpu.make_async_copy(w_tiles.at[lin_next], wbuf.at[nxt],
+                                  sem.at[nxt]).start()
+
+        pltpu.make_async_copy(w_tiles.at[lin], wbuf.at[slot],
+                              sem.at[slot]).wait()
+    else:
+        cp = pltpu.make_async_copy(w_tiles.at[lin], wbuf.at[slot],
+                                   sem.at[slot])
+        cp.start()
+        cp.wait()
+
+
+def current_slot(trans):
+    """VMEM slot holding the resident tile for transition counter ``trans``
+    (valid at every image slot of the tile, not just the transition step)."""
+    return jax.lax.rem(trans, 2)
+
+
+def fetch_weight_tile(w_tiles, wbuf, sem, *, prefetch: bool, single: bool):
+    """Drive the weight stream for one step of the shared
+    ``(B/Bb, row blocks, g*K blocks, C blocks, Bb)`` conv grid and return
+    the resident (raw-dtype) tile — the whole per-step bookkeeping both
+    kernels share: stream coordinates from the grid ids, the 2-slot
+    transition on the first image slot of each tile, the slot read
+    elsewhere.
+
+    ``single`` (static): the stream has exactly one tile, so there is no
+    rotation to drive — the host passed the tile through a constant-index
+    BlockSpec instead of the ANY-space ref (``single_tile_spec``), Pallas's
+    pipeline fetches it once and keeps it resident (its usual elision for
+    an unchanged block index), and the grid keeps its parallel batch/row
+    semantics because no DMA slot state spans steps.  ``wbuf``/``sem`` are
+    unused in that mode.
+    """
+    if single:
+        return w_tiles[0]
+
+    trans, lin, lin_next, last = stream_positions(
+        pl.program_id(1), pl.program_id(2), pl.program_id(3),
+        npr=pl.num_programs(1), nk=pl.num_programs(2),
+        nc=pl.num_programs(3))
+
+    @pl.when(pl.program_id(4) == 0)
+    def _fetch():
+        weight_stream_transition(w_tiles, wbuf, sem, trans=trans, lin=lin,
+                                 lin_next=lin_next, last=last,
+                                 prefetch=prefetch)
+
+    return wbuf[current_slot(trans)]
+
+
+# ---------------------------------------------------------------------------
+# cross-layer staging
+# ---------------------------------------------------------------------------
+def _has_tracer(tree) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class WeightStager:
+    """Cross-layer weight staging: dispatch layer N+1's (pure, jittable)
+    weight packing while layer N computes, and cache the packed slab.
+
+    JAX dispatch is asynchronous, so ``stage`` returns immediately — the
+    packing work overlaps whatever device work is already queued (the
+    current layer's conv).  Keys are caller-chosen (AlexNet uses layer
+    names); a stager is bound to one parameter set — reuse it across
+    forward passes of the same params (serving) and the slab packs once,
+    the host-level twin of the in-kernel filter cache.
+
+    Tracer-safe: under ``jax.jit`` the packed value would be a tracer, so
+    staging computes inline and caches nothing (XLA already schedules the
+    inlined pack; caching tracers across traces would be unsound).
+    """
+
+    def __init__(self):
+        self._cache: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def stage(self, key, fn, *args, **kwargs):
+        """Compute (or recall) ``fn(*args)`` for ``key``; returns the value."""
+        if key in self._cache:
+            self.hits += 1
+            return self._cache[key]
+        val = fn(*args, **kwargs)
+        self.misses += 1
+        if key is not None and not _has_tracer((args, kwargs, val)):
+            self._cache[key] = val
+        return val
+
+    def get(self, key, default=None):
+        if key in self._cache:
+            self.hits += 1
+            return self._cache[key]
+        return default
+
+    def clear(self):
+        self._cache.clear()

@@ -75,30 +75,40 @@ def conv1d_depthwise_causal(x, w, b=None, *, pallas: bool = True,
 # ---------------------------------------------------------------------------
 # 2D conv (inference path; training uses the differentiable jnp route)
 # ---------------------------------------------------------------------------
-def conv2d(x, w, b=None, *, m: int = 4, padding: str = "SAME",
+def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
            relu: bool = False, groups: int = 1, lrn=None, pool=None,
+           k_block: int = 128, batch_block: int = 8,
+           weight_prefetch: bool = True,
            pallas: bool = True, interpret: bool | None = None):
     """Fused stride-1 Winograd conv layer: bias, ReLU, groups, LRN, pool.
 
     Both routes share one signature so they stay numerically
     interchangeable: ``pallas=True`` runs the stream-buffered Pallas kernel
     (in-kernel tiling + channel-block reduction + in-VMEM LRN/pool
-    epilogue + filter-cache batch grid), ``pallas=False`` the
-    differentiable pure-jnp Winograd path.  ``lrn`` is an
-    :class:`repro.nn.pooling.LrnParams` (or None); ``pool`` is a
-    (window, stride) pair for a VALID max-pool (or None).
+    epilogue + filter-cache batch grid + double-buffered manual-DMA weight
+    stream), ``pallas=False`` the differentiable pure-jnp Winograd path.
+    ``lrn`` is an :class:`repro.nn.pooling.LrnParams` (or None); ``pool``
+    is a (window, stride) pair for a VALID max-pool (or None).
+    ``w_packed``/``weight_prefetch`` reach the Pallas weight pipeline only
+    (the jnp route has no weight stream to stage).
     """
     if pallas:
-        return _k.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
-                                  groups=groups, lrn=lrn, pool=pool,
+        return _k.conv2d_winograd(x, w, b, w_packed, m=m, padding=padding,
+                                  relu=relu, groups=groups, lrn=lrn,
+                                  pool=pool, k_block=k_block,
+                                  batch_block=batch_block,
+                                  weight_prefetch=weight_prefetch,
                                   interpret=_interp(interpret))
     return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
                               groups=groups, lrn=lrn, pool=pool)
 
 
-def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
-                  relu: bool = False, groups: int = 1, lrn=None, pool=None,
-                  pallas: bool = True, interpret: bool | None = None):
+def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
+                  padding: str = "SAME", relu: bool = False, groups: int = 1,
+                  lrn=None, pool=None, k_block: int = 128,
+                  batch_block: int = 8,
+                  weight_prefetch: bool = True, pallas: bool = True,
+                  interpret: bool | None = None):
     """Fused direct conv layer for any kernel/stride geometry.
 
     ``pallas=True`` runs the strided stream-buffered kernel (``direct.py``)
@@ -107,8 +117,11 @@ def conv2d_direct(x, w, b=None, *, stride: int = 1, padding: str = "SAME",
     same fused-layer signature (``ref.conv2d_ref``).
     """
     if pallas:
-        return _d.conv2d_direct(x, w, b, stride=stride, padding=padding,
-                                relu=relu, groups=groups, lrn=lrn, pool=pool,
+        return _d.conv2d_direct(x, w, b, w_packed, stride=stride,
+                                padding=padding, relu=relu, groups=groups,
+                                lrn=lrn, pool=pool, k_block=k_block,
+                                batch_block=batch_block,
+                                weight_prefetch=weight_prefetch,
                                 interpret=_interp(interpret))
     return conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
                       relu=relu, lrn=lrn, pool=pool)

@@ -15,19 +15,24 @@ accumulation into a VMEM scratch (the PE "daisy-chained" partial sums), so
 large-C layers never need all of C resident at once.  Bias + ReLU fuse into
 the kernel epilogue (the DLA's post-PE activation stage) behind a flag.
 
-Filter cache (paper §3.5): the grid iterates ``batch_block`` images in the
-*innermost* dimension with the weight-block index held constant, so each
-transformed-filter tile streams HBM->VMEM once per ``batch_block`` images
-instead of once per image — the DLA's filter cache, which reuses weights
-across the batch while the stream buffers feed new feature maps.  The
-per-image accumulators and full-channel epilogue scratch carry a leading
-``batch_block`` dim so every in-flight image owns its partial sums.
+Weight path (paper §3.5 filter prefetch — shared machinery in ``dma.py``):
+the transformed filters arrive *tile-packed* in an ANY/HBM-space ref and
+move by explicit ``pltpu.make_async_copy`` into a 2-slot VMEM scratch.  At
+each (k, c) weight-tile transition the next tile's copy is issued before
+this step's GEMMs and the only wait is the slot swap, so the filter stream
+is double-buffered under MXU compute — the DLA's filter-cache data mover.
+The grid still iterates ``batch_block`` images innermost with the tile
+held constant (the §3.5 filter cache: one fetch per ``batch_block``
+images), and ``plan``/``pack_weights`` expose the packing — including the
+G w G^T filter transform — as a pure function of shapes so a model can
+stage layer N+1's slab while layer N computes
+(``nn/conv.py::pack_conv_weights``).
 
-Grouped convolution folds groups into the K grid dimension (weight block
-``k // nkb``, input channel block ``(k // nkb) * ncb + c`` on the
-group-major channel layout), so conv2/4/5 of AlexNet run as one kernel
-launch with no host loop or concatenate — and the fused epilogue sees the
-full concatenated channel dim (LRN windows cross group seams).
+Grouped convolution folds groups into the K grid dimension (weight tile
+``k * ncb + c`` on the group-major channel layout), so conv2/4/5 of
+AlexNet run as one kernel launch with no host loop or concatenate — and
+the fused epilogue sees the full concatenated channel dim (LRN windows
+cross group seams).
 
 The in-kernel LRN + max-pool epilogue lives in ``epilogue.py``, shared with
 the strided direct kernel (``direct.py``).
@@ -36,6 +41,7 @@ from __future__ import annotations
 
 import functools
 import math
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +49,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ...core.winograd import auto_pool_rows, winograd_transform
-from ..compat import ARBITRARY, PARALLEL, tpu_compiler_params
+from ..compat import PARALLEL, tpu_compiler_params
+from . import dma
 from .epilogue import batch_blocks, channel_blocks, fused_epilogue, \
     grouped_channel_pad, k_blocks
 
@@ -129,6 +136,147 @@ def conv1d_depthwise_causal(x, w, b=None, *, m: int | None = None,
 # ---------------------------------------------------------------------------
 # 2D conv (AlexNet 3x3 -> F(4,3) x F(4,3))
 # ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WinogradPlan:
+    """Host-side launch plan for one 2D Winograd kernel call.
+
+    Pure function of shapes + static params (``plan``), so the weight
+    packing — including the G w G^T filter transform — can run ahead of
+    the input tensor (the cross-layer staging hook).  ``fused`` selects
+    the layer-fused grid (in-VMEM LRN/pool epilogue, exact K tiling) vs
+    the plain conv grid (bias+ReLU only, K padded up to the block).
+    """
+    fused: bool
+    m: int
+    r: int
+    g: int
+    C: int                  # channels per group
+    K: int                  # out channels per group
+    out_h: int
+    out_w: int
+    ph_pad: int             # SAME halo pad (both sides)
+    tw: int                 # width tiles
+    Rt: int                 # tile rows per row step
+    row_step: int           # tile rows advanced per row step
+    npr: int                # row steps
+    rows_out: int           # output rows written per row step
+    w_out: int              # output cols written per row step
+    thp: int                # total tile rows the slab must cover
+    Hp: int
+    Wp: int
+    Bb: int
+    Bp: int
+    Cb: int
+    Cp: int
+    ncb: int
+    Kb: int
+    Kp: int                 # K per group incl. pad (== K when fused)
+    nkb: int
+    ph_out: int             # pooled rows (== out_h when no pool)
+    pw_out: int
+
+    @property
+    def n(self) -> int:
+        return self.m + self.r - 1
+
+    @property
+    def Kfull(self) -> int:
+        return self.g * self.K
+
+    @property
+    def weights(self) -> dma.WeightPlan:
+        return dma.WeightPlan(g=self.g, nkb=self.nkb, ncb=self.ncb,
+                              Cb=self.Cb, Kb=self.Kb,
+                              spatial=(self.n, self.n))
+
+
+def plan(x_shape, w_shape, *, m: int = 4, padding: str = "SAME",
+         groups: int = 1, lrn=None, pool=None, row_block: int = 8,
+         pool_row_block: int | None = None, c_block: int | None = None,
+         k_block: int = 128, batch_block: int = 8) -> WinogradPlan:
+    """Derive the full launch plan from shapes + static params."""
+    r = w_shape[0]
+    t = winograd_transform(m, r)
+    mm = t.m
+    B, H, W, Ct = x_shape
+    g = groups
+    Kt = w_shape[-1]
+    assert Ct % g == 0 and Kt % g == 0 and w_shape[2] == Ct // g, (
+        "grouped conv shape mismatch")
+    C, K = Ct // g, Kt // g
+    if padding == "SAME":
+        ph_pad = r // 2
+        out_h, out_w = H, W
+    else:
+        ph_pad = 0
+        out_h, out_w = H - r + 1, W - r + 1
+    tw = -(-out_w // mm)
+    Bb, Bp = batch_blocks(B, batch_block)
+    fused = lrn is not None or pool is not None
+
+    ph_out, pw_out = out_h, out_w
+    if fused and pool is not None:
+        pwin, ps = pool
+        ph_out = (out_h - pwin) // ps + 1
+        pw_out = (out_w - pwin) // ps + 1
+        assert ph_out >= 1 and pw_out >= 1, (
+            f"pool {pool} larger than conv output {out_h}x{out_w}")
+        # alignment: each step's first conv row ps*Pb*i must be tile-aligned
+        q = mm // math.gcd(ps, mm)
+        if pool_row_block is None:
+            # own the whole pooled extent when the epilogue scratch fits —
+            # one row step, so grouped layers never re-fetch their slab
+            Pb = auto_pool_rows(ph_out, pwin, ps, align=q, row_align=mm,
+                                cols=tw * mm, kfull=g * K, batch=Bb)
+        else:
+            Pb = q * (-(-min(pool_row_block, ph_out) // q))
+        row_step = ps * Pb // mm
+        Rt = -(-(ps * (Pb - 1) + pwin) // mm)
+        npr = -(-ph_out // Pb)
+        rows_out, w_out = Pb, pw_out
+        thp = (npr - 1) * row_step + Rt         # last step's read must fit
+    else:
+        th = -(-out_h // mm)
+        Rt = row_step = min(row_block, th)
+        npr = -(-th // Rt)
+        rows_out, w_out = Rt * mm, tw * mm
+        thp = (npr - 1) * row_step + Rt if fused else npr * Rt
+    Hp = thp * mm + r - 1
+    Wp = tw * mm + r - 1
+
+    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
+    Cp = C + (-C) % Cb
+    if fused:
+        # no K padding: zero pad channels inside an LRN window would shadow
+        # the real cross-seam neighbours, so blocks must tile K exactly
+        Kb = k_blocks(K, k_block)
+        Kp = K
+    else:
+        Kb = min(k_block, K)
+        Kp = K + (-K) % Kb
+    return WinogradPlan(fused=fused, m=m, r=r, g=g, C=C, K=K, out_h=out_h,
+                        out_w=out_w, ph_pad=ph_pad, tw=tw, Rt=Rt,
+                        row_step=row_step, npr=npr, rows_out=rows_out,
+                        w_out=w_out, thp=thp, Hp=Hp, Wp=Wp, Bb=Bb, Bp=Bp,
+                        Cb=Cb, Cp=Cp, ncb=Cp // Cb, Kb=Kb, Kp=Kp,
+                        nkb=Kp // Kb, ph_out=ph_out, pw_out=pw_out)
+
+
+def pack_weights(w, p: WinogradPlan):
+    """(r, r, C, g*K) raw filters -> (n_tiles, n, n, Cb, Kb) transformed
+    DMA tiles: per-group G w G^T (host-side, tiny), channel/K pad, and the
+    tile layout of ``dma.pack_weight_tiles``."""
+    r, g, C, K = p.r, p.g, p.C, p.K
+    t = winograd_transform(p.m, r)
+    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+    Gj = jnp.asarray(t.G, jnp.float32)
+    wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
+    if p.Cp > C or p.Kp > K:
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, p.Cp - C),
+                          (0, p.Kp - K)))
+    return dma.pack_weight_tiles(wt, p.weights)
+
+
 def _tiles_from_rows(rows, n: int, mm: int, nr: int, nw: int):
     """Overlapping n x n tiles from a VMEM row slab via n^2 strided slices:
     plane (di, dj) holds element (di, dj) of every tile -> (n,n,nr,nw,Cb)."""
@@ -142,14 +290,16 @@ def _tiles_from_rows(rows, n: int, mm: int, nr: int, nw: int):
          for di in range(n)], axis=0).astype(jnp.float32)
 
 
-def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
-                   relu: bool):
+def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
+                   wbuf, sem, *, relu: bool, prefetch: bool, single: bool):
     mm, n = at_ref.shape
     _, _, _, Rb, tw, Kb = acc_ref.shape
     ib = pl.program_id(1)
     c = pl.program_id(3)
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
+    v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
+                              single=single).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -159,7 +309,6 @@ def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
     rows = x_ref[bi, pl.ds(ib * Rb * mm, Rb * mm + n - mm)]  # (rows, Wp, Cb)
     tiles = _tiles_from_rows(rows, n, mm, Rb, tw)
     BT = bt_ref[...]
-    v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
     u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
     # n^2 batched GEMMs on the MXU: (Rb*tw, Cb) @ (Cb, Kb) per (i, j);
     # accumulated over channel blocks in VMEM scratch (PE partial sums)
@@ -176,9 +325,9 @@ def _conv2d_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref, acc_ref, *,
         out_ref[bi] = y.astype(out_ref.dtype)
 
 
-def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
-                         acc_ref, y_ref, *, relu: bool, lrn, pool,
-                         row_step: int):
+def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
+                         acc_ref, y_ref, wbuf, sem, *, relu: bool, lrn,
+                         pool, row_step: int, prefetch: bool, single: bool):
     """Layer-fused variant: conv + bias + ReLU + LRN + max-pool in VMEM.
 
     The k grid dimension spans *all* g*K output channels (groups included);
@@ -196,6 +345,8 @@ def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
     c = pl.program_id(3)
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
+    v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
+                              single=single).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -206,7 +357,6 @@ def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
     rows = x_ref[bi, pl.ds(ib * row_step * mm, Rt * mm + n - mm)]
     tiles = _tiles_from_rows(rows, n, mm, Rt, tw)
     BT = bt_ref[...]
-    v = wt_ref[0].astype(jnp.float32)               # (n, n, Cb, Kb)
     u = jnp.einsum("in,jm,nmrwc->ijrwc", BT, BT, tiles)
     acc_ref[bi] += jnp.einsum("ijrwc,ijck->ijrwk", u, v)
 
@@ -229,9 +379,8 @@ def _conv2d_fused_kernel(x_ref, wt_ref, b_ref, bt_ref, at_ref, out_ref,
             out_ref.shape[2]).astype(out_ref.dtype)
 
 
-def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
-                       pool_row_block, row_block, c_block, k_block,
-                       batch_block, interpret):
+def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
+                       lrn, pool, weight_prefetch, interpret):
     """pallas_call setup for the layer-fused kernel (lrn and/or pool set).
 
     Grid (B/Bb, pooled-row blocks, g*K blocks, C blocks, Bb): groups move
@@ -244,118 +393,75 @@ def _conv2d_fused_call(x, w, b, *, t, padding, relu, groups, lrn, pool,
     row_step = ps*Pb/m tile rows per step, so the pool window never crosses
     a grid step's slab.
     """
-    r = w.shape[0]
     mm = t.m
-    B, H, W, Ct = x.shape
-    g = groups
-    C, K = Ct // g, w.shape[-1] // g
-    if padding == "SAME":
-        ph_pad = r // 2
-        out_h, out_w = H, W
-    else:
-        ph_pad = 0
-        out_h, out_w = H - r + 1, W - r + 1
-    tw = -(-out_w // mm)
-    Bb, Bp = batch_blocks(B, batch_block)
+    B, H, W, _ = x.shape
+    g = p.g
 
-    if pool is not None:
-        pwin, ps = pool
-        ph_out = (out_h - pwin) // ps + 1
-        pw_out = (out_w - pwin) // ps + 1
-        assert ph_out >= 1 and pw_out >= 1, (
-            f"pool {pool} larger than conv output {out_h}x{out_w}")
-        # alignment: each step's first conv row ps*Pb*i must be tile-aligned
-        q = mm // math.gcd(ps, mm)
-        if pool_row_block is None:
-            # own the whole pooled extent when the epilogue scratch fits —
-            # one row step, so grouped layers never re-fetch their slab
-            Pb = auto_pool_rows(ph_out, pwin, ps, align=q, row_align=mm,
-                                cols=tw * mm, kfull=g * K, batch=Bb)
-        else:
-            Pb = q * (-(-min(pool_row_block, ph_out) // q))
-        row_step = ps * Pb // mm
-        Rt = -(-(ps * (Pb - 1) + pwin) // mm)
-        npr = -(-ph_out // Pb)
-        rows_out, w_out = Pb, pw_out
-    else:
-        th = -(-out_h // mm)
-        Rt = row_step = min(row_block, th)
-        npr = -(-th // Rt)
-        rows_out, w_out = Rt * mm, tw * mm
-    thp = (npr - 1) * row_step + Rt             # last step's read must fit
-    Hp = thp * mm + r - 1
-    Wp = tw * mm + r - 1
-
-    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
-    Cp = C + (-C) % Cb
-    # no K padding: zero pad channels inside an LRN window would shadow the
-    # real cross-seam neighbours, so blocks must tile K exactly
-    Kb = k_blocks(K, k_block)
-    nkb = K // Kb
-    ncb = Cp // Cb
-    Kfull = g * K
-
-    xg, _ = grouped_channel_pad(x, g, Cb)
+    xg, _ = grouped_channel_pad(x, g, p.Cb)
     # a pool with stride > window skips trailing conv rows, so the pooled
     # row plan may read fewer rows than the conv extent — crop, then pad
-    used_h = min(H, Hp - ph_pad)
+    used_h = min(H, p.Hp - p.ph_pad)
     xg = xg[:, :used_h]
-    xg = jnp.pad(xg, ((0, Bp - B), (ph_pad, Hp - used_h - ph_pad),
-                      (ph_pad, Wp - W - ph_pad), (0, 0)))
+    xg = jnp.pad(xg, ((0, p.Bp - B), (p.ph_pad, p.Hp - used_h - p.ph_pad),
+                      (p.ph_pad, p.Wp - W - p.ph_pad), (0, 0)))
 
-    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
-    Gj = jnp.asarray(t.G, jnp.float32)
-    wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
-    if Cp > C:
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, 0)))
-    bias = jnp.zeros((Kfull,), x.dtype) if b is None else b
-    bg = bias.reshape(g * nkb, Kb)
+    w_tiles = dma.resolve_slab(w, w_packed, p.weights,
+                               lambda w: pack_weights(w, p))
+    bias = jnp.zeros((p.Kfull,), x.dtype) if b is None else b
+    bg = bias.reshape(g * p.nkb, p.Kb)
 
+    single = p.weights.n_tiles == 1
     kernel = functools.partial(_conv2d_fused_kernel, relu=relu, lrn=lrn,
-                               pool=pool, row_step=row_step)
+                               pool=pool, row_step=p.row_step,
+                               prefetch=weight_prefetch, single=single)
     out = pl.pallas_call(
         kernel,
-        grid=(Bp // Bb, npr, g * nkb, ncb, Bb),
+        grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
-            pl.BlockSpec((Bb, Hp, Wp, Cb),
-                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+            pl.BlockSpec((p.Bb, p.Hp, p.Wp, p.Cb),
+                         lambda bo, i, k, c, bi, nkb=p.nkb, ncb=p.ncb:
                          (bo, 0, 0, (k // nkb) * ncb + c)),
-            pl.BlockSpec((1, t.n, t.n, Cb, Kb),
-                         lambda bo, i, k, c, bi, nkb=nkb:
-                         (k // nkb, 0, 0, c, k % nkb)),
-            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+            # tile-packed weights: a single tile rides the BlockSpec
+            # pipeline (fetched once, resident); a multi-tile stream stays
+            # in ANY space and moves by manual double-buffered DMA
+            (dma.single_tile_spec(p.weights) if single
+             else pl.BlockSpec(memory_space=pltpu.ANY)),
+            pl.BlockSpec((1, p.Kb), lambda bo, i, k, c, bi: (k, 0)),
             pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
             pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((Bb, rows_out, w_out, Kfull),
+        out_specs=pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
                                lambda bo, i, k, c, bi: (bo, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((Bp, npr * rows_out, w_out, Kfull),
-                                       x.dtype),
+        out_shape=jax.ShapeDtypeStruct(
+            (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((Bb, t.n, t.n, Rt, tw, Kb), jnp.float32),
-            pltpu.VMEM((Bb, Rt * mm, tw * mm, Kfull), jnp.float32),
+            pltpu.VMEM((p.Bb, t.n, t.n, p.Rt, p.tw, p.Kb), jnp.float32),
+            pltpu.VMEM((p.Bb, p.Rt * mm, p.tw * mm, p.Kfull), jnp.float32),
+            *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
+                                    single=single),
         ],
-        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
-                                            ARBITRARY, ARBITRARY),
+        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
         interpret=interpret,
-    )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
+    )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
     if pool is not None:
-        return out[:B, :ph_out]
-    return out[:B, :out_h, :out_w]
+        return out[:B, :p.ph_out]
+    return out[:B, :p.out_h, :p.out_w]
 
 
 @functools.partial(jax.jit, static_argnames=("m", "padding", "relu", "groups",
                                              "lrn", "pool", "row_block",
                                              "c_block", "k_block",
                                              "pool_row_block", "batch_block",
-                                             "interpret"))
-def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
-                    relu: bool = False, groups: int = 1, lrn=None, pool=None,
-                    row_block: int = 8, pool_row_block: int | None = None,
+                                             "weight_prefetch", "interpret"))
+def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
+                    padding: str = "SAME", relu: bool = False,
+                    groups: int = 1, lrn=None, pool=None, row_block: int = 8,
+                    pool_row_block: int | None = None,
                     c_block: int | None = None, k_block: int = 128,
-                    batch_block: int = 8, interpret: bool = True):
+                    batch_block: int = 8, weight_prefetch: bool = True,
+                    interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
 
     Fused pipeline: raw (halo-padded) feature map slabs stream HBM->VMEM via
@@ -363,10 +469,14 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     accumulation, and the bias+ReLU epilogue all happen in-kernel.  Groups
     fold into the K grid dimension on a group-major channel layout.
 
-    Filter cache (paper §3.5): ``batch_block`` images ride the innermost
-    grid dimension with the weight-block index constant, so each transformed
-    filter tile is fetched once per ``batch_block`` images instead of once
-    per image; per-image accumulators carry the extra leading dim.
+    Filter cache + prefetch (paper §3.5): ``batch_block`` images ride the
+    innermost grid dimension with the weight tile constant, so each
+    transformed filter tile is fetched once per ``batch_block`` images; the
+    fetch itself is a manual 2-slot double-buffered async copy — the next
+    tile's DMA is in flight while this tile's GEMMs run
+    (``weight_prefetch=True``; ``False`` runs the same copies synchronously,
+    bit-equal but exposed).  Pass ``w_packed`` — ``pack_weights(w, plan)``
+    staged while the previous layer computed — to skip in-trace packing.
 
     Layer fusion (paper §3.5): with ``lrn`` (an LrnParams-like object) and/or
     ``pool`` ((window, stride)) the cross-channel LRN and VALID max-pool run
@@ -386,85 +496,66 @@ def conv2d_winograd(x, w, b=None, *, m: int = 4, padding: str = "SAME",
     """
     r = w.shape[0]
     t = winograd_transform(m, r)
-    if lrn is not None or pool is not None:
-        return _conv2d_fused_call(x, w, b, t=t, padding=padding, relu=relu,
-                                  groups=groups, lrn=lrn, pool=pool,
-                                  pool_row_block=pool_row_block,
-                                  row_block=row_block, c_block=c_block,
-                                  k_block=k_block, batch_block=batch_block,
+    p = plan(x.shape, w.shape, m=m, padding=padding, groups=groups,
+             lrn=lrn, pool=pool, row_block=row_block,
+             pool_row_block=pool_row_block, c_block=c_block,
+             k_block=k_block, batch_block=batch_block)
+    if p.fused:
+        return _conv2d_fused_call(x, w, b, w_packed, t=t, p=p, relu=relu,
+                                  lrn=lrn, pool=pool,
+                                  weight_prefetch=weight_prefetch,
                                   interpret=interpret)
-    B, H, W, Ct = x.shape
-    Kt = w.shape[-1]
-    g = groups
-    assert Ct % g == 0 and Kt % g == 0 and w.shape[2] == Ct // g, (
-        "grouped conv shape mismatch")
-    C, K = Ct // g, Kt // g
-    if padding == "SAME":
-        ph = r // 2
-        out_h, out_w = H, W
-    else:
-        ph = 0
-        out_h, out_w = H - r + 1, W - r + 1
-    th, tw = -(-out_h // t.m), -(-out_w // t.m)
-    Rb = min(row_block, th)
-    thp = -(-th // Rb) * Rb
-    Hp = thp * t.m + r - 1
-    Wp = tw * t.m + r - 1
-
-    Bb, Bp = batch_blocks(B, batch_block)
-    Cb = channel_blocks(C, c_block, Hp, Wp, Bb)
-    Cp = C + (-C) % Cb
-    ncb = Cp // Cb
-    Kb = min(k_block, K)
-    padk = (-K) % Kb
-    Kp = K + padk
-    nkb = Kp // Kb
+    B, H, W, _ = x.shape
+    g = p.g
 
     # group-major channel layout, raw zero-pad only — no tile gather
-    xg, _ = grouped_channel_pad(x, g, Cb)
-    xg = jnp.pad(xg, ((0, Bp - B), (ph, Hp - H - ph), (ph, Wp - W - ph),
-                      (0, 0)))
-    wg = jnp.moveaxis(w.reshape(r, r, C, g, K), 3, 0)       # (g, r, r, C, K)
+    xg, _ = grouped_channel_pad(x, g, p.Cb)
+    xg = jnp.pad(xg, ((0, p.Bp - B), (p.ph_pad, p.Hp - H - p.ph_pad),
+                      (p.ph_pad, p.Wp - W - p.ph_pad), (0, 0)))
 
-    # filter transform host-side (tiny): V = G w G^T per group
-    Gj = jnp.asarray(t.G, jnp.float32)
-    wt = jnp.einsum("in,gnmck,jm->gijck", Gj, wg.astype(jnp.float32), Gj)
-    if Cp > C or padk:
-        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, 0), (0, Cp - C), (0, padk)))
-    bias = jnp.zeros((Kt,), x.dtype) if b is None else b
-    bg = bias.reshape(g, K)
-    if padk:
-        bg = jnp.pad(bg, ((0, 0), (0, padk)))
-    bg = bg.reshape(g * nkb, Kb)
+    w_tiles = dma.resolve_slab(w, w_packed, p.weights,
+                               lambda w: pack_weights(w, p))
+    bias = jnp.zeros((g * p.K,), x.dtype) if b is None else b
+    bg = bias.reshape(g, p.K)
+    if p.Kp > p.K:
+        bg = jnp.pad(bg, ((0, 0), (0, p.Kp - p.K)))
+    bg = bg.reshape(g * p.nkb, p.Kb)
 
-    kernel = functools.partial(_conv2d_kernel, relu=relu)
+    single = p.weights.n_tiles == 1
+    kernel = functools.partial(_conv2d_kernel, relu=relu,
+                               prefetch=weight_prefetch, single=single)
     out = pl.pallas_call(
         kernel,
-        grid=(Bp // Bb, thp // Rb, g * nkb, ncb, Bb),
+        grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
-            pl.BlockSpec((Bb, Hp, Wp, Cb),
-                         lambda bo, i, k, c, bi, nkb=nkb, ncb=ncb:
+            pl.BlockSpec((p.Bb, p.Hp, p.Wp, p.Cb),
+                         lambda bo, i, k, c, bi, nkb=p.nkb, ncb=p.ncb:
                          (bo, 0, 0, (k // nkb) * ncb + c)),
-            pl.BlockSpec((1, t.n, t.n, Cb, Kb),
-                         lambda bo, i, k, c, bi, nkb=nkb:
-                         (k // nkb, 0, 0, c, k % nkb)),
-            pl.BlockSpec((1, Kb), lambda bo, i, k, c, bi: (k, 0)),
+            # tile-packed weights: a single tile rides the BlockSpec
+            # pipeline (fetched once, resident); a multi-tile stream stays
+            # in ANY space and moves by manual double-buffered DMA
+            (dma.single_tile_spec(p.weights) if single
+             else pl.BlockSpec(memory_space=pltpu.ANY)),
+            pl.BlockSpec((1, p.Kb), lambda bo, i, k, c, bi: (k, 0)),
             pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
             pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((Bb, Rb * t.m, tw * t.m, Kb),
+        out_specs=pl.BlockSpec((p.Bb, p.Rt * t.m, p.tw * t.m, p.Kb),
                                lambda bo, i, k, c, bi: (bo, i, 0, k)),
-        out_shape=jax.ShapeDtypeStruct((Bp, thp * t.m, tw * t.m, g * Kp),
-                                       x.dtype),
-        scratch_shapes=[pltpu.VMEM((Bb, t.n, t.n, Rb, tw, Kb), jnp.float32)],
-        compiler_params=tpu_compiler_params(PARALLEL, PARALLEL, ARBITRARY,
-                                            ARBITRARY, ARBITRARY),
+        out_shape=jax.ShapeDtypeStruct(
+            (p.Bp, p.thp * t.m, p.tw * t.m, g * p.Kp), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((p.Bb, t.n, t.n, p.Rt, p.tw, p.Kb), jnp.float32),
+            *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
+                                    single=single),
+        ],
+        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
         interpret=interpret,
-    )(xg, wt, bg, jnp.asarray(t.BT, jnp.float32),
+    )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
-    y = out[:B, :out_h, :out_w]
-    if padk:
-        y = y.reshape(B, out_h, out_w, g, Kp)[..., :K]
-        y = y.reshape(B, out_h, out_w, g * K)
+    y = out[:B, :p.out_h, :p.out_w]
+    if p.Kp > p.K:
+        y = y.reshape(B, p.out_h, p.out_w, g, p.Kp)[..., :p.K]
+        y = y.reshape(B, p.out_h, p.out_w, g * p.K)
     return y

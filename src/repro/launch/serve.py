@@ -39,12 +39,21 @@ def apply_cnn_route(cfg, route: str):
 def serve_images(cfg, args) -> int:
     """Image-classification serving path (paper §3.5/§3.7 regime)."""
     cfg = apply_cnn_route(cfg, getattr(args, "route", "auto"))
+    if hasattr(cfg, "weight_prefetch"):
+        prefetch = getattr(args, "prefetch", "on") == "on"
+        cfg = dataclasses.replace(cfg, weight_prefetch=prefetch)
     if hasattr(cfg, "conv_channels"):
         # per-layer resolved datapaths — `--route pallas` must show every
-        # layer on a Pallas kernel, not a silent lax fallback
+        # layer on a Pallas kernel, not a silent lax fallback — plus the
+        # resolved §3.5 weight-stream mode (double-buffered DMA vs
+        # synchronous fetches; lax/jnp routes have no in-kernel stream)
         from ..models.alexnet import layer_routes
         routes = layer_routes(cfg)
-        print("conv routes: " + " ".join(f"{n}={r}" for n, r in routes))
+        pallas_any = any(r.startswith("pallas") for _, r in routes)
+        mode = (("on(dma-double-buffer)" if cfg.weight_prefetch
+                 else "off(dma-sync)") if pallas_any else "n/a(no-dma-route)")
+        print("conv routes: " + " ".join(f"{n}={r}" for n, r in routes)
+              + f" | weight_prefetch={mode}")
     scfg = CnnServeConfig(max_batch=args.max_batch,
                           data_parallel=args.data_parallel)
     eng = CnnEngine(cfg, scfg, seed=args.seed)
@@ -82,6 +91,10 @@ def main():
     ap.add_argument("--route", default="auto", choices=CNN_ROUTES,
                     help="CNN path: conv route (pallas = stream-buffered "
                          "kernel, interpret mode off-TPU)")
+    ap.add_argument("--prefetch", default="on", choices=("on", "off"),
+                    help="CNN path: Pallas weight stream — double-buffered "
+                         "manual-DMA filter prefetch (on) vs the same "
+                         "copies run synchronously (off; bit-equal)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

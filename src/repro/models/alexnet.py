@@ -20,8 +20,10 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..kernels.bfp_matmul.ops import bfp_linear
-from ..nn.conv import ConvSpec, dispatch_conv, resolve_kernel
+from ..kernels.bfp_matmul.ops import bfp_linear, fc_block, quantize_weights
+from ..kernels.conv.dma import WeightStager
+from ..nn.conv import ConvSpec, dispatch_conv, pack_conv_weights, \
+    resolve_kernel
 from ..nn.module import param, split
 from ..nn.pooling import LrnParams
 
@@ -39,6 +41,8 @@ class AlexNetConfig:
     use_pallas: bool = False       # route 3x3 convs through the Pallas kernel
     fc_batch: int = 96             # paper's S_batch
     fc_bfp: bool = False           # shared-exponent BFP FC weight stream §3.6
+    conv_bfp: bool = False         # §3.6 BFP on the staged conv filter slabs
+    weight_prefetch: bool = True   # §3.5 double-buffered in-kernel DMA stream
     lrn_n: int = 5
     lrn_k: float = 2.0
     lrn_alpha: float = 1e-4
@@ -129,33 +133,87 @@ def _fc_input_dim(cfg: AlexNetConfig) -> int:
     return _feature_hw(cfg) ** 2 * cfg.conv_channels[-1]
 
 
-def features(params, cfg: AlexNetConfig, images):
+def _stage_fc6(params, cfg: AlexNetConfig):
+    """The §3.6 quantized FC weight stream fc6 will use — staged during
+    conv5 so the quantization pass overlaps the last conv layer."""
+    w = params["fc6"]["w"]
+    return quantize_weights(w, block=fc_block(w.shape[0]))
+
+
+def features(params, cfg: AlexNetConfig, images, *, stager=None):
     """images (B, H, W, 3) -> flattened conv features (B, d).
 
     One ``dispatch_conv`` per layer; the LRN/pool epilogues live in the
     layer specs, so there are no free-standing norm/pool calls here.
+
+    Cross-layer weight staging (paper §3.5: "filters for the next layer
+    are prefetched while the current layer is computed"): each layer's
+    ``prefetch_next`` hook stages layer N+1's tile-packed slab
+    (``pack_conv_weights`` — Winograd transform, DMA tile layout, §3.6
+    BFP quantization under ``cfg.conv_bfp``) right after layer N's conv is
+    issued, so the (async-dispatched) packing runs behind layer N's
+    compute; conv5 stages fc6's quantized BFP stream when ``cfg.fc_bfp``.
+    Pass a persistent :class:`WeightStager` (bound to this param set) to
+    also reuse the packed slabs *across* forward passes — the host-level
+    filter cache the serving path wants.  Values are identical staged or
+    not; staging only moves work earlier.
     """
     x = images.astype(jnp.dtype(cfg.dtype))
     route = _route(cfg)
-    for i, spec in enumerate(layer_specs(cfg)):
+    stager = WeightStager() if stager is None else stager
+    specs = [s.with_route(route) for s in layer_specs(cfg)]
+    # the plan chain follows the *actual* input (the forward works for any
+    # image size), so slabs staged here always match what dispatch resolves
+    B, shapes, h, c_in = x.shape[0], [], x.shape[1], cfg.in_channels
+    for spec, c_out in zip(specs, cfg.conv_channels):
+        shapes.append((B, h, h, c_in))
+        h, c_in = spec.out_hw(h), c_out
+
+    staged = {}                     # per-forward handoff (tracer-safe)
+
+    def stage(i):
+        # the slab depends on the layer's input shape (batch included) and
+        # the quantization mode, so the persistent cache key carries both —
+        # a stager serving mixed batch sizes / configs keeps one slab per
+        # (layer, shape, bfp) and can never serve the wrong quantization
+        key = f"conv{i+1}:{shapes[i]}:bfp{int(cfg.conv_bfp)}"
+        if key not in staged:
+            staged[key] = stager.stage(
+                key, pack_conv_weights, specs[i], shapes[i],
+                params[f"conv{i+1}"]["w"], bfp_pack=cfg.conv_bfp)
+        return staged[key]
+
+    def stage_fc():
+        if "fc6" not in staged:
+            staged["fc6"] = stager.stage("fc6", _stage_fc6, params, cfg)
+        return staged["fc6"]
+
+    for i, spec in enumerate(specs):
         p = params[f"conv{i+1}"]
-        x = dispatch_conv(spec.with_route(route), x, p["w"], p["b"])
+        nxt = ((lambda i=i: stage(i + 1)) if i + 1 < len(specs)
+               else (stage_fc if cfg.fc_bfp else None))
+        x = dispatch_conv(spec, x, p["w"], p["b"], w_packed=stage(i),
+                          weight_prefetch=cfg.weight_prefetch,
+                          prefetch_next=nxt)
     return x.reshape(x.shape[0], -1)
 
 
-def classifier(params, cfg: AlexNetConfig, feats):
+def classifier(params, cfg: AlexNetConfig, feats, *, stager=None):
     """Batched FC layers (paper §3.7: weights streamed, features cached).
 
     With ``cfg.fc_bfp`` the weight stream moves as shared-exponent int8
     block floating point (§3.6, ``kernels/bfp_matmul``) — 1 byte/value on
-    the paper's stated FC bandwidth bottleneck — instead of f32.
+    the paper's stated FC bandwidth bottleneck — instead of f32; fc6's
+    quantized stream is taken from the ``stager`` when the conv phase
+    staged it (``features``' last ``prefetch_next`` hook).
     """
     x = feats
     n_fc = len(cfg.fc_dims)
     for j in range(n_fc):
         p = params[f"fc{j+6}"]
         if cfg.fc_bfp:
-            x = (bfp_linear(x, p["w"])
+            q = stager.get("fc6") if (j == 0 and stager is not None) else None
+            x = (bfp_linear(x, p["w"], quantized=q)
                  + p["b"].astype(jnp.float32)).astype(x.dtype)
         else:
             x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
@@ -164,8 +222,12 @@ def classifier(params, cfg: AlexNetConfig, feats):
     return x
 
 
-def apply(params, cfg: AlexNetConfig, images):
-    return classifier(params, cfg, features(params, cfg, images))
+def apply(params, cfg: AlexNetConfig, images, *, stager=None):
+    """Full forward; one stager spans conv + FC so conv5's hook can stage
+    the quantized fc6 stream (§3.5 prefetch across the conv/FC seam)."""
+    stager = WeightStager() if stager is None else stager
+    return classifier(params, cfg, features(params, cfg, images,
+                                            stager=stager), stager=stager)
 
 
 def loss_fn(params, cfg: AlexNetConfig, batch):

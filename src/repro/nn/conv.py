@@ -33,14 +33,29 @@ the full-resolution feature map never round-trips HBM between conv, norm,
 and pool.  All routes share one fused signature and stay numerically
 interchangeable against the unfused conv -> lrn -> maxpool reference
 (``repro.nn.pooling``).
+
+Weight staging (paper §3.5 filter prefetch, cross-layer level): the Pallas
+kernels take their filters as a *tile-packed slab* that a model can build
+ahead of time — :func:`pack_conv_weights` is a pure function of the layer
+spec and input shape, so layer N+1's slab (Winograd-transformed, blocked,
+optionally §3.6 BFP-quantized) can be dispatched while layer N computes.
+:func:`dispatch_conv` accepts the staged slab (``w_packed``) plus a
+``prefetch_next`` callable it invokes right after issuing the conv — the
+hook a model uses to stage the *next* layer's weights behind the current
+layer's compute (see ``models/alexnet.py`` and
+``kernels/conv/dma.py::WeightStager``).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, replace
 
 import jax.numpy as jnp
 
+from ..core import bfp
 from ..core.winograd import conv2d_winograd
+from ..kernels.conv import direct as _direct_k
+from ..kernels.conv import winograd as _winograd_k
 from ..kernels.conv.ops import conv2d as pallas_conv2d
 from ..kernels.conv.ops import conv2d_direct as pallas_conv2d_direct
 from ..kernels.conv.ref import conv2d_ref
@@ -148,13 +163,116 @@ def resolve_kernel(spec: ConvSpec, in_hw=None) -> str:
     return "pallas-winograd" if spec.winograd_eligible else "pallas-direct"
 
 
-def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
+@dataclass(frozen=True)
+class PackedConvWeights:
+    """A staged weight slab: the resolved datapath it was packed for plus
+    the packed array (tile-packed DMA slab on the Pallas kernels, the
+    BFP-requantized raw filters elsewhere, or None when the route has no
+    packed form)."""
+    kernel: str                     # resolved datapath (KERNELS member)
+    data: object                    # jnp array or None
+    bfp: bool = False
+
+
+def _spec_fusion(spec: ConvSpec):
+    """(lrn, pool) as the kernels see them when the bias is fused."""
+    lrn_p = spec.lrn if spec.fuse_lrn else None
+    pool = (spec.pool_window, spec.pool_stride) if spec.fuse_pool else None
+    return lrn_p, pool
+
+
+def _pallas_weight_plan(spec: ConvSpec, kernel: str, in_shape, w_shape, *,
+                        lrn, pool, k_block: int, batch_block: int):
+    """The weight-blocking plan the resolved Pallas kernel will use for
+    this (spec, input shape, fusion args) — the one source of truth for
+    slab shapes.  ``lrn``/``pool`` are the values the kernel call actually
+    receives (a deferred bias strips them even when the spec fuses)."""
+    if kernel == "pallas-winograd":
+        return _winograd_k.plan(in_shape, w_shape, m=spec.winograd_m,
+                                padding=spec.padding, groups=spec.groups,
+                                lrn=lrn, pool=pool, k_block=k_block,
+                                batch_block=batch_block)
+    return _direct_k.plan(in_shape, w_shape, stride=spec.stride,
+                          padding=spec.padding, pool=pool,
+                          groups=spec.groups, k_block=k_block,
+                          batch_block=batch_block)
+
+
+def _pack_for_plan(kernel: str, w, p, bfp_pack: bool):
+    """Pack (and optionally §3.6-quantize) the slab for an already-derived
+    plan — shared by the ahead-of-time staging path and the in-dispatch
+    repack fallback, so quantization semantics can never diverge."""
+    pack = (_winograd_k.pack_weights if kernel == "pallas-winograd"
+            else _direct_k.pack_weights)
+    tiles = pack(w, p)
+    if bfp_pack:
+        # per-tile shared exponents along the Cb contraction axis
+        tiles = bfp.quantize_dequantize(
+            tiles, block=math.gcd(p.weights.Cb, 32), axis=-2)
+    return tiles
+
+
+def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
+                      k_block: int = 128,
+                      batch_block: int = 8) -> PackedConvWeights:
+    """Build the weight slab for one conv layer ahead of its input.
+
+    A pure function of the layer spec, the input *shape* (B, H, W, C), and
+    the raw filters — everything the §3.5 cross-layer prefetch needs to
+    stage layer N+1's slab while layer N computes.  On the Pallas datapaths
+    this is the full packing the kernel would otherwise do in-trace:
+    Winograd filter transform (G w G^T), group/channel blocking, and the
+    manual-DMA tile layout.  With ``bfp_pack`` the slab is additionally
+    quantized §3.6-style (shared-exponent int8 blocks along the
+    contraction dim, ``fc_bfp``'s scheme applied to the filter stream —
+    the DLA's filter cache holds *transformed* filters, so quantization
+    happens post-transform) and dequantized back to the compute dtype, so
+    the staged values are exactly what a 1-byte weight stream would carry.
+
+    Non-Pallas routes have no tile slab; they still get a BFP
+    requantization (``data`` replaces ``w``).  Quantization follows the
+    datapath's *stored filter format* — Winograd-transformed tiles on the
+    Pallas kernels (as in the DLA's cache), raw filters elsewhere — so a
+    ``conv_bfp`` model's routes agree only within the shared-exponent
+    int8 error, not bit-wise across datapaths.
+    """
+    kernel = resolve_kernel(spec, in_hw=(in_shape[1], in_shape[2]))
+    if kernel.startswith("pallas"):
+        lrn_p, pool = _spec_fusion(spec)
+        p = _pallas_weight_plan(spec, kernel, tuple(in_shape), w.shape,
+                                lrn=lrn_p, pool=pool, k_block=k_block,
+                                batch_block=batch_block)
+        return PackedConvWeights(kernel=kernel,
+                                 data=_pack_for_plan(kernel, w, p, bfp_pack),
+                                 bfp=bfp_pack)
+    data = (bfp.quantize_dequantize(w, block=math.gcd(w.shape[2], 32),
+                                    axis=2) if bfp_pack else None)
+    return PackedConvWeights(kernel=kernel, data=data, bfp=bfp_pack)
+
+
+def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
+                  w_packed: PackedConvWeights | None = None,
+                  weight_prefetch: bool = True, k_block: int = 128,
+                  batch_block: int = 8, prefetch_next=None):
     """Run one conv layer per its spec.  x (B,H,W,C), w (k,k,C//g,K), b (K,).
 
     Grouped convs are batched (``feature_group_count`` on the direct route,
     a group-folded kernel grid / vmap on the Winograd/Pallas routes) — never
     a Python loop over groups.  LRN always spans the *full* concatenated
     channel dimension, including across group seams (Krizhevsky conv2).
+
+    Weight pipeline (§3.5): ``w_packed`` is a slab staged earlier by
+    :func:`pack_conv_weights` — used directly when it matches the datapath
+    and plan this call resolves to; on a mismatch (deferred-bias epilogue,
+    different input shape/plan, route fallback) a ``bfp``-marked slab is
+    *repacked* for the actual plan so §3.6 quantization is never silently
+    dropped, and a plain slab is ignored (the kernel packs in-trace —
+    identical values either way).  ``weight_prefetch`` selects the kernels'
+    double-buffered manual-DMA filter stream (on, default) vs the same
+    copies run synchronously (off; bit-equal).  ``prefetch_next`` is a
+    zero-arg callable invoked right after the conv is issued — JAX
+    dispatch is async, so work it enqueues (packing layer N+1's slab)
+    overlaps this layer's compute.
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
     # Unfused bias is an epilogue *between* conv and ReLU
@@ -167,22 +285,48 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None):
     pool = ((spec.pool_window, spec.pool_stride)
             if spec.fuse_pool and not defer_bias else None)
     kernel = resolve_kernel(spec, in_hw=(x.shape[1], x.shape[2]))
+
+    slab = None
+    if w_packed is not None and kernel.startswith("pallas"):
+        p = _pallas_weight_plan(spec, kernel, x.shape, w.shape,
+                                lrn=lrn_p, pool=pool, k_block=k_block,
+                                batch_block=batch_block)
+        want = (p.weights.n_tiles, *p.weights.tile_shape)
+        if (w_packed.kernel == kernel and w_packed.data is not None
+                and w_packed.data.shape == want):
+            slab = w_packed.data
+        elif w_packed.bfp:          # never silently drop §3.6 quantization
+            slab = _pack_for_plan(kernel, w, p, True)
+    elif w_packed is not None:
+        if w_packed.kernel == kernel and w_packed.data is not None:
+            w = w_packed.data       # BFP-requantized raw filters
+        elif w_packed.bfp:          # route fell back with a stale slab
+            w = bfp.quantize_dequantize(w, block=math.gcd(w.shape[2], 32),
+                                        axis=2)
+
     if kernel == "direct":
         y = conv2d_ref(x, w, bias, stride=spec.stride, padding=spec.padding,
                        groups=spec.groups, relu=relu, lrn=lrn_p, pool=pool)
     elif kernel == "pallas-winograd":
-        y = pallas_conv2d(x, w, bias, m=spec.winograd_m, padding=spec.padding,
-                          relu=relu, groups=spec.groups, lrn=lrn_p, pool=pool,
+        y = pallas_conv2d(x, w, bias, slab, m=spec.winograd_m,
+                          padding=spec.padding, relu=relu, groups=spec.groups,
+                          lrn=lrn_p, pool=pool, k_block=k_block,
+                          batch_block=batch_block,
+                          weight_prefetch=weight_prefetch,
                           pallas=True, interpret=interpret)
     elif kernel == "pallas-direct":
-        y = pallas_conv2d_direct(x, w, bias, stride=spec.stride,
+        y = pallas_conv2d_direct(x, w, bias, slab, stride=spec.stride,
                                  padding=spec.padding, relu=relu,
                                  groups=spec.groups, lrn=lrn_p, pool=pool,
+                                 k_block=k_block, batch_block=batch_block,
+                                 weight_prefetch=weight_prefetch,
                                  pallas=True, interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
                             padding=spec.padding, relu=relu,
                             groups=spec.groups, lrn=lrn_p, pool=pool)
+    if prefetch_next is not None:
+        prefetch_next()             # stage layer N+1 behind this dispatch
     if defer_bias:
         y = y + b.astype(y.dtype)
         if spec.relu:

@@ -251,3 +251,302 @@ def test_fc_bfp_parity_with_f32_classifier():
     scale = np.abs(exact).max() + 1e-9
     assert np.abs(bfp - exact).max() / scale < 5e-2
     assert not np.array_equal(bfp, exact)       # the quantized path ran
+
+
+# ---------------------------------------------------------------------------
+# manual-DMA double-buffered weight pipeline (§3.5 filter prefetch)
+# ---------------------------------------------------------------------------
+def _kernel_kwargs(kw):
+    """ConvSpec-style layer kwargs -> direct kernel-entry kwargs."""
+    return dict(stride=kw.get("stride", 1),
+                padding=kw.get("padding", "SAME"),
+                groups=kw.get("groups", 1), relu=kw.get("relu", False),
+                lrn=LrnParams() if kw.get("fuse_lrn") else None,
+                pool=(3, 2) if kw.get("fuse_pool") else None)
+
+
+def _layer_arrays(kw, H, c_in, c_out, seed=0, B=3):
+    rng = np.random.default_rng(seed)
+    k = kw["kernel"]
+    x = jnp.asarray(rng.standard_normal((B, H, H, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (k, k, c_in // kw.get("groups", 1), c_out)) * k ** -1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    return x, w, b
+
+
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", ALEXNET_LAYERS)
+def test_weight_prefetch_bit_parity_direct_kernel(name, kw, H, c_in, c_out):
+    """prefetch on/off must be bit-equal on the strided direct kernel for
+    every AlexNet layer geometry — same copies, same slots, only the
+    overlap differs.  Small c/k blocks + batch_block=2 force a multi-tile
+    stream with several cache generations (the odd-tile slot-parity wrap
+    included)."""
+    from repro.kernels.conv.direct import conv2d_direct
+    x, w, b = _layer_arrays(kw, H, c_in, c_out, seed=H + c_in + c_out)
+    kk = _kernel_kwargs(kw)
+    out = {}
+    for pf in (True, False):
+        out[pf] = np.asarray(conv2d_direct(
+            x, w, b, weight_prefetch=pf, c_block=max(c_in // 4, 1),
+            k_block=max(c_out // 4, 1), batch_block=2, interpret=True, **kk))
+    assert np.array_equal(out[True], out[False]), name
+
+
+@pytest.mark.parametrize("name,kw,H,c_in,c_out",
+                         [l for l in ALEXNET_LAYERS
+                          if l[1].get("stride", 1) == 1])
+def test_weight_prefetch_bit_parity_winograd_kernel(name, kw, H, c_in,
+                                                    c_out):
+    """Same invariant on the Winograd-domain kernel (stride-1 layers; the
+    5x5 conv2 runs as F(4,5)) — both the plain and the layer-fused grids."""
+    from repro.kernels.conv.winograd import conv2d_winograd
+    x, w, b = _layer_arrays(kw, H, c_in, c_out, seed=2 * H + c_out)
+    kk = _kernel_kwargs(kw)
+    kk.pop("stride")
+    out = {}
+    for pf in (True, False):
+        out[pf] = np.asarray(conv2d_winograd(
+            x, w, b, weight_prefetch=pf, c_block=max(c_in // 4, 1),
+            k_block=max(c_out // 4, 1), batch_block=2, interpret=True, **kk))
+    assert np.array_equal(out[True], out[False]), name
+
+
+@pytest.mark.parametrize("route", ("direct", "winograd", "pallas"))
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", ALEXNET_LAYERS[:2])
+def test_dispatch_prefetch_bit_parity(route, name, kw, H, c_in, c_out):
+    """dispatch_conv's weight_prefetch flag: bit-equal on the Pallas
+    datapaths, inert elsewhere."""
+    from repro.nn.conv import dispatch_conv
+    spec = ConvSpec(route=route, **kw)
+    x, w, b = _layer_arrays(kw, H, c_in, c_out, seed=3)
+    on = np.asarray(dispatch_conv(spec, x, w, b, weight_prefetch=True,
+                                  interpret=True))
+    off = np.asarray(dispatch_conv(spec, x, w, b, weight_prefetch=False,
+                                   interpret=True))
+    assert np.array_equal(on, off), (route, name)
+
+
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", ALEXNET_LAYERS)
+def test_staged_weight_slab_bit_equal(name, kw, H, c_in, c_out):
+    """pack_conv_weights ahead of time == in-trace packing, bit for bit,
+    on every layer's resolved Pallas datapath."""
+    from repro.nn.conv import dispatch_conv, pack_conv_weights
+    spec = ConvSpec(route="pallas", **kw)
+    x, w, b = _layer_arrays(kw, H, c_in, c_out, seed=11)
+    packed = pack_conv_weights(spec, x.shape, w)
+    assert packed.kernel.startswith("pallas")
+    assert packed.data is not None
+    base = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    staged = np.asarray(dispatch_conv(spec, x, w, b, w_packed=packed,
+                                      interpret=True))
+    assert np.array_equal(base, staged), name
+
+
+def test_stale_weight_slab_is_ignored():
+    """A slab staged for a different input shape (different plan) must be
+    ignored, not crash the kernel or corrupt the output."""
+    from repro.nn.conv import dispatch_conv, pack_conv_weights
+    spec = ConvSpec(kernel=3, relu=True, fuse_pool=True, route="pallas")
+    x, w, b = _layer_arrays(dict(kernel=3), 13, 8, 8, seed=5)
+    stale = pack_conv_weights(spec, (3, 29, 29, 8), w)
+    base = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    out = np.asarray(dispatch_conv(spec, x, w, b, w_packed=stale,
+                                   interpret=True))
+    assert np.array_equal(base, out)
+
+
+def test_stale_bfp_slab_is_repacked_not_dropped():
+    """A bfp-marked slab that misses the plan (wrong shape, or a
+    deferred-bias call) must be *repacked* quantized for the actual plan —
+    §3.6 quantization is never silently dropped to f32."""
+    from repro.nn.conv import dispatch_conv, pack_conv_weights
+    spec = ConvSpec(kernel=3, relu=True, fuse_pool=True, route="pallas")
+    x, w, b = _layer_arrays(dict(kernel=3), 13, 8, 8, seed=6)
+    fresh = pack_conv_weights(spec, x.shape, w, bfp_pack=True)
+    want = np.asarray(dispatch_conv(spec, x, w, b, w_packed=fresh,
+                                    interpret=True))
+    plain = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    assert not np.array_equal(want, plain)      # quantization is observable
+    stale = pack_conv_weights(spec, (3, 29, 29, 8), w, bfp_pack=True)
+    out = np.asarray(dispatch_conv(spec, x, w, b, w_packed=stale,
+                                   interpret=True))
+    assert np.array_equal(want, out)
+    # deferred bias strips the fused plan too — still quantized
+    spec_d = dataclasses.replace(spec, fuse_bias=False)
+    out_d = np.asarray(dispatch_conv(spec_d, x, w, b, w_packed=fresh,
+                                     interpret=True))
+    plain_d = np.asarray(dispatch_conv(spec_d, x, w, b, interpret=True))
+    assert not np.array_equal(out_d, plain_d)
+
+
+def test_weight_stager_caches_across_forward_passes():
+    """A persistent stager packs each slab once: the second forward pass
+    is all cache hits and bit-equal to the first params' unstaged run."""
+    from repro.kernels.conv.dma import WeightStager
+    cfg = dataclasses.replace(get_config("alexnet").reduced(),
+                              use_pallas=True)
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1),
+                             (2, cfg.image_size, cfg.image_size, 3))
+    stager = WeightStager()
+    a = np.asarray(alexnet.features(params, cfg, imgs, stager=stager))
+    misses = stager.misses
+    assert misses == 5                  # one pack per conv layer
+    b = np.asarray(alexnet.features(params, cfg, imgs, stager=stager))
+    assert stager.misses == misses      # second pass: no repacking
+    assert stager.hits >= 5
+    ref = np.asarray(alexnet.features(params, cfg, imgs))
+    assert np.array_equal(a, b) and np.array_equal(a, ref)
+    # a different batch size resolves different plans: the shape-carrying
+    # keys pack fresh slabs (no stale-slab reuse) and stay correct
+    imgs1 = imgs[:1]
+    c = np.asarray(alexnet.features(params, cfg, imgs1, stager=stager))
+    assert stager.misses == misses + 5
+    assert np.array_equal(c, np.asarray(alexnet.features(params, cfg,
+                                                         imgs1)))
+    # the same stager serving a conv_bfp config must not reuse the
+    # unquantized slabs — the cache key carries the quantization mode
+    cfgq = dataclasses.replace(cfg, conv_bfp=True)
+    q = np.asarray(alexnet.features(params, cfgq, imgs1, stager=stager))
+    assert not np.array_equal(q, c)
+
+
+def test_conv_bfp_slab_tracks_f32_and_differs():
+    """§3.6 on the staged filter slabs: conv_bfp quantizes the weight
+    stream (so outputs must differ bit-wise) while tracking the f32 model
+    within shared-exponent int8 error."""
+    cfg = dataclasses.replace(get_config("alexnet").reduced(),
+                              use_pallas=True)
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(2),
+                             (2, cfg.image_size, cfg.image_size, 3))
+    exact = np.asarray(alexnet.apply(params, cfg, imgs))
+    bfp = np.asarray(alexnet.apply(
+        params, dataclasses.replace(cfg, conv_bfp=True), imgs))
+    assert not np.array_equal(bfp, exact)       # the quantized stream ran
+    scale = np.abs(exact).max() + 1e-9
+    assert np.abs(bfp - exact).max() / scale < 5e-2
+
+
+def test_fc_bfp_staged_quantization_matches_unstaged():
+    """conv5's prefetch_next stages fc6's quantized BFP stream; the staged
+    classifier must bit-match the unstaged fc_bfp classifier."""
+    from repro.kernels.conv.dma import WeightStager
+    cfg = dataclasses.replace(get_config("alexnet").reduced(), fc_bfp=True)
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(9)
+    feats = jnp.asarray(rng.standard_normal(
+        (4, alexnet._fc_input_dim(cfg))), jnp.float32)
+    unstaged = np.asarray(alexnet.classifier(params, cfg, feats))
+    stager = WeightStager()
+    stager.stage("fc6", alexnet._stage_fc6, params, cfg)
+    staged = np.asarray(alexnet.classifier(params, cfg, feats,
+                                           stager=stager))
+    assert np.array_equal(unstaged, staged)
+    assert stager.hits >= 1             # the staged stream was consumed
+
+
+def test_hbm_model_prefetch_exposure_terms():
+    """Prefetch on exposes one warmup tile; off exposes the whole stream;
+    hidden + exposed == total; non-Pallas routes expose everything."""
+    hb = conv2d_hbm_bytes(8, 27, 27, 96, 256, 5, None, groups=2,
+                          fuse_lrn=True, fuse_pool=True, route="pallas",
+                          batch_block=4)
+    # one warmup tile per filter-cache generation (B=8, Bb=4 -> 2)
+    assert hb["weight_exposed_prefetch_bytes"] == 2 * hb["weight_tile_bytes"]
+    assert hb["weight_exposed_noprefetch_bytes"] == hb["weight_hbm_bytes"]
+    assert hb["weight_fetches"] > 1
+    assert (hb["weight_exposed_prefetch_bytes"]
+            < hb["weight_exposed_noprefetch_bytes"])
+    assert (hb["weight_hbm_hidden_bytes"] + hb["weight_hbm_exposed_bytes"]
+            == hb["weight_hbm_bytes"])
+    off = conv2d_hbm_bytes(8, 27, 27, 96, 256, 5, None, groups=2,
+                           fuse_lrn=True, fuse_pool=True, route="pallas",
+                           batch_block=4, weight_prefetch=False)
+    assert off["weight_hbm_exposed_bytes"] == off["weight_hbm_bytes"]
+    assert off["weight_hbm_hidden_bytes"] == 0
+    lax = conv2d_hbm_bytes(8, 27, 27, 96, 256, 5, None, groups=2,
+                           route="direct")
+    assert lax["weight_hbm_exposed_bytes"] == lax["weight_hbm_bytes"]
+    assert lax["weight_hbm_hidden_bytes"] == 0
+
+
+def test_hbm_model_prefetch_exposed_below_noprefetch_all_layers():
+    """Full 227px AlexNet on the pallas route with the K dimension split
+    into tiles (the steady-state streaming regime): every layer models
+    prefetch-exposed weight bytes strictly below the non-prefetch stream
+    (the CI bench gate's invariant)."""
+    cfg = get_config("alexnet")
+    h, c_in = cfg.image_size, cfg.in_channels
+    for spec, c_out in zip(alexnet.layer_specs(cfg), cfg.conv_channels):
+        route = resolve_kernel(spec.with_route("pallas"))
+        hb = conv2d_hbm_bytes(
+            8, h, h, c_in, c_out, spec.kernel,
+            spec.winograd_m if route == "pallas-winograd" else None,
+            stride=spec.stride, padding=spec.padding, relu=spec.relu,
+            fuse_lrn=spec.fuse_lrn, fuse_pool=spec.fuse_pool,
+            groups=spec.groups, route="pallas", k_block=32, batch_block=4)
+        assert hb["weight_fetches"] > 1, spec
+        assert (hb["weight_exposed_prefetch_bytes"]
+                < hb["weight_exposed_noprefetch_bytes"]), spec
+        h, c_in = spec.out_hw(h), c_out
+
+
+def test_hbm_model_single_tile_stream_fetched_once():
+    """A single-tile weight stream (g=1, one C block, one K block) is
+    fetched once and kept resident — the model must not charge the
+    per-transition re-copy the kernels elide, and both prefetch modes
+    expose the same single warmup tile."""
+    hb = conv2d_hbm_bytes(8, 227, 227, 3, 96, 11, None, stride=4,
+                          padding="VALID", relu=True, fuse_lrn=True,
+                          fuse_pool=True, route="pallas", batch_block=4)
+    assert hb["weight_fetches"] == 1
+    assert hb["weight_hbm_bytes"] == hb["weight_tile_bytes"]
+    assert (hb["weight_exposed_prefetch_bytes"]
+            == hb["weight_exposed_noprefetch_bytes"]
+            == hb["weight_tile_bytes"])
+    assert hb["weight_hbm_hidden_bytes"] == 0
+
+
+def test_single_tile_stream_kernel_parity():
+    """Kernel-level single-tile elision: with one weight tile (default
+    blocks, g=1) both prefetch modes and several cache generations give
+    the reference answer bit-equally."""
+    from repro.kernels.conv.direct import conv2d_direct
+    from repro.kernels.conv.direct import plan as dplan
+    x, w, b = _layer_arrays(dict(kernel=5), 17, 6, 8, seed=21, B=5)
+    p = dplan(x.shape, w.shape, stride=2, batch_block=2)
+    assert p.weights.n_tiles == 1
+    ref = _reference(x, w, b, ConvSpec(kernel=5, stride=2, relu=True))
+    for pf in (True, False):
+        out = np.asarray(conv2d_direct(x, w, b, stride=2, relu=True,
+                                       batch_block=2, weight_prefetch=pf,
+                                       interpret=True))
+        np.testing.assert_allclose(out, np.asarray(ref), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_conv_layer_roofline_terms():
+    """Weight-stream roofline: hiding the filter stream raises effective
+    arithmetic intensity and can flip a layer from memory- to
+    compute-bound."""
+    from repro.core.roofline import (ConvLayerRoofline, conv_layer_roofline,
+                                     network_conv_roofline)
+    hb = conv2d_hbm_bytes(8, 27, 27, 96, 256, 5, None, groups=2,
+                          fuse_lrn=True, fuse_pool=True, route="pallas")
+    on = conv_layer_roofline("conv2", hb, flops=1e9, weight_prefetch=True)
+    off = conv_layer_roofline("conv2", hb, flops=1e9, weight_prefetch=False)
+    assert on.ai_total == off.ai_total          # same bytes moved
+    assert on.ai_exposed > off.ai_exposed       # fewer exposed
+    assert on.t_memory < off.t_memory
+    assert on.weight_hidden_bytes > 0 and off.weight_hidden_bytes == 0
+    # a layer whose exposed bytes shrink enough flips to compute-bound
+    big = ConvLayerRoofline("x", flops=1e12, feature_bytes=1e9,
+                            weight_bytes=4e9, weight_exposed_bytes=1e6)
+    small = ConvLayerRoofline("x", flops=1e12, feature_bytes=1e9,
+                              weight_bytes=4e9, weight_exposed_bytes=4e9)
+    assert big.bound == "compute" and small.bound == "memory"
+    net = network_conv_roofline([on, off])
+    assert net["weight_bytes"] == on.weight_bytes + off.weight_bytes
+    assert net["bound"] in ("compute", "memory")
