@@ -1,5 +1,4 @@
 import sys
-import time
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
@@ -7,17 +6,16 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 def time_us(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall-time per call in microseconds (CPU; used for relative
-    comparisons and harness sanity, not TPU projections)."""
-    import jax
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    comparisons and harness sanity, not TPU projections).
+
+    Thin veneer over the shared measurement core (``repro.core.timing``)
+    so every benchmark and the autotuner apply one timing discipline:
+    warmup calls excluded (jit compile), every sample bracketed by
+    ``block_until_ready`` fences, median-of-k with an IQR steady-state
+    guard that re-samples noisy runs.
+    """
+    from repro.core.timing import measure_us
+    return measure_us(fn, *args, warmup=warmup, iters=iters)
 
 
 def emit(rows):

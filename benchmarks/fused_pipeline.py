@@ -35,6 +35,15 @@ resident; both modes then expose the same warmup tile.)
         [--route {auto,direct,winograd,pallas}] [--prefetch {on,off}]
         [--batch N] [--batch-block N] [--k-block N] [--check]
         [--image-size N] [--out BENCH_fused_pipeline.json]
+        [--autotune] [--autotune-budget N] [--trace DIR]
+
+``--autotune`` additionally runs the measured per-layer autotuner
+(``core/autotune.py``) over the same config — enumerating the real launch
+knobs, timing each candidate through dispatch_conv, and reporting
+default-vs-tuned wall-clock per layer (the ``autotune`` artifact
+section).  ``--trace DIR`` wraps the measured region in a JAX profiler
+trace (viewable in TensorBoard/Perfetto) so kernel-level timelines sit
+next to the wall-clock numbers.
 
 ``--check`` exits nonzero unless (a) every Pallas-resolved layer models
 fused bytes strictly below unfused and no layer models fused above
@@ -267,6 +276,15 @@ def main(argv=None):
                          "131, so the late layers keep non-degenerate "
                          "feature maps)")
     ap.add_argument("--out", default="BENCH_fused_pipeline.json")
+    ap.add_argument("--autotune", action="store_true",
+                    help="also run the measured per-layer autotuner over "
+                         "this config and report default-vs-tuned "
+                         "wall-clock (core/autotune.py)")
+    ap.add_argument("--autotune-budget", type=int, default=8,
+                    help="max measured candidates per layer for --autotune")
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="capture a JAX profiler trace of the measured "
+                         "region into DIR")
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless every pallas layer models strictly "
                          "lower fused HBM bytes than unfused AND prefetch-"
@@ -285,8 +303,17 @@ def main(argv=None):
     prefetch = args.prefetch == "on"
     cfg = dataclasses.replace(cfg, weight_prefetch=prefetch)
 
+    if args.trace:
+        jax.profiler.start_trace(args.trace)
     rows = layer_rows(cfg, batch=args.batch, batch_block=args.batch_block,
                       k_block=args.k_block, prefetch=prefetch)
+    tune = None
+    if args.autotune:
+        from repro.core.autotune import autotune_alexnet
+        tune = autotune_alexnet(cfg, args.batch,
+                                max_candidates=args.autotune_budget)
+    if args.trace:
+        jax.profiler.stop_trace()
     net = network_summary(rows, prefetch=prefetch)
     emit([{"name": f"fused_pipeline/{r['layer']}",
            "us_per_call": r["fused_us"],
@@ -316,6 +343,14 @@ def main(argv=None):
                        f"{net['prefetch_exposure_ratio']:.1f}x"
                        f";us_on={net['fused_us_prefetch']:.0f}"
                        f";us_off={net['fused_us_noprefetch']:.0f}")}])
+    if tune is not None:
+        emit([{"name": f"fused_pipeline/autotune/{t['layer']}",
+               "us_per_call": t["tuned_us"],
+               "derived": (f"default_us={t['default_us']:.0f}"
+                           f";speedup={t['default_us']/t['tuned_us']:.2f}x"
+                           f";candidates={t['candidates']}"
+                           f";plan={t['plan']}")}
+              for t in tune])
 
     artifact = {
         "config": dataclasses.asdict(cfg),
@@ -328,6 +363,8 @@ def main(argv=None):
         "layers": rows,
         "network": net,
     }
+    if tune is not None:
+        artifact["autotune"] = tune
     with open(args.out, "w") as f:
         json.dump(artifact, f, indent=2)
 

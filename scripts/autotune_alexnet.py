@@ -1,0 +1,129 @@
+"""Measured per-layer autotune run over AlexNet's conv layers.
+
+The live analog of the paper's §4 DSE (there: analytic ranking of
+(C_vec, K_vec) ASIC configs; here: wall-clock measurement of the real
+Pallas launch knobs through the full dispatch path — see
+``core/autotune.py``; ``scripts/hillclimb.py`` is the sibling harness for
+the LM roofline cells).  Writes two artifacts:
+
+* ``results/plans/<name>.json`` — the persisted best-plan cache that
+  ``models/alexnet.py`` / ``serving/cnn.py`` auto-load at engine build;
+* ``BENCH_autotune.json`` — per-layer default-vs-tuned wall-clock, the
+  perf-trajectory record CI gates on (tuned must never measure slower
+  than default: the default plan is always a candidate, so the gate can
+  only fail if the artifact was edited by hand or measured inconsistently).
+
+    PYTHONPATH=src python scripts/autotune_alexnet.py [--full] [--fast]
+        [--batch N] [--budget N] [--iters N] [--hill-climb] [--check-equal]
+        [--cache PATH] [--out BENCH_autotune.json] [--check]
+
+``--fast`` is the CI smoke mode: reduced config, small batch, a handful
+of candidates per layer, single timing iteration.  ``--check`` exits
+nonzero if any layer's recorded tuned_us exceeds its default_us.
+"""
+import argparse
+import dataclasses
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                  # noqa: E402
+
+from repro.core.autotune import (PlanCache, autotune_alexnet,  # noqa: E402
+                                 backend_kind, default_cache_path)
+from repro.models import alexnet                            # noqa: E402
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full 227px AlexNet (default: reduced config)")
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke mode: small batch, few candidates, "
+                         "1 timing iteration")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="batch size to tune at (default 4; 2 with --fast)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max measured candidates per layer "
+                         "(default: unlimited; 6 with --fast)")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="timing iterations per candidate (default 3; "
+                         "1 with --fast)")
+    ap.add_argument("--image-size", type=int, default=None)
+    ap.add_argument("--hill-climb", action="store_true",
+                    help="halve/double neighborhood walk past the knob "
+                         "grids from the measured winner")
+    ap.add_argument("--check-equal", action="store_true",
+                    help="assert every measured candidate's output is "
+                         "bit-equal to the default plan's (~2x cost)")
+    ap.add_argument("--cache", default=None,
+                    help="plan-cache path (default results/plans/<name>.json)")
+    ap.add_argument("--out", default="BENCH_autotune.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if any layer's tuned_us > default_us")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = alexnet.AlexNetConfig(use_pallas=True)
+    if not args.full:
+        # reduced channels at 131px, as in benchmarks/fused_pipeline.py:
+        # the stock 67px reduction degenerates conv3-5 to 3x3 maps
+        cfg = dataclasses.replace(cfg.reduced(), image_size=131,
+                                  use_pallas=True)
+    if args.image_size:
+        cfg = dataclasses.replace(cfg, image_size=args.image_size)
+    batch = args.batch or (2 if args.fast else 4)
+    budget = args.budget or (6 if args.fast else None)
+    iters = args.iters or (1 if args.fast else 3)
+
+    cache_path = args.cache or default_cache_path(cfg.name)
+    cache = PlanCache.load(cache_path)
+    log = None if args.quiet else (lambda s: print(s, flush=True))
+    if log:
+        log(f"autotune: {cfg.name} batch={batch} backend={backend_kind()} "
+            f"budget={budget} iters={iters}")
+    results = autotune_alexnet(cfg, batch, iters=iters,
+                               max_candidates=budget,
+                               hill_climb=args.hill_climb,
+                               check_equal=args.check_equal,
+                               cache=cache, log=log)
+    cache.save(cache_path)
+
+    artifact = {
+        "config": dataclasses.asdict(cfg),
+        "batch": batch,
+        "backend": backend_kind(),
+        "jax_backend": jax.default_backend(),
+        "budget": budget,
+        "iters": iters,
+        "cache": cache_path,
+        "layers": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(artifact, f, indent=2)
+        f.write("\n")
+
+    bad = []
+    for r in results:
+        speed = r["default_us"] / r["tuned_us"]
+        print(f"autotune/{r['layer']},{r['tuned_us']:.1f},"
+              f"default_us={r['default_us']:.0f};speedup={speed:.2f}x"
+              f";candidates={r['candidates']};plan={r['plan']}")
+        if r["tuned_us"] > r["default_us"]:
+            bad.append(r["layer"])
+
+    print(f"autotune/cache,0,path={cache_path};"
+          f"entries={len(cache.entries)}")
+    if args.check:
+        if bad:
+            print(f"autotune/CHECK_FAILED,0,layers={bad}")
+            return 1
+        print("autotune/CHECK_OK,0,tuned<=default_all_layers")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

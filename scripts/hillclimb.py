@@ -6,6 +6,11 @@ named variant (rules / cfg overrides / serve dtype), print the three
 roofline terms vs the recorded baseline, and append to
 results/hillclimb.jsonl.
 
+For the CNN side, ``scripts/autotune_alexnet.py`` is the measured
+counterpart: instead of hand-named variants it enumerates the Pallas conv
+launch knobs per layer, times each through dispatch_conv, and persists
+the winners to ``results/plans/`` (see ``core/autotune.py``).
+
     PYTHONPATH=src python scripts/hillclimb.py \
         --arch starcoder2-15b --shape train_4k --mesh single \
         --name banded_attn --cfg '{"banded_attention": true}'

@@ -1,0 +1,390 @@
+"""Live measured autotuner: per-layer DSE over the real Pallas knobs.
+
+The paper's §4 design-space exploration ranks candidate (C_vec, K_vec)
+configurations with an *analytical* model and synthesizes the winner.  Our
+analog runs the same loop live: for one conv layer (a
+:class:`~repro.nn.conv.ConvSpec` + concrete input geometry) it enumerates
+the valid launch plans over the knobs the kernels actually expose —
+``batch_block`` (filter-cache depth), ``k_block``, ``c_block`` /
+``pool_row_block`` (VMEM-budget auto-sizing overrides), ``weight_prefetch``
+(double-buffered DMA stream on/off) and ``row_parallel`` (per-row-block
+stream restart that frees the row grid dimension) — *measures* each through
+the full :func:`~repro.nn.conv.dispatch_conv` path with the shared timing
+discipline (warmup, ``block_until_ready`` fences, median-of-k,
+steady-state guard; ``core/timing.py``), and persists the winner in a JSON
+plan cache keyed by (geometry, backend kind, dtype, fusion flags).
+
+Guarantees by construction:
+
+* the default ``ConvPlan()`` is always a candidate, so the tuned plan can
+  never measure slower than the default *in the sweep that chose it*;
+* every candidate is **bit-equal** to the default plan — the knobs swept
+  here only re-block the launch (filter-cache depth, weight-tile shape,
+  pool row ownership, DMA scheduling), never the f32 accumulation order.
+  ``c_block`` *would* change reduction order, so candidates keep the
+  auto-sized value (full-C residency for every AlexNet layer under the
+  8 MiB budget) — the one knob the measured sweep leaves to the analytic
+  VMEM model;
+* plans deduplicate by their *effective* kernel launch (the resolved
+  ``WinogradPlan``/``DirectPlan`` plus the stream knobs), so clamped or
+  widened knob values (``batch_block > B``, non-dividing ``k_block``)
+  never measure twice.
+
+``scripts/autotune_alexnet.py`` wraps :func:`autotune_alexnet` as a CLI;
+``benchmarks/fused_pipeline.py --autotune`` folds tuned plans into the
+fused-pipeline bench; ``models/alexnet.py`` / ``serving/cnn.py`` load the
+persisted cache at engine build.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..nn.conv import (ConvPlan, ConvSpec, DEFAULT_PLAN, _pallas_weight_plan,
+                       _spec_fusion, dispatch_conv, resolve_kernel)
+from .timing import Timing, measure
+
+# default on-disk home for persisted plan caches
+PLAN_DIR = os.path.join("results", "plans")
+
+# knob grids the enumerator crosses (pruned + deduped against the layer)
+BATCH_BLOCKS = (1, 2, 4, 8, 16)
+K_BLOCKS = (64, 128, 256)
+POOL_ROW_BLOCKS = (None, 1, 2, 4)
+
+
+# ---------------------------------------------------------------------------
+# cache keys
+# ---------------------------------------------------------------------------
+def backend_kind(interpret: bool | None = None) -> str:
+    """The measurement substrate a plan was tuned on.  Interpret-mode
+    numbers are emulation wall-clock — never valid on a real backend, so
+    the marker keeps them from leaking across."""
+    kind = jax.default_backend()
+    if interpret is None:
+        interpret = kind != "tpu"
+    return f"{kind}-interpret" if interpret else kind
+
+
+def plan_key(spec: ConvSpec, in_shape, *, dtype="float32",
+             interpret: bool | None = None) -> dict:
+    """The cache identity of one tuning problem: layer geometry (batch
+    included — the filter-cache depth trades against it), fusion flags,
+    dtype, and the backend kind measurements ran on."""
+    B, H, W, C = in_shape
+    return {
+        "kernel": spec.kernel, "stride": spec.stride,
+        "padding": spec.padding, "groups": spec.groups,
+        "route": spec.route, "winograd_m": spec.winograd_m,
+        "relu": spec.relu, "fuse_bias": spec.fuse_bias,
+        "fuse_lrn": spec.fuse_lrn, "fuse_pool": spec.fuse_pool,
+        "pool_window": spec.pool_window, "pool_stride": spec.pool_stride,
+        "batch": B, "h": H, "w": W, "c": C,
+        "dtype": str(jnp.dtype(dtype)),
+        "backend": backend_kind(interpret),
+    }
+
+
+def key_str(key: dict) -> str:
+    """Canonical string form (stable across field order / sessions)."""
+    return json.dumps(key, sort_keys=True, separators=(",", ":"))
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+@dataclass
+class PlanCache:
+    """A JSON-backed map from :func:`plan_key` to the tuned best plan.
+
+    One file per model/network (``results/plans/<name>.json``); each entry
+    records the winning plan, the measured numbers behind it, and the full
+    key fields so lookups can relax the batch (a serving engine with a
+    different bucket size still wants conv2's tuned blocking)."""
+    path: str | None = None
+    entries: dict = field(default_factory=dict)     # key_str -> entry dict
+
+    @classmethod
+    def load(cls, path) -> "PlanCache":
+        path = os.fspath(path)
+        cache = cls(path=path)
+        if os.path.exists(path):
+            with open(path) as f:
+                data = json.load(f)
+            cache.entries = data.get("entries", {})
+        return cache
+
+    def save(self, path=None) -> str:
+        path = os.fspath(path or self.path)
+        assert path, "PlanCache.save needs a path"
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"version": 1, "entries": self.entries}, f, indent=2,
+                      sort_keys=True)
+            f.write("\n")
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    def put(self, key: dict, plan: ConvPlan, stats: dict | None = None):
+        self.entries[key_str(key)] = {
+            "key": dict(key), "plan": plan.to_dict(),
+            "stats": dict(stats or {}),
+        }
+
+    def get(self, key: dict, *, any_batch: bool = False) -> ConvPlan | None:
+        """Exact lookup; with ``any_batch`` fall back to an entry matching
+        every field but the batch (serving buckets reuse the nearest tuned
+        geometry rather than running untuned)."""
+        hit = self.entries.get(key_str(key))
+        if hit is None and any_batch:
+            want = {k: v for k, v in key.items() if k != "batch"}
+            for e in self.entries.values():
+                have = {k: v for k, v in e["key"].items() if k != "batch"}
+                if have == want:
+                    hit = e
+                    break
+        return None if hit is None else ConvPlan.from_dict(hit["plan"])
+
+    def stats(self, key: dict) -> dict | None:
+        hit = self.entries.get(key_str(key))
+        return None if hit is None else hit.get("stats")
+
+
+def default_cache_path(name: str = "alexnet") -> str:
+    return os.path.join(PLAN_DIR, f"{name}.json")
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration
+# ---------------------------------------------------------------------------
+def _effective_signature(spec: ConvSpec, kernel: str, in_shape, w_shape,
+                         plan: ConvPlan):
+    """What the launch actually runs: the resolved kernel blocking plan
+    plus the stream knobs that live outside it.  Two ConvPlans with the
+    same signature are the same launch — measure one."""
+    lrn_p, pool = _spec_fusion(spec)
+    p = _pallas_weight_plan(spec, kernel, tuple(in_shape), w_shape,
+                            lrn=lrn_p, pool=pool, knobs=plan)
+    single = p.weights.n_tiles == 1
+    return (kernel, p, plan.weight_prefetch,
+            plan.row_parallel and not single)
+
+
+def enumerate_plans(spec: ConvSpec, in_shape, w_shape, *,
+                    max_candidates: int | None = None) -> list[ConvPlan]:
+    """All distinct candidate launch plans for one layer, default first.
+
+    The cross product of the knob grids is pruned two ways: knobs the
+    kernel would clamp or widen anyway (``batch_block > B``, a ``k_block``
+    that doesn't divide K, a ``pool_row_block`` past the pooled extent)
+    collapse onto their effective launch via :func:`_effective_signature`,
+    and ``c_block`` stays on the analytic auto-sizing (see module doc) so
+    every emitted plan is bit-equal to the default.  Non-Pallas datapaths
+    have no launch knobs — the default plan is the only candidate.
+    """
+    kernel = resolve_kernel(spec, in_hw=(in_shape[1], in_shape[2]))
+    if not kernel.startswith("pallas"):
+        return [DEFAULT_PLAN]
+
+    B = in_shape[0]
+    batch_grid = sorted({min(bb, B) for bb in BATCH_BLOCKS})
+    pool_grid = POOL_ROW_BLOCKS if spec.fuse_pool else (None,)
+
+    seen, out = set(), []
+
+    def admit(plan: ConvPlan):
+        sig = _effective_signature(spec, kernel, in_shape, w_shape, plan)
+        if sig in seen:
+            return
+        seen.add(sig)
+        out.append(plan)
+
+    admit(DEFAULT_PLAN)             # tuned can never regress the default
+    for bb in batch_grid:
+        for kb in K_BLOCKS:
+            for prb in pool_grid:
+                for pref in (True, False):
+                    for rp in (False, True):
+                        admit(ConvPlan(batch_block=bb, k_block=kb,
+                                       pool_row_block=prb,
+                                       weight_prefetch=pref,
+                                       row_parallel=rp))
+    if max_candidates is not None and len(out) > max_candidates:
+        out = out[:max_candidates]
+    return out
+
+
+def _neighbors(plan: ConvPlan, B: int) -> list[ConvPlan]:
+    """Hill-climb moves: halve/double the two blocking knobs the grids may
+    have bracketed too coarsely."""
+    moves = []
+    for bb in (plan.batch_block // 2, plan.batch_block * 2):
+        if 1 <= bb <= max(B, 1):
+            moves.append(ConvPlan(**{**plan.to_dict(), "batch_block": bb}))
+    for kb in (plan.k_block // 2, plan.k_block * 2):
+        if 16 <= kb <= 512:
+            moves.append(ConvPlan(**{**plan.to_dict(), "k_block": kb}))
+    return moves
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+def measure_plan(spec: ConvSpec, x, w, b, plan: ConvPlan, *,
+                 interpret: bool | None = None, warmup: int = 1,
+                 iters: int = 3) -> Timing:
+    """Median wall-clock of the full jitted dispatch under one plan."""
+    fn = jax.jit(lambda x_, w_, b_: dispatch_conv(
+        spec, x_, w_, b_, plan=plan, interpret=interpret))
+    return measure(fn, x, w, b, warmup=warmup, iters=iters)
+
+
+def autotune_layer(spec: ConvSpec, x, w, b=None, *,
+                   interpret: bool | None = None, warmup: int = 1,
+                   iters: int = 3, max_candidates: int | None = None,
+                   hill_climb: bool = False, check_equal: bool = False,
+                   log=None):
+    """Measure every candidate plan for one layer; return the winner.
+
+    Returns ``(best_plan, rows)`` where ``rows`` is one measurement record
+    per candidate (``plan``/``us``/``steady``/``default`` fields), rows[0]
+    always the default plan.  With ``hill_climb`` the winner seeds a
+    halve/double neighborhood walk past the grid edges.  ``check_equal``
+    additionally asserts each candidate's output is bit-equal to the
+    default's (the enumerator guarantees it; the flag makes a tuning run
+    self-auditing at ~2x cost).
+    """
+    kernel = resolve_kernel(spec, in_hw=(x.shape[1], x.shape[2]))
+    plans = enumerate_plans(spec, x.shape, w.shape,
+                            max_candidates=max_candidates)
+    y_ref = None
+    if check_equal:
+        y_ref = dispatch_conv(spec, x, w, b, plan=DEFAULT_PLAN,
+                              interpret=interpret)
+        y_ref = jax.block_until_ready(y_ref)
+
+    rows, measured = [], {}
+
+    def run(plan: ConvPlan) -> float:
+        sig = _effective_signature(spec, kernel, x.shape, w.shape, plan) \
+            if kernel.startswith("pallas") else ("ref",)
+        if sig in measured:
+            return measured[sig]
+        if check_equal and y_ref is not None:
+            y = jax.block_until_ready(
+                dispatch_conv(spec, x, w, b, plan=plan, interpret=interpret))
+            assert np.array_equal(np.asarray(y_ref), np.asarray(y)), (
+                f"candidate plan not bit-equal to default: {plan}")
+        t = measure_plan(spec, x, w, b, plan, interpret=interpret,
+                         warmup=warmup, iters=iters)
+        measured[sig] = t.us
+        rows.append({"plan": plan.to_dict(), "us": t.us,
+                     "steady": t.steady,
+                     "default": plan == DEFAULT_PLAN})
+        if log is not None:
+            log(f"    {t.us:10.1f} us  {plan.to_dict()}")
+        return t.us
+
+    best, best_us = DEFAULT_PLAN, run(DEFAULT_PLAN)
+    for plan in plans[1:]:
+        us = run(plan)
+        if us < best_us:
+            best, best_us = plan, us
+
+    if hill_climb and kernel.startswith("pallas"):
+        improved = True
+        while improved:
+            improved = False
+            for nb in _neighbors(best, x.shape[0]):
+                us = run(nb)
+                if us < best_us:
+                    best, best_us = nb, us
+                    improved = True
+    return best, rows
+
+
+# ---------------------------------------------------------------------------
+# network walker (AlexNet)
+# ---------------------------------------------------------------------------
+def alexnet_layer_geometries(cfg, batch: int):
+    """(name, spec-with-route, in_shape, w_shape) per conv layer — the
+    same shape chain ``models.alexnet.features`` walks."""
+    from ..models import alexnet as ax
+    route = ax._route(cfg)
+    geoms, h, c_in = [], cfg.image_size, cfg.in_channels
+    for i, (spec, c_out) in enumerate(zip(ax.layer_specs(cfg),
+                                          cfg.conv_channels)):
+        spec = spec.with_route(route)
+        geoms.append((f"conv{i + 1}", spec, (batch, h, h, c_in),
+                      (spec.kernel, spec.kernel, c_in // spec.groups, c_out)))
+        h, c_in = spec.out_hw(h), c_out
+    return geoms
+
+
+def autotune_alexnet(cfg, batch: int, *, interpret: bool | None = None,
+                     warmup: int = 1, iters: int = 3,
+                     max_candidates: int | None = None,
+                     hill_climb: bool = False, check_equal: bool = False,
+                     cache: PlanCache | None = None, seed: int = 0,
+                     log=None):
+    """Tune every conv layer of an AlexNet config at one batch size.
+
+    Returns per-layer result rows (name, key, default/tuned us, winning
+    plan, candidate count) and writes each winner into ``cache`` when one
+    is passed (caller saves).  Layer inputs are synthetic — launch-plan
+    timing depends on geometry, not values.
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    key = jax.random.PRNGKey(seed)
+    results = []
+    for name, spec, in_shape, w_shape in alexnet_layer_geometries(cfg, batch):
+        kx, kw, key = jax.random.split(key, 3)
+        x = jax.random.normal(kx, in_shape, dtype)
+        w = (jax.random.normal(kw, w_shape, dtype)
+             * (w_shape[0] * w_shape[1] * w_shape[2]) ** -0.5)
+        b = jnp.zeros((w_shape[-1],), dtype)
+        if log is not None:
+            log(f"  {name}: in={in_shape} w={w_shape} "
+                f"kernel={resolve_kernel(spec, in_hw=in_shape[1])}")
+        best, rows = autotune_layer(
+            spec, x, w, b, interpret=interpret, warmup=warmup, iters=iters,
+            max_candidates=max_candidates, hill_climb=hill_climb,
+            check_equal=check_equal, log=log)
+        default_us = next(r["us"] for r in rows if r["default"])
+        tuned_us = min(r["us"] for r in rows)
+        k = plan_key(spec, in_shape, dtype=cfg.dtype, interpret=interpret)
+        stats = {"default_us": default_us, "tuned_us": tuned_us,
+                 "candidates": len(rows)}
+        if cache is not None:
+            cache.put(k, best, stats)
+        results.append({"layer": name, "key": k, "plan": best.to_dict(),
+                        **stats})
+    return results
+
+
+def load_alexnet_plans(cfg, batch: int, *, path=None,
+                       interpret: bool | None = None,
+                       any_batch: bool = True) -> dict:
+    """Tuned plans for an AlexNet config: ``{"conv1": ConvPlan, ...}`` for
+    every layer with a cache hit (missing layers simply run the default).
+    The lookup key must match what :func:`autotune_alexnet` stored —
+    geometry, dtype, and the *current* backend kind — so plans tuned on
+    one substrate never steer another."""
+    path = path or default_cache_path(getattr(cfg, "name", "alexnet"))
+    if not os.path.exists(path):
+        return {}
+    cache = PlanCache.load(path)
+    plans = {}
+    for name, spec, in_shape, _ in alexnet_layer_geometries(cfg, batch):
+        k = plan_key(spec, in_shape, dtype=cfg.dtype, interpret=interpret)
+        hit = cache.get(k, any_batch=any_batch)
+        if hit is not None:
+            plans[name] = hit
+    return plans

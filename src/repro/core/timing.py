@@ -1,0 +1,86 @@
+"""Measured wall-clock timing shared by the autotuner and the benchmarks.
+
+One timing discipline for every measured number in the repo (the paper's §4
+DSE picks its design point from *measured* candidates, so the measurement
+itself has to be trustworthy):
+
+* **warmup** calls first — the first call pays jit tracing + compilation
+  and must never land in a sample;
+* every sample brackets a full ``jax.block_until_ready`` — JAX dispatch is
+  async, so without the fence a "measurement" only times the enqueue;
+* **median-of-k** — the median is robust to the one-sided noise wall-clock
+  has (preemption, GC, frequency ramps all make samples *slower*, never
+  faster);
+* a **steady-state guard** — if the middle half of the samples still spreads
+  more than ``steady_rtol`` around the median, the run hasn't settled
+  (compilation cache warming, thermal ramp); collect another round of
+  samples, up to ``max_rounds``, and report whether steadiness was reached
+  so callers (the autotuner's candidate ranking, CI gates) can weigh the
+  number accordingly.
+
+``benchmarks/common.py::time_us`` and ``core/autotune.py`` both delegate
+here, so a benchmark row and an autotuner decision can never disagree about
+what "measured" means.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Timing:
+    """One measured call: median microseconds + the evidence behind it."""
+    us: float                   # median wall-time per call, microseconds
+    samples: tuple              # all collected samples (us), sorted
+    spread: float               # IQR / median of the final sample set
+    steady: bool                # spread <= steady_rtol within max_rounds
+    rounds: int                 # sample rounds taken (1 = no retry needed)
+
+    def __float__(self) -> float:
+        return self.us
+
+
+def _iqr_spread(sorted_us) -> float:
+    n = len(sorted_us)
+    med = sorted_us[n // 2]
+    if med <= 0:
+        return 0.0
+    q1, q3 = sorted_us[n // 4], sorted_us[(3 * n) // 4]
+    return (q3 - q1) / med
+
+
+def measure(fn, *args, warmup: int = 1, iters: int = 3,
+            steady_rtol: float = 0.25, max_rounds: int = 3) -> Timing:
+    """Measure ``fn(*args)`` wall-clock; returns a :class:`Timing` (us).
+
+    ``warmup`` calls run (and are fenced) before any sample is taken;
+    each of the ``iters`` samples brackets a ``jax.block_until_ready``.
+    If the samples' inter-quartile spread exceeds ``steady_rtol`` of the
+    median, another round of ``iters`` samples is collected (the median is
+    then taken over *all* samples) — at most ``max_rounds`` rounds.
+    """
+    import jax
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    samples: list[float] = []
+    rounds = 0
+    while True:
+        rounds += 1
+        for _ in range(max(iters, 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            samples.append((time.perf_counter() - t0) * 1e6)
+        samples.sort()
+        spread = _iqr_spread(samples)
+        if spread <= steady_rtol or rounds >= max_rounds:
+            return Timing(us=samples[len(samples) // 2],
+                          samples=tuple(samples), spread=spread,
+                          steady=spread <= steady_rtol, rounds=rounds)
+
+
+def measure_us(fn, *args, warmup: int = 1, iters: int = 3,
+               steady_rtol: float = 0.25, max_rounds: int = 3) -> float:
+    """Median wall-time per call in microseconds (:func:`measure`'s ``us``)."""
+    return measure(fn, *args, warmup=warmup, iters=iters,
+                   steady_rtol=steady_rtol, max_rounds=max_rounds).us

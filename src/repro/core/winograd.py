@@ -270,7 +270,8 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
                      fuse_pool: bool = False, pool_window: int = 3,
                      pool_stride: int = 2, groups: int = 1,
                      route: str = "pallas", batch_block: int = 8,
-                     weight_prefetch: bool = True) -> dict:
+                     weight_prefetch: bool = True,
+                     row_parallel: bool = False) -> dict:
     """Modeled HBM traffic for one conv *layer*, per resolved datapath.
 
     ``route`` is the resolved datapath (``nn.conv.resolve_kernel`` family):
@@ -315,8 +316,13 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
     while without it all ``weight_fetches`` synchronous copies stall the
     PEs
     (``weight_exposed_prefetch_bytes`` / ``weight_exposed_noprefetch_bytes``
-    report both; ``weight_hbm_exposed_bytes`` follows the flag).  Non-
-    Pallas routes have no in-kernel stream: everything is exposed.
+    report both; ``weight_hbm_exposed_bytes`` follows the flag).  With
+    ``row_parallel`` the multi-tile stream additionally restarts per *row
+    block* (freeing the row grid dimension to run parallel), so one warmup
+    tile is exposed per (batch-outer, row) block instead of per batch-outer
+    block — the extra exposed bytes the autotuner weighs against the
+    parallel row schedule.  Non-Pallas routes have no in-kernel stream:
+    everything is exposed.
 
     Keys ``layer_unfused_bytes``/``layer_fused_bytes`` compare fused vs
     unfused *on this route*; ``layer_unfused_direct_bytes`` is the lax
@@ -449,10 +455,12 @@ def conv2d_hbm_bytes(B: int, H: int, W: int, C: int, K: int, r: int,
         fetches = tiles * npr_f * Bo if tiles > 1 else 1
         weight_hbm = tile_bytes * fetches
         weight_nocache = tile_bytes * (tiles * npr_f if tiles > 1 else 1) * B
-        # double-buffered: only each filter-cache generation's warmup tile
-        # is exposed (the stream restarts per batch-outer block so the
-        # batch grid dim stays parallel); prefetch off exposes every fetch
-        exposed_pref = tile_bytes * (Bo if tiles > 1 else 1)
+        # double-buffered: only each stream generation's warmup tile is
+        # exposed — one generation per batch-outer block (batch grid dim
+        # stays parallel), times the row blocks when the row-parallel
+        # restart is on; prefetch off exposes every fetch
+        gens = Bo * (npr_f if row_parallel else 1)
+        exposed_pref = tile_bytes * (gens if tiles > 1 else 1)
         exposed_nopref = weight_hbm
     else:
         weight_hbm = weight_nocache = weight_bytes

@@ -185,7 +185,8 @@ def pack_weights(w, p: DirectPlan):
 
 def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
                    sem, *, stride: int, relu: bool, lrn, pool, step_in: int,
-                   in_rows: int, prefetch: bool, single: bool):
+                   in_rows: int, prefetch: bool, single: bool,
+                   row_parallel: bool):
     s = stride
     _, Rc, wo, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -195,7 +196,8 @@ def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     w = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single).astype(jnp.float32)
+                              single=single,
+                              row_parallel=row_parallel).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -238,14 +240,14 @@ def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
                                              "row_block", "pool_row_block",
                                              "c_block", "k_block",
                                              "batch_block", "weight_prefetch",
-                                             "interpret"))
+                                             "row_parallel", "interpret"))
 def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
                   padding: str = "SAME", relu: bool = False, groups: int = 1,
                   lrn=None, pool=None, row_block: int = 8,
                   pool_row_block: int | None = None,
                   c_block: int | None = None, k_block: int = 128,
                   batch_block: int = 8, weight_prefetch: bool = True,
-                  interpret: bool = True):
+                  row_parallel: bool = False, interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); any r/stride/groups, fused layer.
 
     Same contract as the Winograd kernel (``winograd.conv2d_winograd``):
@@ -268,6 +270,11 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
     extent while the epilogue scratch fits — AlexNet layers keep all of C
     resident and (grouped layers included, whose slab block index cycles
     per row block) stream the slab HBM->VMEM once per image.
+
+    ``row_parallel`` restarts the DMA weight stream per row block so the
+    row grid dimension runs ``parallel`` instead of ``arbitrary``
+    (bit-equal; one extra exposed warmup tile per row block) — the
+    row-parallel regime the autotuner searches.
     """
     p = plan(x.shape, w.shape, stride=stride, padding=padding, pool=pool,
              groups=groups, row_block=row_block,
@@ -292,10 +299,11 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
     bg = bias.reshape(g * p.nkb, p.Kb)
 
     single = p.weights.n_tiles == 1
+    row_par = bool(row_parallel) and not single
     kernel = functools.partial(_direct_kernel, stride=s, relu=relu, lrn=lrn,
                                pool=pool, step_in=p.step_in,
                                in_rows=p.in_rows, prefetch=weight_prefetch,
-                               single=single)
+                               single=single, row_parallel=row_par)
     out = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
@@ -320,7 +328,8 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
             *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
                                     single=single),
         ],
-        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
+        compiler_params=tpu_compiler_params(
+            *dma.grid_semantics(single, row_par)),
         interpret=interpret,
     )(xg, w_tiles, bg)
 

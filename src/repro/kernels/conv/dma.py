@@ -117,19 +117,23 @@ def resolve_slab(w, w_packed, plan: WeightPlan, pack_fn):
     return w_tiles
 
 
-def grid_semantics(single: bool):
+def grid_semantics(single: bool, row_parallel: bool = False):
     """Dimension semantics for the shared (batch, rows, k, c, images) conv
     grid under the DMA weight stream: the stream restarts per batch-outer
     block, so the batch dim is always parallel; the slot state spanning
-    the row/k/c walk keeps those dims arbitrary on multi-tile launches,
-    while a single-tile launch (no slot state at all) frees the row dim
-    too.  The image-slot dim stays arbitrary (filter-cache accumulators).
+    the row/k/c walk keeps those dims arbitrary on multi-tile launches —
+    unless ``row_parallel`` restarts the stream per *row block* too
+    (:func:`stream_positions`), in which case no DMA state crosses row
+    steps and the row dim is freed.  A single-tile launch (no slot state
+    at all) frees the row dim unconditionally.  The image-slot dim stays
+    arbitrary (filter-cache accumulators).
     """
-    return (PARALLEL, PARALLEL if single else ARBITRARY,
+    return (PARALLEL, PARALLEL if (single or row_parallel) else ARBITRARY,
             ARBITRARY, ARBITRARY, ARBITRARY)
 
 
-def stream_positions(ib, k, c, *, npr: int, nk: int, nc: int):
+def stream_positions(ib, k, c, *, npr: int, nk: int, nc: int,
+                     row_restart: bool = False):
     """Weight-stream coordinates of one grid step.
 
     The stream is self-contained *per batch-outer block*: the transition
@@ -138,15 +142,29 @@ def stream_positions(ib, k, c, *, npr: int, nk: int, nc: int):
     (each core's slice warms up its own stream; one exposed warmup tile
     per generation instead of per launch).
 
+    ``row_restart`` applies the same restart at every *row block*: the
+    transition counter (and with it the slot parity, which always starts
+    at slot 0 for a fresh generation — the parity bookkeeping that made
+    the global counter necessary when a generation spanned odd-length
+    row-block streams) becomes ``k * nc + c``, each row block warms up its
+    own tile-0 copy and drains fully by its last transition, so no DMA
+    slot state crosses row steps and the row grid dimension can be marked
+    ``parallel`` (:func:`grid_semantics`).  Cost: one exposed warmup tile
+    per (batch-outer, row) generation instead of per batch-outer block —
+    the trade the autotuner measures (``core/autotune.py``).
+
     Returns ``(trans, lin, lin_next, last)``: the in-generation transition
     counter (slot parity rides this, not ``lin`` — the per-row-block
-    stream length ``nk*nc`` may be odd), the current/next tile indices
-    (the stream wraps to tile 0 when the row block advances), and whether
-    this is the generation's final transition (no further copy to issue).
+    stream length ``nk*nc`` may be odd when the generation spans row
+    blocks), the current/next tile indices (the stream wraps to tile 0
+    when the row block advances), and whether this is the generation's
+    final transition (no further copy to issue).
     """
     lin = k * nc + c
-    trans = (ib * nk + k) * nc + c
     lin_next = jax.lax.rem(lin + 1, nk * nc)
+    if row_restart:
+        return lin, lin, lin_next, lin + 1 >= nk * nc
+    trans = (ib * nk + k) * nc + c
     last = trans + 1 >= npr * nk * nc
     return trans, lin, lin_next, last
 
@@ -192,7 +210,8 @@ def current_slot(trans):
     return jax.lax.rem(trans, 2)
 
 
-def fetch_weight_tile(w_tiles, wbuf, sem, *, prefetch: bool, single: bool):
+def fetch_weight_tile(w_tiles, wbuf, sem, *, prefetch: bool, single: bool,
+                      row_parallel: bool = False):
     """Drive the weight stream for one step of the shared
     ``(B/Bb, row blocks, g*K blocks, C blocks, Bb)`` conv grid and return
     the resident (raw-dtype) tile — the whole per-step bookkeeping both
@@ -207,6 +226,11 @@ def fetch_weight_tile(w_tiles, wbuf, sem, *, prefetch: bool, single: bool):
     an unchanged block index), and the grid keeps its parallel batch/row
     semantics because no DMA slot state spans steps.  ``wbuf``/``sem`` are
     unused in that mode.
+
+    ``row_parallel`` (static): restart the stream per row block
+    (``stream_positions(row_restart=True)``) so the row grid dimension can
+    run ``parallel`` — same tiles, same slots, bit-equal output, one extra
+    exposed warmup tile per row block.
     """
     if single:
         return w_tiles[0]
@@ -214,7 +238,7 @@ def fetch_weight_tile(w_tiles, wbuf, sem, *, prefetch: bool, single: bool):
     trans, lin, lin_next, last = stream_positions(
         pl.program_id(1), pl.program_id(2), pl.program_id(3),
         npr=pl.num_programs(1), nk=pl.num_programs(2),
-        nc=pl.num_programs(3))
+        nc=pl.num_programs(3), row_restart=row_parallel)
 
     @pl.when(pl.program_id(4) == 0)
     def _fetch():

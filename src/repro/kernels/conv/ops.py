@@ -77,8 +77,9 @@ def conv1d_depthwise_causal(x, w, b=None, *, pallas: bool = True,
 # ---------------------------------------------------------------------------
 def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
            relu: bool = False, groups: int = 1, lrn=None, pool=None,
+           c_block: int | None = None, pool_row_block: int | None = None,
            k_block: int = 128, batch_block: int = 8,
-           weight_prefetch: bool = True,
+           weight_prefetch: bool = True, row_parallel: bool = False,
            pallas: bool = True, interpret: bool | None = None):
     """Fused stride-1 Winograd conv layer: bias, ReLU, groups, LRN, pool.
 
@@ -95,9 +96,12 @@ def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
     if pallas:
         return _k.conv2d_winograd(x, w, b, w_packed, m=m, padding=padding,
                                   relu=relu, groups=groups, lrn=lrn,
-                                  pool=pool, k_block=k_block,
+                                  pool=pool, c_block=c_block,
+                                  pool_row_block=pool_row_block,
+                                  k_block=k_block,
                                   batch_block=batch_block,
                                   weight_prefetch=weight_prefetch,
+                                  row_parallel=row_parallel,
                                   interpret=_interp(interpret))
     return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
                               groups=groups, lrn=lrn, pool=pool)
@@ -105,9 +109,11 @@ def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
 
 def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
                   padding: str = "SAME", relu: bool = False, groups: int = 1,
-                  lrn=None, pool=None, k_block: int = 128,
+                  lrn=None, pool=None, c_block: int | None = None,
+                  pool_row_block: int | None = None, k_block: int = 128,
                   batch_block: int = 8,
-                  weight_prefetch: bool = True, pallas: bool = True,
+                  weight_prefetch: bool = True, row_parallel: bool = False,
+                  pallas: bool = True,
                   interpret: bool | None = None):
     """Fused direct conv layer for any kernel/stride geometry.
 
@@ -119,9 +125,12 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
     if pallas:
         return _d.conv2d_direct(x, w, b, w_packed, stride=stride,
                                 padding=padding, relu=relu, groups=groups,
-                                lrn=lrn, pool=pool, k_block=k_block,
+                                lrn=lrn, pool=pool, c_block=c_block,
+                                pool_row_block=pool_row_block,
+                                k_block=k_block,
                                 batch_block=batch_block,
                                 weight_prefetch=weight_prefetch,
+                                row_parallel=row_parallel,
                                 interpret=_interp(interpret))
     return conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
                       relu=relu, lrn=lrn, pool=pool)

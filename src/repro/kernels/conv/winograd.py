@@ -291,7 +291,8 @@ def _tiles_from_rows(rows, n: int, mm: int, nr: int, nw: int):
 
 
 def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
-                   wbuf, sem, *, relu: bool, prefetch: bool, single: bool):
+                   wbuf, sem, *, relu: bool, prefetch: bool, single: bool,
+                   row_parallel: bool):
     mm, n = at_ref.shape
     _, _, _, Rb, tw, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -299,7 +300,8 @@ def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single).astype(jnp.float32)
+                              single=single,
+                              row_parallel=row_parallel).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -327,7 +329,8 @@ def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
 
 def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
                          acc_ref, y_ref, wbuf, sem, *, relu: bool, lrn,
-                         pool, row_step: int, prefetch: bool, single: bool):
+                         pool, row_step: int, prefetch: bool, single: bool,
+                         row_parallel: bool):
     """Layer-fused variant: conv + bias + ReLU + LRN + max-pool in VMEM.
 
     The k grid dimension spans *all* g*K output channels (groups included);
@@ -346,7 +349,8 @@ def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single).astype(jnp.float32)
+                              single=single,
+                              row_parallel=row_parallel).astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -380,7 +384,7 @@ def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
 
 
 def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
-                       lrn, pool, weight_prefetch, interpret):
+                       lrn, pool, weight_prefetch, row_parallel, interpret):
     """pallas_call setup for the layer-fused kernel (lrn and/or pool set).
 
     Grid (B/Bb, pooled-row blocks, g*K blocks, C blocks, Bb): groups move
@@ -411,9 +415,11 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
     bg = bias.reshape(g * p.nkb, p.Kb)
 
     single = p.weights.n_tiles == 1
+    row_par = bool(row_parallel) and not single
     kernel = functools.partial(_conv2d_fused_kernel, relu=relu, lrn=lrn,
                                pool=pool, row_step=p.row_step,
-                               prefetch=weight_prefetch, single=single)
+                               prefetch=weight_prefetch, single=single,
+                               row_parallel=row_par)
     out = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
@@ -440,7 +446,8 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
             *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
                                     single=single),
         ],
-        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
+        compiler_params=tpu_compiler_params(
+            *dma.grid_semantics(single, row_par)),
         interpret=interpret,
     )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
@@ -454,14 +461,15 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
                                              "lrn", "pool", "row_block",
                                              "c_block", "k_block",
                                              "pool_row_block", "batch_block",
-                                             "weight_prefetch", "interpret"))
+                                             "weight_prefetch", "row_parallel",
+                                             "interpret"))
 def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
                     padding: str = "SAME", relu: bool = False,
                     groups: int = 1, lrn=None, pool=None, row_block: int = 8,
                     pool_row_block: int | None = None,
                     c_block: int | None = None, k_block: int = 128,
                     batch_block: int = 8, weight_prefetch: bool = True,
-                    interpret: bool = True):
+                    row_parallel: bool = False, interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
 
     Fused pipeline: raw (halo-padded) feature map slabs stream HBM->VMEM via
@@ -504,6 +512,7 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
         return _conv2d_fused_call(x, w, b, w_packed, t=t, p=p, relu=relu,
                                   lrn=lrn, pool=pool,
                                   weight_prefetch=weight_prefetch,
+                                  row_parallel=row_parallel,
                                   interpret=interpret)
     B, H, W, _ = x.shape
     g = p.g
@@ -522,8 +531,10 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
     bg = bg.reshape(g * p.nkb, p.Kb)
 
     single = p.weights.n_tiles == 1
+    row_par = bool(row_parallel) and not single
     kernel = functools.partial(_conv2d_kernel, relu=relu,
-                               prefetch=weight_prefetch, single=single)
+                               prefetch=weight_prefetch, single=single,
+                               row_parallel=row_par)
     out = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
@@ -549,7 +560,8 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
             *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
                                     single=single),
         ],
-        compiler_params=tpu_compiler_params(*dma.grid_semantics(single)),
+        compiler_params=tpu_compiler_params(
+            *dma.grid_semantics(single, row_par)),
         interpret=interpret,
     )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))

@@ -140,7 +140,17 @@ def _stage_fc6(params, cfg: AlexNetConfig):
     return quantize_weights(w, block=fc_block(w.shape[0]))
 
 
-def features(params, cfg: AlexNetConfig, images, *, stager=None):
+def load_tuned_plans(cfg: AlexNetConfig, batch: int, *, path=None):
+    """Tuned per-layer :class:`~repro.nn.conv.ConvPlan`s from the measured
+    autotuner's persisted cache (``results/plans/``), keyed to this
+    config's layer geometries at ``batch`` on the *current* backend —
+    ``{}`` when nothing applicable is cached (layers run the defaults).
+    See ``core/autotune.py`` / ``scripts/autotune_alexnet.py``."""
+    from ..core.autotune import load_alexnet_plans
+    return load_alexnet_plans(cfg, batch, path=path)
+
+
+def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
     """images (B, H, W, 3) -> flattened conv features (B, d).
 
     One ``dispatch_conv`` per layer; the LRN/pool epilogues live in the
@@ -157,6 +167,14 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None):
     also reuse the packed slabs *across* forward passes — the host-level
     filter cache the serving path wants.  Values are identical staged or
     not; staging only moves work earlier.
+
+    ``plans`` maps layer names (``"conv1"``..) to tuned
+    :class:`~repro.nn.conv.ConvPlan`s (see :func:`load_tuned_plans`); a
+    layer with a plan launches with its knobs — including the plan's
+    ``weight_prefetch`` choice, which overrides ``cfg.weight_prefetch``
+    for that layer — and its staged slab is packed for the same plan, so
+    staging and dispatch always agree.  All plan knobs are bit-equal
+    re-blockings; outputs are identical tuned or not.
     """
     x = images.astype(jnp.dtype(cfg.dtype))
     route = _route(cfg)
@@ -170,17 +188,21 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None):
         h, c_in = spec.out_hw(h), c_out
 
     staged = {}                     # per-forward handoff (tracer-safe)
+    plans = plans or {}
 
     def stage(i):
-        # the slab depends on the layer's input shape (batch included) and
-        # the quantization mode, so the persistent cache key carries both —
-        # a stager serving mixed batch sizes / configs keeps one slab per
-        # (layer, shape, bfp) and can never serve the wrong quantization
-        key = f"conv{i+1}:{shapes[i]}:bfp{int(cfg.conv_bfp)}"
+        # the slab depends on the layer's input shape (batch included), the
+        # quantization mode, and the launch plan it's blocked for, so the
+        # persistent cache key carries all three — a stager serving mixed
+        # batch sizes / configs / plans keeps one slab per combination and
+        # can never serve the wrong quantization or blocking
+        plan = plans.get(f"conv{i+1}")
+        key = (f"conv{i+1}:{shapes[i]}:bfp{int(cfg.conv_bfp)}"
+               + (f":plan{plan.to_dict()}" if plan is not None else ""))
         if key not in staged:
             staged[key] = stager.stage(
                 key, pack_conv_weights, specs[i], shapes[i],
-                params[f"conv{i+1}"]["w"], bfp_pack=cfg.conv_bfp)
+                params[f"conv{i+1}"]["w"], bfp_pack=cfg.conv_bfp, plan=plan)
         return staged[key]
 
     def stage_fc():
@@ -192,9 +214,13 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None):
         p = params[f"conv{i+1}"]
         nxt = ((lambda i=i: stage(i + 1)) if i + 1 < len(specs)
                else (stage_fc if cfg.fc_bfp else None))
+        plan = plans.get(f"conv{i+1}")
+        # a tuned plan governs all launch knobs (its weight_prefetch was
+        # part of the measured winner); untuned layers keep the config's
+        kw = ({"plan": plan} if plan is not None
+              else {"weight_prefetch": cfg.weight_prefetch})
         x = dispatch_conv(spec, x, p["w"], p["b"], w_packed=stage(i),
-                          weight_prefetch=cfg.weight_prefetch,
-                          prefetch_next=nxt)
+                          prefetch_next=nxt, **kw)
     return x.reshape(x.shape[0], -1)
 
 
@@ -222,12 +248,14 @@ def classifier(params, cfg: AlexNetConfig, feats, *, stager=None):
     return x
 
 
-def apply(params, cfg: AlexNetConfig, images, *, stager=None):
+def apply(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
     """Full forward; one stager spans conv + FC so conv5's hook can stage
-    the quantized fc6 stream (§3.5 prefetch across the conv/FC seam)."""
+    the quantized fc6 stream (§3.5 prefetch across the conv/FC seam).
+    ``plans`` carries tuned per-layer launch plans into :func:`features`."""
     stager = WeightStager() if stager is None else stager
-    return classifier(params, cfg, features(params, cfg, images,
-                                            stager=stager), stager=stager)
+    return classifier(params, cfg,
+                      features(params, cfg, images, stager=stager,
+                               plans=plans), stager=stager)
 
 
 def loss_fn(params, cfg: AlexNetConfig, batch):

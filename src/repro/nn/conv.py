@@ -66,6 +66,76 @@ ROUTES = ("auto", "direct", "winograd", "pallas")
 # fully resolved datapaths reported by resolve_kernel
 KERNELS = ("direct", "winograd", "pallas-winograd", "pallas-direct")
 
+# sentinel distinguishing "knob not passed" from an explicit None (= auto)
+UNSET = object()
+
+
+@dataclass(frozen=True)
+class ConvPlan:
+    """A per-layer launch plan over the real kernel knobs — what the
+    measured autotuner (``core/autotune.py``, the paper's §4 DSE run live)
+    searches, persists, and feeds back into :func:`dispatch_conv`.
+
+    The defaults ARE the repo's default launch configuration: a
+    ``ConvPlan()`` reproduces exactly what ``dispatch_conv`` runs when no
+    knob is passed, so the default plan is always a member of any
+    candidate set and "tuned" can never regress it.
+
+    ``route`` optionally overrides the spec's route preference (a
+    :data:`ROUTES` member); ``None`` keeps the spec's own routing.  All
+    other fields mirror the kernel knobs: ``c_block``/``pool_row_block``
+    ``None`` means auto-size against the VMEM budget
+    (``auto_c_block``/``auto_pool_rows``), ``row_parallel`` restarts the
+    DMA weight stream per row block so the row grid dimension runs
+    ``parallel`` (bit-equal; one extra exposed warmup tile per row block).
+    """
+    batch_block: int = 8
+    k_block: int = 128
+    c_block: int | None = None
+    pool_row_block: int | None = None
+    weight_prefetch: bool = True
+    row_parallel: bool = False
+    route: str | None = None
+
+    def __post_init__(self):
+        assert self.route is None or self.route in ROUTES, self.route
+        assert self.batch_block >= 1 and self.k_block >= 1
+
+    def to_dict(self) -> dict:
+        return {"batch_block": self.batch_block, "k_block": self.k_block,
+                "c_block": self.c_block,
+                "pool_row_block": self.pool_row_block,
+                "weight_prefetch": self.weight_prefetch,
+                "row_parallel": self.row_parallel, "route": self.route}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ConvPlan":
+        return cls(**{k: d[k] for k in cls.__dataclass_fields__ if k in d})
+
+
+DEFAULT_PLAN = ConvPlan()
+
+
+def plan_knobs(plan: "ConvPlan | None" = None, *, batch_block=UNSET,
+               k_block=UNSET, c_block=UNSET, pool_row_block=UNSET,
+               weight_prefetch=UNSET, row_parallel=UNSET) -> "ConvPlan":
+    """The effective launch knobs for one dispatch: explicit kwarg beats
+    plan beats built-in default.  ``UNSET`` marks "not passed" so an
+    explicit ``c_block=None`` (force auto-sizing) still overrides a tuned
+    plan's block choice."""
+    base = plan if plan is not None else DEFAULT_PLAN
+    return replace(
+        base,
+        batch_block=base.batch_block if batch_block is UNSET else batch_block,
+        k_block=base.k_block if k_block is UNSET else k_block,
+        c_block=base.c_block if c_block is UNSET else c_block,
+        pool_row_block=(base.pool_row_block if pool_row_block is UNSET
+                        else pool_row_block),
+        weight_prefetch=(base.weight_prefetch if weight_prefetch is UNSET
+                         else weight_prefetch),
+        row_parallel=(base.row_parallel if row_parallel is UNSET
+                      else row_parallel))
+
 # resolved datapath -> (conv2d_hbm_bytes route, uses winograd transform):
 # the one place benchmarks/tests translate a datapath into model terms
 MODEL_ROUTES = {
@@ -182,20 +252,25 @@ def _spec_fusion(spec: ConvSpec):
 
 
 def _pallas_weight_plan(spec: ConvSpec, kernel: str, in_shape, w_shape, *,
-                        lrn, pool, k_block: int, batch_block: int):
+                        lrn, pool, knobs: ConvPlan):
     """The weight-blocking plan the resolved Pallas kernel will use for
-    this (spec, input shape, fusion args) — the one source of truth for
-    slab shapes.  ``lrn``/``pool`` are the values the kernel call actually
-    receives (a deferred bias strips them even when the spec fuses)."""
+    this (spec, input shape, fusion args, launch knobs) — the one source
+    of truth for slab shapes.  ``lrn``/``pool`` are the values the kernel
+    call actually receives (a deferred bias strips them even when the spec
+    fuses)."""
     if kernel == "pallas-winograd":
         return _winograd_k.plan(in_shape, w_shape, m=spec.winograd_m,
                                 padding=spec.padding, groups=spec.groups,
-                                lrn=lrn, pool=pool, k_block=k_block,
-                                batch_block=batch_block)
+                                lrn=lrn, pool=pool, c_block=knobs.c_block,
+                                pool_row_block=knobs.pool_row_block,
+                                k_block=knobs.k_block,
+                                batch_block=knobs.batch_block)
     return _direct_k.plan(in_shape, w_shape, stride=spec.stride,
                           padding=spec.padding, pool=pool,
-                          groups=spec.groups, k_block=k_block,
-                          batch_block=batch_block)
+                          groups=spec.groups, c_block=knobs.c_block,
+                          pool_row_block=knobs.pool_row_block,
+                          k_block=knobs.k_block,
+                          batch_block=knobs.batch_block)
 
 
 def _pack_for_plan(kernel: str, w, p, bfp_pack: bool):
@@ -213,8 +288,8 @@ def _pack_for_plan(kernel: str, w, p, bfp_pack: bool):
 
 
 def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
-                      k_block: int = 128,
-                      batch_block: int = 8) -> PackedConvWeights:
+                      plan: ConvPlan | None = None, k_block=UNSET,
+                      batch_block=UNSET) -> PackedConvWeights:
     """Build the weight slab for one conv layer ahead of its input.
 
     A pure function of the layer spec, the input *shape* (B, H, W, C), and
@@ -235,13 +310,19 @@ def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
     Pallas kernels (as in the DLA's cache), raw filters elsewhere — so a
     ``conv_bfp`` model's routes agree only within the shared-exponent
     int8 error, not bit-wise across datapaths.
+
+    ``plan`` is an optional tuned :class:`ConvPlan` — the slab is blocked
+    for its knobs, so staging and dispatch agree when both receive the
+    same plan.  Explicit ``k_block``/``batch_block`` kwargs override it.
     """
+    knobs = plan_knobs(plan, k_block=k_block, batch_block=batch_block)
+    if plan is not None and plan.route is not None:
+        spec = spec.with_route(plan.route)
     kernel = resolve_kernel(spec, in_hw=(in_shape[1], in_shape[2]))
     if kernel.startswith("pallas"):
         lrn_p, pool = _spec_fusion(spec)
         p = _pallas_weight_plan(spec, kernel, tuple(in_shape), w.shape,
-                                lrn=lrn_p, pool=pool, k_block=k_block,
-                                batch_block=batch_block)
+                                lrn=lrn_p, pool=pool, knobs=knobs)
         return PackedConvWeights(kernel=kernel,
                                  data=_pack_for_plan(kernel, w, p, bfp_pack),
                                  bfp=bfp_pack)
@@ -252,8 +333,10 @@ def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
 
 def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
                   w_packed: PackedConvWeights | None = None,
-                  weight_prefetch: bool = True, k_block: int = 128,
-                  batch_block: int = 8, prefetch_next=None):
+                  plan: ConvPlan | None = None, weight_prefetch=UNSET,
+                  k_block=UNSET, batch_block=UNSET, c_block=UNSET,
+                  pool_row_block=UNSET, row_parallel=UNSET,
+                  prefetch_next=None):
     """Run one conv layer per its spec.  x (B,H,W,C), w (k,k,C//g,K), b (K,).
 
     Grouped convs are batched (``feature_group_count`` on the direct route,
@@ -273,8 +356,20 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
     zero-arg callable invoked right after the conv is issued — JAX
     dispatch is async, so work it enqueues (packing layer N+1's slab)
     overlaps this layer's compute.
+
+    ``plan`` is an optional tuned :class:`ConvPlan` (from the measured
+    autotuner): its knobs replace the built-in launch defaults, and its
+    ``route`` (when set) overrides the spec's route preference.  Explicit
+    knob kwargs still win over the plan (see :func:`plan_knobs`), so call
+    sites can pin single knobs on top of a tuned baseline.
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
+    knobs = plan_knobs(plan, batch_block=batch_block, k_block=k_block,
+                       c_block=c_block, pool_row_block=pool_row_block,
+                       weight_prefetch=weight_prefetch,
+                       row_parallel=row_parallel)
+    if plan is not None and plan.route is not None:
+        spec = spec.with_route(plan.route)
     # Unfused bias is an epilogue *between* conv and ReLU
     # (conv -> +b -> relu -> lrn -> pool), so every later stage must be
     # deferred along with it.
@@ -289,8 +384,7 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
     slab = None
     if w_packed is not None and kernel.startswith("pallas"):
         p = _pallas_weight_plan(spec, kernel, x.shape, w.shape,
-                                lrn=lrn_p, pool=pool, k_block=k_block,
-                                batch_block=batch_block)
+                                lrn=lrn_p, pool=pool, knobs=knobs)
         want = (p.weights.n_tiles, *p.weights.tile_shape)
         if (w_packed.kernel == kernel and w_packed.data is not None
                 and w_packed.data.shape == want):
@@ -310,16 +404,23 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
     elif kernel == "pallas-winograd":
         y = pallas_conv2d(x, w, bias, slab, m=spec.winograd_m,
                           padding=spec.padding, relu=relu, groups=spec.groups,
-                          lrn=lrn_p, pool=pool, k_block=k_block,
-                          batch_block=batch_block,
-                          weight_prefetch=weight_prefetch,
+                          lrn=lrn_p, pool=pool, c_block=knobs.c_block,
+                          pool_row_block=knobs.pool_row_block,
+                          k_block=knobs.k_block,
+                          batch_block=knobs.batch_block,
+                          weight_prefetch=knobs.weight_prefetch,
+                          row_parallel=knobs.row_parallel,
                           pallas=True, interpret=interpret)
     elif kernel == "pallas-direct":
         y = pallas_conv2d_direct(x, w, bias, slab, stride=spec.stride,
                                  padding=spec.padding, relu=relu,
                                  groups=spec.groups, lrn=lrn_p, pool=pool,
-                                 k_block=k_block, batch_block=batch_block,
-                                 weight_prefetch=weight_prefetch,
+                                 c_block=knobs.c_block,
+                                 pool_row_block=knobs.pool_row_block,
+                                 k_block=knobs.k_block,
+                                 batch_block=knobs.batch_block,
+                                 weight_prefetch=knobs.weight_prefetch,
+                                 row_parallel=knobs.row_parallel,
                                  pallas=True, interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,

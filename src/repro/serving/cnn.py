@@ -99,8 +99,18 @@ class CnnEngine:
             params = jax.device_put(params, replicated_sharding(self.mesh))
         self.params = params
 
-        mod, ccfg = self.mod, cfg
-        self._apply = jax.jit(lambda p, x: mod.apply(p, ccfg, x))
+        # tuned launch plans from the measured autotuner's persisted cache
+        # (results/plans/) — loaded at build, keyed to this config's layer
+        # geometries on the current backend; {} runs the defaults.  Plans
+        # are bit-equal re-blockings, so serving outputs are unchanged.
+        self.plans: Dict[str, object] = {}
+        if hasattr(self.mod, "load_tuned_plans"):
+            self.plans = self.mod.load_tuned_plans(cfg, scfg.max_batch)
+
+        mod, ccfg, plans = self.mod, cfg, self.plans
+        self._apply = jax.jit(
+            (lambda p, x: mod.apply(p, ccfg, x, plans=plans)) if plans
+            else (lambda p, x: mod.apply(p, ccfg, x)))
         self._staged: Deque[_Group] = deque()
         self._compute: Deque[_Group] = deque()
         self.latency = LatencyTracker()
@@ -213,4 +223,5 @@ class CnnEngine:
             "bucket_counts": dict(sorted(self.bucket_counts.items())),
             "imgs_per_s": self.imgs_per_s,
             "latency_ms": self.latency.percentiles_ms(),
+            "tuned_layers": sorted(self.plans),
         }

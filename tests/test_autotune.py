@@ -1,0 +1,265 @@
+"""Measured autotuner: plan plumbing, candidate validity, cache persistence.
+
+The autotuner's contract (``core/autotune.py``) rests on three claims these
+tests pin:
+
+* every candidate plan the enumerator emits runs **bit-equal** to the
+  default plan — the knobs only re-block the launch, never the f32
+  accumulation order — across all five AlexNet layer geometries (both the
+  Winograd-domain and the strided direct kernel);
+* ``dispatch_conv(plan=...)`` obeys the documented precedence (explicit
+  knob kwarg beats plan beats built-in default) and a slab packed for a
+  plan is accepted by a dispatch running the same plan;
+* the JSON plan cache round-trips exactly (key stability across sessions,
+  any-batch fallback), and a fast ``autotune_layer`` run persists a winner
+  that the model-side loader finds again.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import autotune as at
+from repro.core.autotune import PlanCache, enumerate_plans, plan_key, key_str
+from repro.models import alexnet
+from repro.nn.conv import (ConvPlan, ConvSpec, DEFAULT_PLAN, dispatch_conv,
+                           pack_conv_weights, plan_knobs, resolve_kernel)
+
+# the five AlexNet layer geometries (reduced channels; conv1/conv2 resolve
+# to the strided direct kernel, conv3-5 to the Winograd-domain kernel)
+ALEXNET_LAYERS = [
+    ("conv1", dict(kernel=11, stride=4, padding="VALID", relu=True,
+                   fuse_lrn=True, fuse_pool=True), 35, 3, 16),
+    ("conv2", dict(kernel=5, groups=2, relu=True, fuse_lrn=True,
+                   fuse_pool=True), 13, 16, 32),
+    ("conv3", dict(kernel=3, relu=True), 13, 32, 48),
+    ("conv4", dict(kernel=3, groups=2, relu=True), 13, 48, 48),
+    ("conv5", dict(kernel=3, groups=2, relu=True, fuse_pool=True),
+     13, 48, 32),
+]
+
+
+def _arrays(kw, H, c_in, c_out, seed=0, B=3):
+    rng = np.random.default_rng(seed)
+    k = kw["kernel"]
+    x = jnp.asarray(rng.standard_normal((B, H, H, c_in)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal(
+        (k, k, c_in // kw.get("groups", 1), c_out)) * k ** -1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((c_out,)), jnp.float32)
+    return x, w, b
+
+
+# ---------------------------------------------------------------------------
+# plan + key + cache round-trips
+# ---------------------------------------------------------------------------
+def test_convplan_dict_roundtrip():
+    p = ConvPlan(batch_block=2, k_block=64, pool_row_block=2,
+                 weight_prefetch=False, row_parallel=True)
+    assert ConvPlan.from_dict(p.to_dict()) == p
+    # unknown keys are ignored (forward-compat with newer cache files)
+    assert ConvPlan.from_dict({**p.to_dict(), "future_knob": 1}) == p
+    # defaults really are the built-in launch configuration
+    assert ConvPlan() == DEFAULT_PLAN
+
+
+def test_plan_knobs_precedence():
+    base = ConvPlan(batch_block=2, k_block=64, weight_prefetch=False)
+    # plan beats default
+    assert plan_knobs(base).batch_block == 2
+    # explicit kwarg beats plan
+    k = plan_knobs(base, batch_block=4)
+    assert k.batch_block == 4 and k.k_block == 64
+    assert k.weight_prefetch is False
+    # explicit None (= auto) still overrides a plan's concrete block
+    k = plan_knobs(ConvPlan(pool_row_block=2), pool_row_block=None)
+    assert k.pool_row_block is None
+    # no plan: the defaults
+    assert plan_knobs(None) == DEFAULT_PLAN
+
+
+def test_plan_key_stability():
+    spec = ConvSpec(kernel=3, relu=True, route="pallas")
+    k1 = plan_key(spec, (2, 13, 13, 32), interpret=True)
+    k2 = plan_key(ConvSpec(kernel=3, relu=True, route="pallas"),
+                  (2, 13, 13, 32), interpret=True)
+    assert key_str(k1) == key_str(k2)
+    # the string form is insensitive to dict field order (JSON sort_keys)
+    assert key_str(dict(reversed(list(k1.items())))) == key_str(k1)
+    # geometry, fusion flags, dtype and backend all discriminate
+    assert key_str(plan_key(spec, (4, 13, 13, 32), interpret=True)) \
+        != key_str(k1)
+    assert key_str(plan_key(dataclasses.replace(spec, fuse_pool=True),
+                            (2, 13, 13, 32), interpret=True)) != key_str(k1)
+    assert key_str(plan_key(spec, (2, 13, 13, 32), dtype="bfloat16",
+                            interpret=True)) != key_str(k1)
+    assert key_str(plan_key(spec, (2, 13, 13, 32), interpret=False)) \
+        != key_str(k1)
+
+
+def test_plan_cache_roundtrip(tmp_path):
+    spec = ConvSpec(kernel=3, relu=True, route="pallas")
+    key = plan_key(spec, (2, 13, 13, 32), interpret=True)
+    plan = ConvPlan(batch_block=2, k_block=64, weight_prefetch=False)
+    cache = PlanCache()
+    cache.put(key, plan, {"default_us": 10.0, "tuned_us": 7.0})
+    path = tmp_path / "plans.json"
+    cache.save(path)
+
+    loaded = PlanCache.load(path)
+    assert loaded.get(key) == plan
+    assert loaded.stats(key)["tuned_us"] == 7.0
+    # any-batch fallback: same geometry at a different batch still hits
+    other = dict(key, batch=16)
+    assert loaded.get(other) is None
+    assert loaded.get(other, any_batch=True) == plan
+    # but a different geometry never does
+    assert loaded.get(dict(key, h=27, w=27), any_batch=True) is None
+    # the file is plain JSON a human can audit
+    data = json.loads(path.read_text())
+    assert data["version"] == 1 and len(data["entries"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# candidate enumeration: validity + bit-equality
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", ALEXNET_LAYERS)
+def test_enumerated_plans_bit_equal_to_default(name, kw, H, c_in, c_out):
+    """Every plan the enumerator emits must produce the exact bits of the
+    default plan — the autotuner's license to pick any of them on speed
+    alone."""
+    spec = ConvSpec(route="pallas", **kw)
+    x, w, b = _arrays(kw, H, c_in, c_out, seed=H + c_in)
+    plans = enumerate_plans(spec, x.shape, w.shape)
+    assert plans[0] == DEFAULT_PLAN
+    assert len(plans) == len(set(plans))        # no duplicate ConvPlans
+    y0 = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    for plan in plans[1:]:
+        y = np.asarray(dispatch_conv(spec, x, w, b, plan=plan,
+                                     interpret=True))
+        assert np.array_equal(y0, y), (name, plan)
+
+
+def test_enumeration_non_pallas_is_default_only():
+    spec = ConvSpec(kernel=3, relu=True, route="direct")
+    assert enumerate_plans(spec, (2, 13, 13, 8), (3, 3, 8, 8)) \
+        == [DEFAULT_PLAN]
+
+
+def test_enumeration_dedupes_clamped_knobs():
+    """batch_block values above B and k_blocks that widen to K collapse to
+    one effective launch each — the sweep never measures them twice."""
+    spec = ConvSpec(kernel=3, relu=True, route="pallas")
+    small = enumerate_plans(spec, (1, 13, 13, 8), (3, 3, 8, 8))
+    # B=1: every batch_block clamps to 1; K=8 < all k_blocks: all widen
+    assert all(p.batch_block == 1 or p == DEFAULT_PLAN for p in small)
+    assert len(small) <= 1 + 4      # default + prefetch/row_parallel combos
+
+
+# ---------------------------------------------------------------------------
+# dispatch/pack plan plumbing
+# ---------------------------------------------------------------------------
+def test_packed_slab_matches_planned_dispatch():
+    """A slab packed for a tuned plan must be shape-accepted by a dispatch
+    running the same plan (and still produce the default bits)."""
+    kw = dict(kernel=5, groups=2, relu=True, fuse_lrn=True, fuse_pool=True)
+    spec = ConvSpec(route="pallas", **kw)
+    x, w, b = _arrays(kw, 13, 16, 32)
+    plan = ConvPlan(batch_block=2, k_block=8)
+    wp = pack_conv_weights(spec, x.shape, w, plan=plan)
+    y0 = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    y = np.asarray(dispatch_conv(spec, x, w, b, w_packed=wp, plan=plan,
+                                 interpret=True))
+    assert np.array_equal(y0, y)
+
+
+def test_pack_explicit_kwarg_overrides_plan():
+    """k_block precedence is observable in the slab shape: an explicit
+    kwarg must beat the plan's value."""
+    spec = ConvSpec(kernel=3, relu=True, route="pallas")
+    x, w, _ = _arrays(dict(kernel=3), 13, 32, 48)
+    slab_plan = pack_conv_weights(spec, x.shape, w,
+                                  plan=ConvPlan(k_block=8)).data
+    slab_override = pack_conv_weights(spec, x.shape, w,
+                                      plan=ConvPlan(k_block=8),
+                                      k_block=16).data
+    slab_16 = pack_conv_weights(spec, x.shape, w,
+                                plan=ConvPlan(k_block=16)).data
+    assert slab_plan.shape != slab_override.shape
+    assert slab_override.shape == slab_16.shape
+
+
+@pytest.mark.parametrize("name,kw,H,c_in,c_out", [ALEXNET_LAYERS[1],
+                                                  ALEXNET_LAYERS[2]])
+def test_row_parallel_bit_parity_multi_tile(name, kw, H, c_in, c_out):
+    """The per-row-block stream restart (row grid dimension freed to run
+    parallel) is bit-equal on a forced multi-tile stream, prefetch on and
+    off, on both kernels."""
+    spec = ConvSpec(route="pallas", **kw)
+    x, w, b = _arrays(kw, H, c_in, c_out, seed=7)
+    y0 = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    for pf in (True, False):
+        plan = ConvPlan(batch_block=2, k_block=max(c_out // 4, 1),
+                        weight_prefetch=pf, row_parallel=True)
+        y = np.asarray(dispatch_conv(spec, x, w, b, plan=plan,
+                                     interpret=True))
+        assert np.array_equal(y0, y), (name, pf)
+
+
+def test_plan_route_override():
+    """A plan's route field re-routes the spec before kernel resolution."""
+    spec = ConvSpec(kernel=3, relu=True, route="pallas")
+    x, w, b = _arrays(dict(kernel=3), 9, 8, 8)
+    y_pal = np.asarray(dispatch_conv(spec, x, w, b, interpret=True))
+    y_lax = np.asarray(dispatch_conv(spec, x, w, b, interpret=True,
+                                     plan=ConvPlan(route="direct")))
+    ref = np.asarray(dispatch_conv(spec.with_route("direct"), x, w, b))
+    assert np.array_equal(y_lax, ref)
+    np.testing.assert_allclose(y_pal, y_lax, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fast measured runs + persistence end-to-end
+# ---------------------------------------------------------------------------
+def test_autotune_layer_fast(tmp_path):
+    kw = dict(kernel=3, relu=True)
+    spec = ConvSpec(route="pallas", **kw)
+    x, w, b = _arrays(kw, 9, 8, 8, B=2)
+    best, rows = at.autotune_layer(spec, x, w, b, interpret=True,
+                                   iters=1, max_candidates=3,
+                                   check_equal=True)
+    assert rows[0]["default"] and len(rows) >= 1
+    tuned_us = min(r["us"] for r in rows)
+    assert any(ConvPlan.from_dict(r["plan"]) == best and r["us"] == tuned_us
+               for r in rows)
+    # tuned can never be recorded slower than the default
+    assert tuned_us <= next(r["us"] for r in rows if r["default"])
+
+
+def test_autotune_alexnet_persists_and_reloads(tmp_path):
+    """autotune_alexnet -> PlanCache.save -> load_tuned_plans round-trip,
+    and a forward pass under the tuned plans is bit-equal to default."""
+    cfg = dataclasses.replace(alexnet.AlexNetConfig().reduced(),
+                              image_size=35, use_pallas=True)
+    path = tmp_path / "plans.json"
+    cache = PlanCache()
+    results = at.autotune_alexnet(cfg, 2, iters=1, max_candidates=2,
+                                  cache=cache)
+    assert [r["layer"] for r in results] == [f"conv{i}" for i in range(1, 6)]
+    assert all(r["tuned_us"] <= r["default_us"] for r in results)
+    cache.save(path)
+
+    plans = alexnet.load_tuned_plans(cfg, 2, path=path)
+    assert plans, "loader found no tuned plans"
+    assert all(isinstance(p, ConvPlan) for p in plans.values())
+    # any-batch fallback serves other bucket sizes from the same cache
+    assert alexnet.load_tuned_plans(cfg, 4, path=path)
+
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    imgs = jnp.asarray(np.random.default_rng(0).standard_normal(
+        (2, cfg.image_size, cfg.image_size, cfg.in_channels)), jnp.float32)
+    y0 = np.asarray(alexnet.apply(params, cfg, imgs))
+    y1 = np.asarray(alexnet.apply(params, cfg, imgs, plans=plans))
+    assert np.array_equal(y0, y1)
