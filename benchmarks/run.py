@@ -5,8 +5,9 @@ comparison / harness sanity (TPU v5e is the target, not the runtime);
 ``derived`` fields carry the model numbers compared against the paper.
 """
 from . import (decode_batching, fig8_dse, fig9_model_vs_measured,
-               fused_pipeline, kernels_bench, roofline_table, serve_images,
-               table2_layers, table5_fpga_comparison, table6_efficiency)
+               fused_pipeline, kernels_bench, roofline_table, serve_fleet,
+               serve_images, table2_layers, table5_fpga_comparison,
+               table6_efficiency)
 
 MODULES = [
     ("table2", table2_layers),
@@ -16,6 +17,7 @@ MODULES = [
     ("table6", table6_efficiency),
     ("decode_batching", decode_batching),
     ("serve_images", serve_images),
+    ("serve_fleet", serve_fleet),
     ("kernels", kernels_bench),
     ("fused_pipeline", fused_pipeline),
     ("roofline", roofline_table),

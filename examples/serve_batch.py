@@ -20,7 +20,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np                                         # noqa: E402
 
-from repro.configs import ASSIGNED, get_config             # noqa: E402
+from repro.configs import ASSIGNED, CNN_ARCHS, get_config  # noqa: E402
 from repro.launch.serve import CNN_ROUTES, serve_images    # noqa: E402
 from repro.serving import Engine, Request, ServeConfig     # noqa: E402
 
@@ -28,7 +28,7 @@ from repro.serving import Engine, Request, ServeConfig     # noqa: E402
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b",
-                    choices=ASSIGNED + ["alexnet"])
+                    choices=ASSIGNED + CNN_ARCHS)
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)

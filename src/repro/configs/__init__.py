@@ -20,9 +20,12 @@ _MODULES = {
     "granite-moe-1b-a400m": "granite_moe_1b_a400m",
     "phi-3-vision-4.2b": "phi3_vision_4p2b",
     "alexnet": "alexnet",
+    "vgg16": "vgg16",
 }
 
-ASSIGNED = [n for n in _MODULES if n != "alexnet"]
+# the paper-side CNNs live outside the assigned-architecture list
+CNN_ARCHS = ["alexnet", "vgg16"]
+ASSIGNED = [n for n in _MODULES if n not in CNN_ARCHS]
 
 
 def list_configs():

@@ -14,7 +14,7 @@ import dataclasses
 
 import numpy as np
 
-from ..configs import ASSIGNED, get_config
+from ..configs import ASSIGNED, CNN_ARCHS, get_config
 from ..serving import (CnnEngine, CnnServeConfig, Engine, ImageRequest,
                        Request, ServeConfig)
 
@@ -54,8 +54,15 @@ def serve_images(cfg, args) -> int:
                  else "off(dma-sync)") if pallas_any else "n/a(no-dma-route)")
         print("conv routes: " + " ".join(f"{n}={r}" for n, r in routes)
               + f" | weight_prefetch={mode}")
+    slo_ms = getattr(args, "slo_ms", None)
     scfg = CnnServeConfig(max_batch=args.max_batch,
-                          data_parallel=args.data_parallel)
+                          data_parallel=args.data_parallel,
+                          slo_ms=slo_ms,
+                          dynamic_buckets=bool(
+                              slo_ms and getattr(args, "dynamic_buckets",
+                                                 False)),
+                          admission=bool(slo_ms and getattr(args, "admission",
+                                                            False)))
     eng = CnnEngine(cfg, scfg, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     reqs = [ImageRequest(image=rng.standard_normal(
@@ -63,7 +70,10 @@ def serve_images(cfg, args) -> int:
                 .astype(np.float32))
             for _ in range(args.requests)]
     for r in reqs:
-        eng.submit(r)
+        if scfg.admission:
+            eng.try_submit(r)
+        else:
+            eng.submit(r)
     eng.run_until_done()
     s = eng.stats()
     done = sum(r.done for r in reqs)
@@ -74,13 +84,16 @@ def serve_images(cfg, args) -> int:
           f"buckets {s['bucket_counts']})")
     print(f"latency p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
           f"p99={lat['p99']:.1f}ms")
+    if slo_ms:
+        print(f"slo={slo_ms:.1f}ms goodput={s['goodput_imgs_per_s']:.1f} "
+              f"img/s shed={s['images_shed']} ladder={s['buckets']}")
     return done
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-3b",
-                    choices=ASSIGNED + ["alexnet"])
+                    choices=ASSIGNED + CNN_ARCHS)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -95,6 +108,14 @@ def main():
                     help="CNN path: Pallas weight stream — double-buffered "
                          "manual-DMA filter prefetch (on) vs the same "
                          "copies run synchronously (off; bit-equal)")
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="CNN path: p99 latency SLO enabling the serving "
+                         "policy layer (goodput accounting; see also "
+                         "--dynamic-buckets / --admission)")
+    ap.add_argument("--dynamic-buckets", action="store_true",
+                    help="CNN path: SLO-driven bucket-ladder resizing")
+    ap.add_argument("--admission", action="store_true",
+                    help="CNN path: SLO-driven load shedding at submit")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

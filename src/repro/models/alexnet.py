@@ -30,11 +30,19 @@ from ..nn.pooling import LrnParams
 
 @dataclass(frozen=True)
 class AlexNetConfig:
+    """CNN model config.  ``arch="alexnet"`` is the paper's five-layer
+    Krizhevsky topology; ``arch="vgg"`` reuses the same ConvSpec pipeline
+    for a VGG-style stack (all-3x3 SAME convs, 2x2 s2 pools after the
+    ``pool_after`` layers, no LRN) — the geometries the kernel sweep in
+    ``tests/test_vgg_geometry.py`` validates, served as a second model by
+    the fleet registry."""
     name: str = "alexnet"
     family: str = "cnn"
+    arch: str = "alexnet"          # "alexnet" | "vgg" layer-table shape
     image_size: int = 227
     in_channels: int = 3
     conv_channels: Tuple[int, ...] = (96, 256, 384, 384, 256)
+    pool_after: Tuple[int, ...] = ()   # vgg: 1-based conv indices with pool
     fc_dims: Tuple[int, ...] = (4096, 4096, 1000)
     num_classes: int = 1000
     use_winograd: bool = True      # F(4,3) on the 3x3 stride-1 layers
@@ -50,19 +58,35 @@ class AlexNetConfig:
     dtype: str = "float32"
 
     def reduced(self) -> "AlexNetConfig":
+        if self.arch == "vgg":
+            return replace(self, image_size=32, conv_channels=(8, 16, 16, 24),
+                           pool_after=(1, 2, 4), fc_dims=(32, 24, 10),
+                           num_classes=10, fc_batch=4)
         return replace(self, image_size=67, conv_channels=(16, 32, 48, 48, 32),
                        fc_dims=(64, 48, 10), num_classes=10, fc_batch=4)
 
 
 def layer_specs(cfg: "AlexNetConfig") -> List[ConvSpec]:
-    """The five conv layers as fused layer-level specs (Krizhevsky geometry).
+    """The conv layers as fused layer-level specs, one per
+    ``cfg.conv_channels`` entry.
 
-    conv1/conv2 carry LRN + pool, conv5 pool only; every conv fuses
-    bias+ReLU and routes through ``repro.nn.conv.dispatch_conv`` (the 3x3
-    stride-1 layers are Winograd-eligible; conv1/conv2 take the direct
-    datapath — the strided Pallas kernel on the pallas route — as in the
-    paper's non-Winograd first layer).
+    ``arch="alexnet"`` (Krizhevsky geometry): conv1/conv2 carry LRN + pool,
+    conv5 pool only; every conv fuses bias+ReLU and routes through
+    ``repro.nn.conv.dispatch_conv`` (the 3x3 stride-1 layers are
+    Winograd-eligible; conv1/conv2 take the direct datapath — the strided
+    Pallas kernel on the pallas route — as in the paper's non-Winograd
+    first layer).
+
+    ``arch="vgg"``: every layer is a 3x3 stride-1 SAME conv (all
+    Winograd-eligible — the regime ``tests/test_vgg_geometry.py`` sweeps),
+    with a fused 2x2 s2 max-pool after each layer index in
+    ``cfg.pool_after`` and no LRN.
     """
+    if cfg.arch == "vgg":
+        return [ConvSpec(kernel=3, relu=True,
+                         fuse_pool=(i + 1) in cfg.pool_after,
+                         pool_window=2, pool_stride=2)
+                for i in range(len(cfg.conv_channels))]
     lrn = LrnParams(n=cfg.lrn_n, k=cfg.lrn_k, alpha=cfg.lrn_alpha,
                     beta=cfg.lrn_beta)
     return [
@@ -150,7 +174,39 @@ def load_tuned_plans(cfg: AlexNetConfig, batch: int, *, path=None):
     return load_alexnet_plans(cfg, batch, path=path)
 
 
-def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
+def pack_serving_slabs(params, cfg: AlexNetConfig, batch: int, *,
+                       plans=None) -> dict:
+    """Pack-once serving slabs for one compiled batch shape: every conv
+    layer's :class:`~repro.nn.conv.PackedConvWeights` (tile-packed, plan-
+    blocked, §3.6 BFP-quantized under ``cfg.conv_bfp``), plus fc6's
+    quantized BFP stream under ``cfg.fc_bfp``.
+
+    This is the serving engines' enabling refactor: the dict is a pytree,
+    so it is hoisted *out* of the jitted forward and passed back in as a
+    jit argument (``apply(packed=...)``) — the compiled graph consumes the
+    staged slabs instead of re-packing filters in-trace on every call,
+    which is what the eager-path :class:`WeightStager` could never give
+    the compiled path.  Pure function of (params, config, batch), so an
+    engine packs each bucket's slabs exactly once.
+    """
+    plans = plans or {}
+    route = _route(cfg)
+    specs = [s.with_route(route) for s in layer_specs(cfg)]
+    packed = {}
+    h, c_in = cfg.image_size, cfg.in_channels
+    for i, (spec, c_out) in enumerate(zip(specs, cfg.conv_channels)):
+        name = f"conv{i + 1}"
+        packed[name] = pack_conv_weights(
+            spec, (batch, h, h, c_in), params[name]["w"],
+            bfp_pack=cfg.conv_bfp, plan=plans.get(name))
+        h, c_in = spec.out_hw(h), c_out
+    if cfg.fc_bfp:
+        packed["fc6"] = _stage_fc6(params, cfg)
+    return packed
+
+
+def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
+             packed=None):
     """images (B, H, W, 3) -> flattened conv features (B, d).
 
     One ``dispatch_conv`` per layer; the LRN/pool epilogues live in the
@@ -175,11 +231,29 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
     for that layer — and its staged slab is packed for the same plan, so
     staging and dispatch always agree.  All plan knobs are bit-equal
     re-blockings; outputs are identical tuned or not.
+
+    ``packed`` is a :func:`pack_serving_slabs` dict hoisted across the jit
+    boundary: each layer consumes its pre-packed slab directly (a missing
+    or shape-stale entry falls back to in-trace packing — identical
+    values) and the stager/prefetch hooks are skipped, since the §3.5
+    staging already happened once on the host.
     """
     x = images.astype(jnp.dtype(cfg.dtype))
     route = _route(cfg)
     stager = WeightStager() if stager is None else stager
     specs = [s.with_route(route) for s in layer_specs(cfg)]
+
+    if packed is not None:          # hoisted pack-once serving path
+        plans = plans or {}
+        for i, spec in enumerate(specs):
+            p = params[f"conv{i + 1}"]
+            plan = plans.get(f"conv{i + 1}")
+            kw = ({"plan": plan} if plan is not None
+                  else {"weight_prefetch": cfg.weight_prefetch})
+            x = dispatch_conv(spec, x, p["w"], p["b"],
+                              w_packed=packed.get(f"conv{i + 1}"), **kw)
+        return x.reshape(x.shape[0], -1)
+
     # the plan chain follows the *actual* input (the forward works for any
     # image size), so slabs staged here always match what dispatch resolves
     B, shapes, h, c_in = x.shape[0], [], x.shape[1], cfg.in_channels
@@ -224,21 +298,28 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
     return x.reshape(x.shape[0], -1)
 
 
-def classifier(params, cfg: AlexNetConfig, feats, *, stager=None):
+def classifier(params, cfg: AlexNetConfig, feats, *, stager=None,
+               packed=None):
     """Batched FC layers (paper §3.7: weights streamed, features cached).
 
     With ``cfg.fc_bfp`` the weight stream moves as shared-exponent int8
     block floating point (§3.6, ``kernels/bfp_matmul``) — 1 byte/value on
     the paper's stated FC bandwidth bottleneck — instead of f32; fc6's
     quantized stream is taken from the ``stager`` when the conv phase
-    staged it (``features``' last ``prefetch_next`` hook).
+    staged it (``features``' last ``prefetch_next`` hook), or from a
+    hoisted ``packed`` dict (:func:`pack_serving_slabs`) on the compiled
+    serving path.
     """
     x = feats
     n_fc = len(cfg.fc_dims)
     for j in range(n_fc):
         p = params[f"fc{j+6}"]
         if cfg.fc_bfp:
-            q = stager.get("fc6") if (j == 0 and stager is not None) else None
+            if j == 0 and packed is not None:
+                q = packed.get("fc6")
+            else:
+                q = (stager.get("fc6")
+                     if (j == 0 and stager is not None) else None)
             x = (bfp_linear(x, p["w"], quantized=q)
                  + p["b"].astype(jnp.float32)).astype(x.dtype)
         else:
@@ -248,14 +329,18 @@ def classifier(params, cfg: AlexNetConfig, feats, *, stager=None):
     return x
 
 
-def apply(params, cfg: AlexNetConfig, images, *, stager=None, plans=None):
+def apply(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
+          packed=None):
     """Full forward; one stager spans conv + FC so conv5's hook can stage
     the quantized fc6 stream (§3.5 prefetch across the conv/FC seam).
-    ``plans`` carries tuned per-layer launch plans into :func:`features`."""
+    ``plans`` carries tuned per-layer launch plans into :func:`features`;
+    ``packed`` carries :func:`pack_serving_slabs` slabs hoisted across the
+    jit boundary (pack-once compiled serving)."""
     stager = WeightStager() if stager is None else stager
     return classifier(params, cfg,
                       features(params, cfg, images, stager=stager,
-                               plans=plans), stager=stager)
+                               plans=plans, packed=packed),
+                      stager=stager, packed=packed)
 
 
 def loss_fn(params, cfg: AlexNetConfig, batch):

@@ -50,6 +50,7 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, replace
 
+import jax
 import jax.numpy as jnp
 
 from ..core import bfp
@@ -238,10 +239,23 @@ class PackedConvWeights:
     """A staged weight slab: the resolved datapath it was packed for plus
     the packed array (tile-packed DMA slab on the Pallas kernels, the
     BFP-requantized raw filters elsewhere, or None when the route has no
-    packed form)."""
+    packed form).
+
+    Registered as a pytree (``data`` is the sole child; ``kernel``/``bfp``
+    ride as static aux data) so a slab dict can cross a ``jax.jit``
+    boundary as an *argument* — the serving engines hoist their pack-once
+    slabs out of the compiled forward this way instead of re-packing
+    in-trace every call (ROADMAP's donated-buffer serving refactor).
+    """
     kernel: str                     # resolved datapath (KERNELS member)
     data: object                    # jnp array or None
     bfp: bool = False
+
+
+jax.tree_util.register_pytree_node(
+    PackedConvWeights,
+    lambda p: ((p.data,), (p.kernel, p.bfp)),
+    lambda aux, ch: PackedConvWeights(kernel=aux[0], data=ch[0], bfp=aux[1]))
 
 
 def _spec_fusion(spec: ConvSpec):

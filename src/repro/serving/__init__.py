@@ -1,4 +1,6 @@
 from .cnn import (CnnEngine, CnnServeConfig, ImageRequest,  # noqa: F401
                   bucket_sizes)
 from .engine import Engine, Request, ServeConfig  # noqa: F401
+from .policy import AdmissionController, DynamicBucketPolicy  # noqa: F401
+from .registry import ModelRegistry  # noqa: F401
 from .scheduler import LatencyTracker, SlotScheduler  # noqa: F401

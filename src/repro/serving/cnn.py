@@ -6,10 +6,26 @@ layers amortize one weight stream over S_batch images.  :class:`CnnEngine`
 reproduces that request-to-prediction path in software on top of the shared
 :class:`SlotScheduler` core:
 
-* **Occupancy buckets** — each admitted group is padded to the next
-  power-of-two bucket (<= ``max_batch``), so ``jax.jit`` compiles at most
-  ``O(log2 max_batch)`` batch shapes.  This is §3.7's S_batch with bounded
-  recompiles; padded rows are zeros and are sliced off before retirement.
+* **Occupancy buckets** — each admitted group is padded to the next bucket
+  (<= ``max_batch``), so ``jax.jit`` compiles a bounded set of batch
+  shapes.  The ladder starts at §3.7's powers of two; under an SLO
+  (``slo_ms`` + ``dynamic_buckets``) a :class:`DynamicBucketPolicy` may
+  insert up to ``max_extra_buckets`` sizes at the traffic's dominant group
+  size, trimming padding waste while keeping recompiles bounded.  Padded
+  rows are zeros and are sliced off before retirement.
+* **Admission control** — with ``slo_ms`` + ``admission`` an
+  :class:`AdmissionController` sheds requests (``try_submit`` -> False,
+  ``req.shed`` set, counted in ``images_shed``) whose estimated queue wait
+  already busts the SLO, protecting the goodput of requests that can still
+  make their deadline.
+* **Pack-once weight staging** — the model's §3.5 weight slabs
+  (``pack_serving_slabs``: tile-packed, plan-blocked, optionally
+  BFP-quantized) are packed exactly once per bucket shape on the host and
+  passed to the compiled forward as *jit arguments* (the
+  ``PackedConvWeights`` pytree), so the serving graph consumes staged
+  slabs instead of re-packing filters in-trace every call; the staged
+  image buffer is donated to the compiled call where the backend supports
+  buffer donation.
 * **Double-buffered staging** — host->device image copies are dispatched
   asynchronously up to ``staging_depth`` groups ahead, so the H2D transfer
   of group N+1 overlaps the forward pass of group N — the software analogue
@@ -24,8 +40,9 @@ reproduces that request-to-prediction path in software on top of the shared
 Request lifecycle: submit() -> queued -> admitted (slots held for one
 bucketed forward) -> staged (H2D in flight) -> computing -> finished
 (logits + argmax label on the request).  Metrics mirror Tables 5-6:
-img/s, average occupancy, per-bucket batch counts, and p50/p90/p99
-request latency.
+img/s, average occupancy, per-bucket batch counts, p50/p90/p99 request
+latency — plus the fleet-serving companions: shed counts, within-SLO
+completions, and goodput img/s.
 """
 from __future__ import annotations
 
@@ -36,12 +53,16 @@ from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..models import model_for
 from ..parallel.sharding import (batch_sharding, data_parallel_mesh,
                                  replicated_sharding)
+from .policy import AdmissionController, DynamicBucketPolicy, bucket_sizes
 from .scheduler import LatencyTracker, SlotScheduler
+
+__all__ = ["CnnEngine", "CnnServeConfig", "ImageRequest", "bucket_sizes"]
 
 
 @dataclass
@@ -49,6 +70,14 @@ class CnnServeConfig:
     max_batch: int = 8          # largest serve bucket (paper's S_batch knob)
     staging_depth: int = 2      # groups staged ahead of compute (§3.5 buffer)
     data_parallel: bool = False  # shard bucket batch axis over jax.devices()
+    # -- SLO control plane (serving/policy.py) --------------------------
+    slo_ms: Optional[float] = None  # p99 latency SLO; None = no SLO policy
+    dynamic_buckets: bool = False   # SLO-driven bucket-ladder resizing
+    admission: bool = False         # SLO-driven load shedding (try_submit)
+    max_extra_buckets: int = 2      # bound on inserted bucket shapes
+    policy_window: int = 64         # sliding window the policy reacts to
+    admission_slack: float = 1.0    # shed when est. wait > slo_ms * slack
+    latency_window: int = 4096      # LatencyTracker ring size (bounded)
 
 
 @dataclass
@@ -59,20 +88,9 @@ class ImageRequest:
     logits: Optional[np.ndarray] = None   # (num_classes,) on completion
     label: Optional[int] = None           # argmax of logits
     done: bool = False
+    shed: bool = False          # rejected by admission control (never served)
     t_submit: float = 0.0
     t_done: float = 0.0
-
-
-def bucket_sizes(max_batch: int) -> Tuple[int, ...]:
-    """Powers of two below ``max_batch`` plus ``max_batch`` itself."""
-    assert max_batch >= 1, max_batch
-    bs: List[int] = []
-    b = 1
-    while b < max_batch:
-        bs.append(b)
-        b *= 2
-    bs.append(max_batch)
-    return tuple(bs)
 
 
 @dataclass
@@ -83,6 +101,8 @@ class _Group:
     bucket: int
     images: object              # device array (bucket, H, W, C), H2D async
     logits: object = None       # device array once compute is dispatched
+    t_launch: float = 0.0       # forward dispatch time (service-time EWMA)
+    first_compile: bool = False  # first time this bucket shape was launched
 
 
 class CnnEngine:
@@ -92,12 +112,25 @@ class CnnEngine:
         self.mod = model_for(cfg)
         if params is None:
             params = self.mod.init(jax.random.PRNGKey(seed), cfg)
-        self.buckets = bucket_sizes(scfg.max_batch)
+        self._buckets = bucket_sizes(scfg.max_batch)
         self.sched = SlotScheduler(scfg.max_batch * scfg.staging_depth)
         self.mesh = data_parallel_mesh() if scfg.data_parallel else None
         if self.mesh is not None:
             params = jax.device_put(params, replicated_sharding(self.mesh))
         self.params = params
+        # staging buffers carry the model's configured dtype — a non-fp32
+        # model must not be silently fed fp32 (wrong input dtype + 2x the
+        # H2D bytes the §3.5 stream buffer is sized for)
+        self._buf_dtype = jnp.dtype(getattr(cfg, "dtype", "float32"))
+
+        # SLO control plane: bucket resizing + load shedding (policy.py)
+        self.policy = (DynamicBucketPolicy(
+            scfg.max_batch, scfg.slo_ms, max_extra=scfg.max_extra_buckets,
+            window=scfg.policy_window)
+            if scfg.slo_ms and scfg.dynamic_buckets else None)
+        self.admission = (AdmissionController(
+            scfg.slo_ms, slack=scfg.admission_slack)
+            if scfg.slo_ms and scfg.admission else None)
 
         # tuned launch plans from the measured autotuner's persisted cache
         # (results/plans/) — loaded at build, keyed to this config's layer
@@ -107,34 +140,111 @@ class CnnEngine:
         if hasattr(self.mod, "load_tuned_plans"):
             self.plans = self.mod.load_tuned_plans(cfg, scfg.max_batch)
 
+        # pack-once serving forward: weight slabs are packed per bucket
+        # shape on the host (_slabs) and enter the compiled graph as jit
+        # *arguments*; the staged image buffer is donated where the
+        # backend implements donation (each buffer is consumed by exactly
+        # one forward).
         mod, ccfg, plans = self.mod, cfg, self.plans
-        self._apply = jax.jit(
-            (lambda p, x: mod.apply(p, ccfg, x, plans=plans)) if plans
-            else (lambda p, x: mod.apply(p, ccfg, x)))
+        self._hoist = hasattr(mod, "pack_serving_slabs")
+        self._packed: Dict[int, dict] = {}
+        self._compiled: set = set()
+        donate = (2,) if jax.default_backend() in ("gpu", "tpu") else ()
+        if self._hoist:
+            self._apply = jax.jit(
+                lambda p, slabs, x: mod.apply(p, ccfg, x, plans=plans,
+                                              packed=slabs),
+                donate_argnums=donate)
+        else:
+            self._apply = jax.jit(
+                (lambda p, x: mod.apply(p, ccfg, x, plans=plans)) if plans
+                else (lambda p, x: mod.apply(p, ccfg, x)))
         self._staged: Deque[_Group] = deque()
         self._compute: Deque[_Group] = deque()
-        self.latency = LatencyTracker()
+        self.latency = LatencyTracker(window=scfg.latency_window)
         self.images_completed = 0
+        self.images_shed = 0
+        self.images_within_slo = 0
         self.batches_run = 0
         self.bucket_counts: Dict[int, int] = {}
         self._t_serve = 0.0
 
+    def arm_slo(self, slo_ms: Optional[float], *, dynamic_buckets: bool =
+                False, admission: bool = False):
+        """Arm (or replace) the SLO control plane on a live engine.
+
+        Serving deployments calibrate the SLO from *measured* service
+        times — which needs a warmed engine — so the control plane must be
+        attachable after warmup.  Compiled buckets, packed slabs, and
+        counters are all kept; only the policy objects are rebuilt.
+        """
+        import dataclasses
+        scfg = dataclasses.replace(self.scfg, slo_ms=slo_ms,
+                                   dynamic_buckets=dynamic_buckets,
+                                   admission=admission)
+        self.scfg = scfg
+        self.policy = (DynamicBucketPolicy(
+            scfg.max_batch, scfg.slo_ms, max_extra=scfg.max_extra_buckets,
+            window=scfg.policy_window)
+            if scfg.slo_ms and scfg.dynamic_buckets else None)
+        self.admission = (AdmissionController(
+            scfg.slo_ms, slack=scfg.admission_slack)
+            if scfg.slo_ms and scfg.admission else None)
+
     # ------------------------------------------------------------------
-    def submit(self, req: ImageRequest):
+    @property
+    def buckets(self) -> Tuple[int, ...]:
+        """The current bucket ladder (static, or the policy's resized
+        ladder under ``dynamic_buckets``)."""
+        return self.policy.buckets() if self.policy else self._buckets
+
+    def _validate(self, req: ImageRequest):
         expect = (self.cfg.image_size, self.cfg.image_size,
                   self.cfg.in_channels)
         shape = np.shape(req.image)
         if shape != expect:
             raise ValueError(f"image shape {shape} != expected {expect} "
                              f"for {self.cfg.name}")
+
+    def submit(self, req: ImageRequest):
+        """Unconditional submit (no admission control) — validates shape
+        and queues the request."""
+        self._validate(req)
         req.t_submit = time.perf_counter()
         self.sched.submit(req)
 
+    def backlog_images(self) -> int:
+        """Images ahead of a newcomer: queued + staged + computing."""
+        return (len(self.sched.queue)
+                + sum(len(g.reqs) for g in self._staged)
+                + sum(len(g.reqs) for g in self._compute))
+
+    def try_submit(self, req: ImageRequest) -> bool:
+        """Admission-controlled submit: returns False (and marks
+        ``req.shed``) when the SLO controller estimates the queue can no
+        longer absorb the request; shed requests are counted in
+        ``images_shed`` and never occupy a slot."""
+        self._validate(req)
+        if (self.admission is not None
+                and not self.admission.admit(self.backlog_images())):
+            req.shed = True
+            self.images_shed += 1
+            return False
+        req.t_submit = time.perf_counter()
+        self.sched.submit(req)
+        return True
+
     def bucket_for(self, n: int) -> int:
+        """Smallest bucket holding ``n`` requests.  A group larger than
+        ``max_batch`` is a contract violation — admission must never build
+        one — and raises instead of silently padding past the ladder
+        (which would compile an undeclared shape)."""
         for b in self.buckets:
             if b >= n:
                 return b
-        return self.buckets[-1]
+        raise ValueError(
+            f"group of {n} exceeds max_batch={self.buckets[-1]}; "
+            f"admission must cap groups at the largest bucket")
 
     def _put(self, host: np.ndarray):
         """Async H2D copy (transfer overlaps in-flight compute)."""
@@ -143,6 +253,19 @@ class CnnEngine:
         if host.shape[0] % self.mesh.devices.size == 0:
             return jax.device_put(host, batch_sharding(self.mesh, host.ndim))
         return jax.device_put(host, replicated_sharding(self.mesh))
+
+    def _slabs(self, bucket: int):
+        """The hoisted pack-once weight slabs for one bucket shape (packed
+        on first use, then reused as jit arguments for every forward of
+        that bucket — the compiled-path twin of the eager WeightStager)."""
+        if bucket not in self._packed:
+            packed = self.mod.pack_serving_slabs(self.params, self.cfg,
+                                                 bucket, plans=self.plans)
+            if self.mesh is not None:
+                packed = jax.device_put(packed,
+                                        replicated_sharding(self.mesh))
+            self._packed[bucket] = packed
+        return self._packed[bucket]
 
     def _stage(self):
         """Admit queued requests into free slots and start their H2D copies."""
@@ -153,9 +276,11 @@ class CnnEngine:
                 break                                   # no free slots
             slots = [s for s, _ in group]
             reqs = [r for _, r in group]
+            if self.policy is not None:
+                self.policy.observe_admit(len(reqs))
             bucket = self.bucket_for(len(reqs))
             h, w, c = reqs[0].image.shape
-            buf = np.zeros((bucket, h, w, c), np.float32)
+            buf = np.zeros((bucket, h, w, c), self._buf_dtype)
             for i, r in enumerate(reqs):
                 buf[i] = r.image
             self._staged.append(_Group(slots, reqs, bucket, self._put(buf)))
@@ -164,7 +289,14 @@ class CnnEngine:
         """Dispatch the forward pass for the oldest staged group (async)."""
         if self._staged:
             g = self._staged.popleft()
-            g.logits = self._apply(self.params, g.images)
+            g.first_compile = g.bucket not in self._compiled
+            self._compiled.add(g.bucket)
+            g.t_launch = time.perf_counter()
+            if self._hoist:
+                g.logits = self._apply(self.params, self._slabs(g.bucket),
+                                       g.images)
+            else:
+                g.logits = self._apply(self.params, g.images)
             self._compute.append(g)
 
     def _finish_oldest(self):
@@ -174,13 +306,25 @@ class CnnEngine:
         g = self._compute.popleft()
         logits = np.asarray(jax.device_get(g.logits))[: len(g.reqs)]
         now = time.perf_counter()
+        slo_s = (self.scfg.slo_ms or 0.0) / 1e3
         for slot, req, row in zip(g.slots, g.reqs, logits):
             req.logits = row
             req.label = int(row.argmax())
             req.done = True
             req.t_done = now
-            self.latency.record(now - req.t_submit)
+            lat = now - req.t_submit
+            self.latency.record(lat)
+            if slo_s and lat <= slo_s:
+                self.images_within_slo += 1
+            if self.policy is not None:
+                self.policy.observe_latency(lat)
             self.sched.retire(slot)
+        # service-time EWMA feeds load shedding; a first-compile batch
+        # carries the jit trace and would poison the estimate
+        if self.admission is not None and not g.first_compile:
+            self.admission.observe_batch(len(g.reqs), now - g.t_launch)
+        if self.policy is not None:
+            self.policy.maybe_resize()
         self.images_completed += len(g.reqs)
         self.batches_run += 1
         self.bucket_counts[g.bucket] = self.bucket_counts.get(g.bucket, 0) + 1
@@ -202,9 +346,12 @@ class CnnEngine:
 
     def reset_metrics(self):
         """Zero throughput/latency counters (e.g. after jit warmup) without
-        touching queue, slots, or compiled buckets."""
-        self.latency = LatencyTracker()
+        touching queue, slots, compiled buckets, or the packed-slab and
+        admission state (a warmed service-time estimate is kept)."""
+        self.latency = LatencyTracker(window=self.scfg.latency_window)
         self.images_completed = 0
+        self.images_shed = 0
+        self.images_within_slo = 0
         self.batches_run = 0
         self.bucket_counts = {}
         self._t_serve = 0.0
@@ -214,14 +361,30 @@ class CnnEngine:
     def imgs_per_s(self) -> float:
         return self.images_completed / self._t_serve if self._t_serve else 0.0
 
+    @property
+    def goodput_imgs_per_s(self) -> float:
+        """Within-SLO completions per serve-second (== img/s when no SLO
+        is configured: every completion counts)."""
+        if not self._t_serve:
+            return 0.0
+        good = (self.images_within_slo if self.scfg.slo_ms
+                else self.images_completed)
+        return good / self._t_serve
+
     def stats(self) -> dict:
         return {
             "images_completed": self.images_completed,
+            "images_shed": self.images_shed,
+            "images_within_slo": (self.images_within_slo
+                                  if self.scfg.slo_ms else None),
             "batches_run": self.batches_run,
             "avg_occupancy": (self.images_completed / self.batches_run
                               if self.batches_run else 0.0),
             "bucket_counts": dict(sorted(self.bucket_counts.items())),
+            "buckets": list(self.buckets),
+            "bucket_resizes": list(self.policy.resizes) if self.policy else [],
             "imgs_per_s": self.imgs_per_s,
+            "goodput_imgs_per_s": self.goodput_imgs_per_s,
             "latency_ms": self.latency.percentiles_ms(),
             "tuned_layers": sorted(self.plans),
         }

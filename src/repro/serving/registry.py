@@ -1,0 +1,118 @@
+"""Multi-model serving fleet: several compiled networks behind one front
+door.
+
+The ROADMAP north star is production traffic — many models, many tenants —
+while the paper's Tables 5-6 measure one AlexNet.  :class:`ModelRegistry`
+closes that gap in software: each registered model gets its own
+:class:`CnnEngine` (its own compiled buckets, pack-once weight slabs, SLO
+policy and latency accounting), the engines share one *device slot budget*
+(the fleet analogue of the DLA's fixed stream-buffer/slot capacity — a
+registry refuses to register a model whose slot pool would oversubscribe
+it), and one ``step()`` drives every engine's stage->launch->retire tick so
+the models' transfers and forwards interleave on the shared device queue.
+
+Front-door semantics: ``submit(model, req)`` routes through the target
+engine's admission control (``try_submit``) — a shed request is reported to
+the caller (False + ``req.shed``), never dropped on the floor.  ``stats()``
+reports the per-model Tables 5-6 metrics plus fleet aggregates (img/s,
+goodput, shed counts, worst-model p99).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from .cnn import CnnEngine, CnnServeConfig, ImageRequest
+
+
+class ModelRegistry:
+    """Named :class:`CnnEngine` fleet with a shared device slot budget."""
+
+    def __init__(self, *, slot_budget: Optional[int] = None):
+        assert slot_budget is None or slot_budget >= 1
+        self.slot_budget = slot_budget
+        self.engines: Dict[str, CnnEngine] = {}
+
+    # -- registration -------------------------------------------------------
+    @property
+    def slots_used(self) -> int:
+        return sum(e.sched.n_slots for e in self.engines.values())
+
+    def register(self, name: str, cfg, scfg: CnnServeConfig, *, params=None,
+                 seed: int = 0) -> CnnEngine:
+        """Build and register one model's engine under ``name``.  Raises
+        when the engine's slot pool (``max_batch * staging_depth``) would
+        exceed the fleet's remaining device budget — oversubscription must
+        fail loudly at registration, not as memory pressure under load."""
+        if name in self.engines:
+            raise ValueError(f"model {name!r} already registered")
+        need = scfg.max_batch * scfg.staging_depth
+        if (self.slot_budget is not None
+                and self.slots_used + need > self.slot_budget):
+            raise ValueError(
+                f"registering {name!r} needs {need} slots but only "
+                f"{self.slot_budget - self.slots_used} of "
+                f"{self.slot_budget} remain; shrink max_batch or "
+                f"staging_depth")
+        eng = CnnEngine(cfg, scfg, params=params, seed=seed)
+        self.engines[name] = eng
+        return eng
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.engines
+
+    def __getitem__(self, name: str) -> CnnEngine:
+        return self.engines[name]
+
+    # -- front door ---------------------------------------------------------
+    def submit(self, model: str, req: ImageRequest) -> bool:
+        """Route one request to its model's engine through admission
+        control; False means shed (``req.shed`` is set and the engine's
+        ``images_shed`` counter incremented)."""
+        if model not in self.engines:
+            raise KeyError(f"unknown model {model!r}; "
+                           f"registered: {sorted(self.engines)}")
+        return self.engines[model].try_submit(req)
+
+    def step(self):
+        """One fleet tick: every engine stages, launches, and retires —
+        JAX dispatch is async, so the engines' H2D copies and forwards
+        interleave on the device queue within one pass."""
+        for eng in self.engines.values():
+            eng.step()
+
+    @property
+    def idle(self) -> bool:
+        return all(e.sched.idle and not e._staged and not e._compute
+                   for e in self.engines.values())
+
+    def run_until_done(self, max_steps: int = 100_000):
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.step()
+
+    def reset_metrics(self):
+        for eng in self.engines.values():
+            eng.reset_metrics()
+
+    # -- accounting ---------------------------------------------------------
+    def stats(self) -> dict:
+        """Per-model engine stats plus fleet aggregates."""
+        per = {name: eng.stats() for name, eng in self.engines.items()}
+        completed = sum(s["images_completed"] for s in per.values())
+        shed = sum(s["images_shed"] for s in per.values())
+        return {
+            "models": per,
+            "fleet": {
+                "images_completed": completed,
+                "images_shed": shed,
+                "imgs_per_s": sum(s["imgs_per_s"] for s in per.values()),
+                "goodput_imgs_per_s": sum(s["goodput_imgs_per_s"]
+                                          for s in per.values()),
+                "worst_p99_ms": max(
+                    (s["latency_ms"]["p99"] for s in per.values()),
+                    default=0.0),
+                "slots_used": self.slots_used,
+                "slot_budget": self.slot_budget,
+            },
+        }

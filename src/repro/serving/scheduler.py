@@ -10,7 +10,8 @@ admission/retirement counters; the engines own all device state.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from collections import deque
+from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -22,7 +23,10 @@ class SlotScheduler:
         assert n_slots > 0, n_slots
         self.n_slots = n_slots
         self.slot_req: List[Optional[object]] = [None] * n_slots
-        self.queue: List[object] = []
+        # deque, not list: admission drains the queue head one request at a
+        # time, and a deep backlog (the fleet traffic generator routinely
+        # queues thousands) would make list.pop(0) O(n^2) overall.
+        self.queue: Deque[object] = deque()
         self.submitted = 0
         self.completed = 0
 
@@ -57,7 +61,7 @@ class SlotScheduler:
                 break
             if self.slot_req[slot] is not None:
                 continue
-            req = self.queue.pop(0)
+            req = self.queue.popleft()
             self.slot_req[slot] = req
             out.append((slot, req))
         return out
@@ -73,13 +77,24 @@ class SlotScheduler:
 class LatencyTracker:
     """Submit->complete request latency percentiles (Tables 5-6 companion:
     the paper reports throughput; a serving system must also bound tail
-    latency, which batching trades against)."""
+    latency, which batching trades against).
 
-    def __init__(self):
-        self._lat_s: List[float] = []
+    Bounded: samples live in a sliding window (``deque(maxlen=window)``) so
+    a long-running fleet neither leaks memory nor pays an ever-growing
+    ``np.percentile`` — and the reported p50/p90/p99 track *recent* traffic,
+    which is what an SLO controller needs to react to.  ``total`` counts
+    every recorded sample for throughput accounting.
+    """
+
+    def __init__(self, window: int = 4096):
+        assert window >= 1, window
+        self.window = window
+        self._lat_s: Deque[float] = deque(maxlen=window)
+        self.total = 0
 
     def record(self, seconds: float) -> None:
         self._lat_s.append(seconds)
+        self.total += 1
 
     def __len__(self) -> int:
         return len(self._lat_s)

@@ -80,7 +80,7 @@ def test_engine_shares_scheduler_core():
     assert all(r.t_done >= r.t_submit > 0 for r in reqs)
     # back-compat views still exposed
     assert eng.active.tolist() == [False, False]
-    assert eng.queue == [] and eng.slot_req == [None, None]
+    assert list(eng.queue) == [] and eng.slot_req == [None, None]
 
 
 def test_batching_amortizes_weight_stream():
