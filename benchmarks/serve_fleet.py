@@ -19,6 +19,19 @@ p50/p90/p99 tail latency:
 * ``closed_loop`` — N clients with think time against one engine (the
   classic closed-loop regime: latency ~ service time, no queue blowup).
 
+``--chaos`` switches to the fault-tolerance harness instead: a seeded
+:class:`~repro.serving.faults.FaultInjector` replays a committed fault
+schedule (transient launch failures, staging corruption, non-finite
+logits, latency spikes, one hard crash) against the same bursty traffic,
+and the artifact (``BENCH_chaos.json``) reports goodput-under-faults next
+to the fault-free baseline on the identical trace, the armed-but-idle
+bit-parity check, and a pallas->direct route-degradation run whose
+degraded outputs are gated bit-identical to the direct-route oracle.
+``--chaos --check`` gates: zero lost requests
+(``submitted == completed + shed + expired`` on every engine), goodput > 0
+under the seeded schedule, idle-parity bit-identical, and the degraded
+bucket serving bit-correct logits.
+
 Traces are seeded and host-generated; arrival timestamps are wall-clock
 offsets so queue-wait latency is real.  ``--fast`` shrinks everything for
 the CI smoke, which gates goodput > 0, full drain (zero unretired slots),
@@ -160,8 +173,7 @@ def _warm_buckets(eng, image):
 
 
 def _drained(eng) -> bool:
-    return (eng.sched.occupancy == 0 and not eng._staged and not eng._compute
-            and not eng.sched.queue)
+    return eng.drained and eng.sched.occupancy == 0
 
 
 def _lat_percentiles_ms(reqs) -> dict:
@@ -397,6 +409,222 @@ def run_closed_loop(fast: bool, seed: int = 0) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# chaos harness (--chaos): seeded fault schedule vs fault-free baseline
+# ---------------------------------------------------------------------------
+def _chaos_engine_record(eng, reqs) -> dict:
+    """One chaos run's accounting + throughput record (per engine)."""
+    s = eng.stats()
+    acc = s["accounting"]
+    return {
+        "submitted": acc["submitted"],
+        "completed": acc["completed"],
+        "shed": acc["shed"],
+        "expired": acc["expired"],
+        "retried": s["images_retried"],
+        "batches_failed": s["batches_failed"],
+        "in_flight": acc["in_flight"],
+        "accounting_balanced": acc["balanced"],
+        "imgs_per_s": s["imgs_per_s"],
+        "goodput_imgs_per_s": s["goodput_imgs_per_s"],
+        "latency_ms": _lat_percentiles_ms(reqs),
+        "health": s["health"],
+        "shed_reasons": s["shed_reasons"],
+        "degraded_buckets": s["degraded_buckets"],
+        "faults": s["faults"],
+    }
+
+
+def run_chaos(fast: bool, seed: int = 0) -> dict:
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import alexnet
+    from repro.serving import (CnnEngine, CnnServeConfig, FaultInjector,
+                               FaultSpec, ImageRequest, derive_seed)
+
+    cfg = get_config("alexnet").reduced()
+    params = alexnet.init(jax.random.PRNGKey(seed), cfg)
+    image = _image_fn(cfg, seed)
+    scfg = CnnServeConfig(max_batch=4, cooldown_ms=80.0,
+                          retry_backoff_ms=0.5, screen_sample=4)
+
+    # -- 1. armed-but-idle parity: a FaultInjector with no specs must be
+    # invisible — same engine, same inputs, bit-identical logits ----------
+    eng = CnnEngine(cfg, scfg, params=params)
+    _warm_buckets(eng, image)
+    probe = [image() for _ in range(7)]     # spans buckets 4/2/1
+
+    def serve(imgs):
+        rs = [ImageRequest(image=im) for im in imgs]
+        for r in rs:
+            eng.submit(r)
+        eng.run_until_done()
+        return [np.asarray(r.logits) for r in rs]
+
+    base_logits = serve(probe)
+    eng.arm_faults(FaultInjector(seed=derive_seed(seed, "idle"), specs={}))
+    armed_logits = serve(probe)
+    eng.arm_faults(None)
+    idle_parity = {
+        "requests": len(probe),
+        "bit_identical": bool(all(
+            np.array_equal(a, b)
+            for a, b in zip(base_logits, armed_logits))),
+    }
+
+    # -- 2. seeded fault schedule vs fault-free baseline on the identical
+    # bursty trace (the PR-7 traffic generator) ---------------------------
+    svc = _service_ms(eng, image, 4)
+    deadline_ms = max(6.0 * svc, 50.0)
+    slo_ms = max(4.0 * svc, 25.0)
+    n_bursts = 12 if fast else 40
+    crash_at = 6 if fast else 20            # launch-opportunity index
+    rng = np.random.default_rng(seed + 3)
+    trace = bursty_trace(n_bursts, 3, max(svc, 1.0) * 1.3e-3, rng)
+    schedule = {
+        "launch.transient": FaultSpec(rate=0.10),
+        "retire.nonfinite": FaultSpec(rate=0.06),
+        "stage.corrupt": FaultSpec(rate=0.05),
+        "retire.latency": FaultSpec(rate=0.08, delay_ms=2.0),
+        "launch.crash": FaultSpec(at=(crash_at,), limit=1),
+    }
+
+    def run_traced(injector):
+        e = CnnEngine(cfg, scfg, params=params)
+        _warm_buckets(e, image)
+        e.arm_slo(slo_ms)               # goodput = within-SLO completions
+        e.arm_faults(injector)          # armed after warmup: opportunity
+        reqs = []                       # indices count serving work only
+
+        def submit(_):
+            r = ImageRequest(image=image(), deadline_ms=deadline_ms,
+                             retries=3)
+            reqs.append(r)
+            e.try_submit(r)             # quarantine sheds at the front door
+
+        drive_open_loop([(t, None) for t in trace], submit, e.step,
+                        lambda: _drained(e))
+        e.run_until_done()              # raises DrainTimeout if hung
+        assert _drained(e), "unretired work after chaos drain"
+        return _chaos_engine_record(e, reqs)
+
+    baseline = run_traced(None)
+    faulted = run_traced(FaultInjector(seed=derive_seed(seed, "chaos"),
+                                       specs=schedule))
+
+    # -- 3. route degradation: repeated pallas-route launch failures flip
+    # the bucket to the direct route; served logits must bit-match the
+    # direct-route oracle -------------------------------------------------
+    dcfg = dataclasses.replace(get_config("alexnet").reduced(),
+                               image_size=35, use_pallas=True)
+    dparams = alexnet.init(jax.random.PRNGKey(seed + 1), dcfg)
+    dimage = _image_fn(dcfg, seed + 1)
+    dscfg = CnnServeConfig(max_batch=2, retry_backoff_ms=0.2,
+                           degrade_threshold=3, quarantine_threshold=8,
+                           screen_sample=2)
+    deng = CnnEngine(dcfg, dscfg, params=dparams)
+    _warm_buckets(deng, dimage)
+    deng.arm_faults(FaultInjector(
+        seed=derive_seed(seed, "degrade"),
+        specs={"launch.transient": FaultSpec(at=(0, 1, 2))}))
+    imgs = [dimage() for _ in range(2)]
+    dreqs = [ImageRequest(image=im, retries=4) for im in imgs]
+    for r in dreqs:
+        deng.submit(r)
+    deng.run_until_done()
+    assert all(r.done for r in dreqs), "degradation run did not complete"
+    padded = np.zeros((2, dcfg.image_size, dcfg.image_size,
+                       dcfg.in_channels), np.float32)
+    for i, im in enumerate(imgs):
+        padded[i] = im
+    cfg_direct = dataclasses.replace(dcfg, use_winograd=False,
+                                     use_pallas=False)
+    # jitted at the served bucket shape, like the engine's degraded path
+    oracle = np.asarray(jax.jit(
+        lambda p, x: alexnet.apply(p, cfg_direct, x))(dparams, padded))[:2]
+    ds = deng.stats()
+    degradation = {
+        "route_before": "pallas",
+        "degraded_buckets": ds["degraded_buckets"],
+        "events": ds["degradations"],
+        "completed": ds["images_completed"],
+        "retried": ds["images_retried"],
+        "batches_failed": ds["batches_failed"],
+        "health": ds["health"]["state"],
+        "accounting": ds["accounting"],
+        "bit_match_direct": bool(all(
+            np.array_equal(np.asarray(r.logits), o)
+            for r, o in zip(dreqs, oracle))),
+    }
+
+    gp_base = baseline["goodput_imgs_per_s"]
+    return {
+        "meta": {"fast": fast, "seed": seed,
+                 "deadline_ms": deadline_ms, "slo_ms": slo_ms,
+                 "retries": 3, "service_ms_b4": svc,
+                 "trace": {"kind": "bursty", "n_bursts": n_bursts,
+                           "burst": 3}},
+        "schedule": {p: dataclasses.asdict(s) for p, s in schedule.items()},
+        "idle_parity": idle_parity,
+        "baseline": baseline,
+        "faulted": faulted,
+        "goodput_under_faults_ratio": (
+            faulted["goodput_imgs_per_s"] / gp_base if gp_base else 0.0),
+        "degradation": degradation,
+    }
+
+
+def check_chaos(out: dict):
+    """CI chaos-smoke gates: nothing lost, goodput under faults, armed-idle
+    bit-parity, degraded bucket serving bit-correct logits."""
+    assert out["idle_parity"]["bit_identical"], \
+        "armed-but-idle injector perturbed serving output"
+    for name in ("baseline", "faulted"):
+        r = out[name]
+        assert r["accounting_balanced"] and r["in_flight"] == 0, \
+            f"{name}: accounting does not balance ({r})"
+        assert r["submitted"] == (r["completed"] + r["shed"]
+                                  + r["expired"]), \
+            f"{name}: lost requests"
+    assert out["faulted"]["goodput_imgs_per_s"] > 0, \
+        "zero goodput under the seeded fault schedule"
+    fired = sum(v["fired"] for v in out["faulted"]["faults"].values())
+    assert fired > 0, "fault schedule never fired"
+    d = out["degradation"]
+    assert d["degraded_buckets"], "no bucket degraded"
+    assert d["bit_match_direct"], \
+        "degraded-bucket logits diverge from the direct-route oracle"
+    assert d["accounting"]["balanced"]
+    print("serve_fleet/CHAOS_OK,0,all-gates-passed")
+
+
+def chaos_rows(out: dict) -> list:
+    b, f = out["baseline"], out["faulted"]
+    d = out["degradation"]
+    return [
+        {"name": "serve_fleet/chaos_baseline",
+         "us_per_call": 1e6 / max(b["imgs_per_s"], 1e-9),
+         "derived": (f"goodput={b['goodput_imgs_per_s']:.1f}"
+                     f";completed={b['completed']}"
+                     f";p99_ms={b['latency_ms']['p99']:.1f}")},
+        {"name": "serve_fleet/chaos_faulted",
+         "us_per_call": 1e6 / max(f["imgs_per_s"], 1e-9),
+         "derived": (f"goodput={f['goodput_imgs_per_s']:.1f}"
+                     f";completed={f['completed']}"
+                     f";expired={f['expired']};shed={f['shed']}"
+                     f";retried={f['retried']}"
+                     f";ratio={out['goodput_under_faults_ratio']:.3f}")},
+        {"name": "serve_fleet/chaos_degradation", "us_per_call": 0,
+         "derived": (f"buckets={d['degraded_buckets']}"
+                     f";bit_match={int(d['bit_match_direct'])}"
+                     f";retried={d['retried']}")},
+        {"name": "serve_fleet/chaos_idle_parity", "us_per_call": 0,
+         "derived": f"bit_identical={int(out['idle_parity']['bit_identical'])}"},
+    ]
+
+
+# ---------------------------------------------------------------------------
 def check(out: dict):
     """CI gates: goodput flowed, everything drained, accounting closed.
     (The p99 A/B delta is reported in the artifact, not gated — shared CI
@@ -462,19 +690,26 @@ def main(argv=None):
                     help="CI smoke scale (short traces, few clients)")
     ap.add_argument("--check", action="store_true",
                     help="assert the CI gates (goodput/drain/accounting)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the seeded fault-injection harness instead "
+                         "(artifact: BENCH_chaos.json)")
     ap.add_argument("--out", default=None,
                     help="write the JSON artifact (BENCH_serve_fleet.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    out = run_all(args.fast, args.seed)
-    emit(rows(out))
+    if args.chaos:
+        out = run_chaos(args.fast, args.seed)
+        emit(chaos_rows(out))
+    else:
+        out = run_all(args.fast, args.seed)
+        emit(rows(out))
     if args.out:
         with open(args.out, "w") as f:
             json.dump(out, f, indent=1, sort_keys=True)
         print(f"serve_fleet/ARTIFACT,0,wrote={args.out}")
     if args.check:
-        check(out)
+        (check_chaos if args.chaos else check)(out)
 
 
 if __name__ == "__main__":

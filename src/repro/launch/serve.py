@@ -15,8 +15,9 @@ import dataclasses
 import numpy as np
 
 from ..configs import ASSIGNED, CNN_ARCHS, get_config
-from ..serving import (CnnEngine, CnnServeConfig, Engine, ImageRequest,
-                       Request, ServeConfig)
+from ..serving import (CnnEngine, CnnServeConfig, Engine, FaultInjector,
+                       FaultSpec, ImageRequest, Request, ServeConfig,
+                       derive_seed)
 
 CNN_ROUTES = ("auto", "direct", "winograd", "pallas")
 
@@ -63,11 +64,22 @@ def serve_images(cfg, args) -> int:
                                                  False)),
                           admission=bool(slo_ms and getattr(args, "admission",
                                                             False)))
-    eng = CnnEngine(cfg, scfg, seed=args.seed)
+    faults = None
+    if getattr(args, "chaos", False):
+        # light seeded schedule: transient launches + non-finite logits,
+        # enough to exercise retry/screen/health without stalling the run
+        faults = FaultInjector(
+            seed=derive_seed(args.seed, cfg.name),
+            specs={"launch.transient": FaultSpec(rate=0.1),
+                   "retire.nonfinite": FaultSpec(rate=0.05)})
+    eng = CnnEngine(cfg, scfg, seed=args.seed, faults=faults)
     rng = np.random.default_rng(args.seed)
+    deadline_ms = getattr(args, "deadline_ms", None)
+    retries = getattr(args, "retries", 2)
     reqs = [ImageRequest(image=rng.standard_normal(
                 (cfg.image_size, cfg.image_size, cfg.in_channels))
-                .astype(np.float32))
+                .astype(np.float32),
+                deadline_ms=deadline_ms, retries=retries)
             for _ in range(args.requests)]
     for r in reqs:
         if scfg.admission:
@@ -87,6 +99,13 @@ def serve_images(cfg, args) -> int:
     if slo_ms:
         print(f"slo={slo_ms:.1f}ms goodput={s['goodput_imgs_per_s']:.1f} "
               f"img/s shed={s['images_shed']} ladder={s['buckets']}")
+    acc = s["accounting"]
+    print(f"accounting submitted={acc['submitted']} "
+          f"completed={acc['completed']} shed={acc['shed']} "
+          f"expired={acc['expired']} "
+          f"balanced={'yes' if acc['balanced'] else 'NO'} | "
+          f"health={s['health']['state']} retried={s['images_retried']}"
+          + (f" faults_fired={faults.total_fired}" if faults else ""))
     return done
 
 
@@ -116,6 +135,16 @@ def main():
                     help="CNN path: SLO-driven bucket-ladder resizing")
     ap.add_argument("--admission", action="store_true",
                     help="CNN path: SLO-driven load shedding at submit")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="CNN path: per-request deadline; overdue requests "
+                         "retire as expired (reported, never dropped)")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="CNN path: per-request transient-failure retry "
+                         "budget (exponential backoff)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="CNN path: arm a seeded FaultInjector (transient "
+                         "launch failures + non-finite logits) to exercise "
+                         "the retry/screen/health machinery")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 

@@ -1,6 +1,11 @@
 from .cnn import (CnnEngine, CnnServeConfig, ImageRequest,  # noqa: F401
                   bucket_sizes)
 from .engine import Engine, Request, ServeConfig  # noqa: F401
+from .faults import (FAULT_POINTS, EngineCrash, FaultInjector,  # noqa: F401
+                     FaultSpec, TransientLaunchError, derive_seed)
+from .health import (DEGRADED, HEALTHY, QUARANTINED,  # noqa: F401
+                     HealthMonitor)
 from .policy import AdmissionController, DynamicBucketPolicy  # noqa: F401
 from .registry import ModelRegistry  # noqa: F401
-from .scheduler import LatencyTracker, SlotScheduler  # noqa: F401
+from .scheduler import (DrainTimeout, LatencyTracker,  # noqa: F401
+                        SlotScheduler)

@@ -16,8 +16,9 @@ reproduces that request-to-prediction path in software on top of the shared
 * **Admission control** — with ``slo_ms`` + ``admission`` an
   :class:`AdmissionController` sheds requests (``try_submit`` -> False,
   ``req.shed`` set, counted in ``images_shed``) whose estimated queue wait
-  already busts the SLO, protecting the goodput of requests that can still
-  make their deadline.
+  already busts the SLO — or the request's own ``deadline_ms``, whichever
+  is tighter — protecting the goodput of requests that can still make
+  their deadline.
 * **Pack-once weight staging** — the model's §3.5 weight slabs
   (``pack_serving_slabs``: tile-packed, plan-blocked, optionally
   BFP-quantized) are packed exactly once per bucket shape on the host and
@@ -37,20 +38,56 @@ reproduces that request-to-prediction path in software on top of the shared
   sharded across devices (``parallel/sharding.py``); buckets indivisible by
   the device count fall back to replicated placement.
 
+Fault tolerance (the chaos layer — ``serving/faults.py`` +
+``serving/health.py``):
+
+* **Named fault points** — an armed :class:`FaultInjector` is consulted at
+  ``stage.corrupt`` (host staging buffer), ``launch.transient`` /
+  ``launch.crash`` (forward dispatch), and ``retire.nonfinite`` /
+  ``retire.latency`` (retirement); with no injector the hooks are a single
+  ``is not None`` check, and an armed-but-idle injector never touches the
+  data path (bit-identical serving — the CI chaos gate).
+* **Deadlines + bounded retry** — ``ImageRequest.deadline_ms`` /
+  ``retries``: transient launch failures and non-finite logits re-queue
+  the affected requests at the queue *front* with exponential backoff
+  (``retry_backoff_ms * 2**(attempt-1)``) instead of crashing the engine;
+  a request past its deadline or retry budget retires as **expired**
+  (``req.expired`` + ``expire_reason``, counted in ``images_expired``,
+  never silently dropped).  The accounting invariant is
+  ``submitted == completed + shed + expired`` once drained.
+* **Health monitor + circuit breaker** — retired logits pass a sampled
+  finiteness screen (``screen_sample`` rows); consecutive datapath
+  failures walk healthy -> degraded -> quarantined
+  (:class:`HealthMonitor`), a quarantined engine stops launching (and
+  ``try_submit`` sheds) until a half-open probe succeeds after
+  ``cooldown_ms``.  A hard crash quarantines immediately.
+* **Route degradation ladder** — ``degrade_threshold`` repeated datapath
+  failures on one bucket flip *that bucket's* compiled forward onto the
+  direct route (``use_winograd=False, use_pallas=False`` — the reference
+  datapath every Pallas kernel is bit-checked against), recorded as a
+  degradation event rather than an outage; other buckets keep the fast
+  route.
+
+No Python exception escapes :meth:`step`: injected and real launch/device
+errors are converted into the retry/health machinery above.
+
 Request lifecycle: submit() -> queued -> admitted (slots held for one
 bucketed forward) -> staged (H2D in flight) -> computing -> finished
-(logits + argmax label on the request).  Metrics mirror Tables 5-6:
-img/s, average occupancy, per-bucket batch counts, p50/p90/p99 request
-latency — plus the fleet-serving companions: shed counts, within-SLO
-completions, and goodput img/s.
+(logits + argmax label on the request), with shed / expired as the
+reported non-success terminals and retry loops back to queued.  Metrics
+mirror Tables 5-6: img/s, average occupancy, per-bucket batch counts,
+p50/p90/p99 request latency — plus the fleet-serving companions: shed /
+expired / retried counts, within-SLO completions, goodput img/s, health
+state, and the accounting block.
 """
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,8 +96,10 @@ import numpy as np
 from ..models import model_for
 from ..parallel.sharding import (batch_sharding, data_parallel_mesh,
                                  replicated_sharding)
+from .faults import EngineCrash, FaultInjector, TransientLaunchError
+from .health import QUARANTINED, HealthMonitor
 from .policy import AdmissionController, DynamicBucketPolicy, bucket_sizes
-from .scheduler import LatencyTracker, SlotScheduler
+from .scheduler import DrainTimeout, LatencyTracker, SlotScheduler
 
 __all__ = ["CnnEngine", "CnnServeConfig", "ImageRequest", "bucket_sizes"]
 
@@ -78,17 +117,30 @@ class CnnServeConfig:
     policy_window: int = 64         # sliding window the policy reacts to
     admission_slack: float = 1.0    # shed when est. wait > slo_ms * slack
     latency_window: int = 4096      # LatencyTracker ring size (bounded)
+    # -- fault tolerance (serving/faults.py + serving/health.py) --------
+    retry_backoff_ms: float = 1.0   # exponential retry backoff base
+    screen_sample: int = 8          # retired rows finiteness-screened (0=off)
+    fail_threshold: int = 3         # consecutive failures -> degraded
+    quarantine_threshold: int = 6   # consecutive failures -> quarantined
+    cooldown_ms: float = 250.0      # circuit-breaker half-open cooldown
+    degrade_threshold: int = 3      # per-bucket failures -> direct-route flip
 
 
 @dataclass
 class ImageRequest:
     image: np.ndarray           # (H, W, C) host-side float image
     uid: int = field(default_factory=itertools.count().__next__)
+    # -- fault-tolerance contract --------------------------------------
+    deadline_ms: Optional[float] = None  # relative to submit; None = none
+    retries: int = 2            # transient-failure re-launch budget
+    attempts: int = 0           # failed launch/screen attempts consumed
     # outputs
     logits: Optional[np.ndarray] = None   # (num_classes,) on completion
     label: Optional[int] = None           # argmax of logits
     done: bool = False
     shed: bool = False          # rejected by admission control (never served)
+    expired: bool = False       # deadline or retry budget exhausted
+    expire_reason: Optional[str] = None   # "deadline" | "retries"
     t_submit: float = 0.0
     t_done: float = 0.0
 
@@ -107,7 +159,7 @@ class _Group:
 
 class CnnEngine:
     def __init__(self, cfg, scfg: CnnServeConfig, *, params=None,
-                 seed: int = 0):
+                 seed: int = 0, faults: Optional[FaultInjector] = None):
         self.cfg, self.scfg = cfg, scfg
         self.mod = model_for(cfg)
         if params is None:
@@ -132,6 +184,32 @@ class CnnEngine:
             scfg.slo_ms, slack=scfg.admission_slack)
             if scfg.slo_ms and scfg.admission else None)
 
+        # fault-tolerance plane: seeded chaos hooks (None = zero-overhead
+        # pass-through) + the health state machine / circuit breaker
+        self.faults = faults
+        self.health = HealthMonitor(
+            fail_threshold=scfg.fail_threshold,
+            quarantine_threshold=scfg.quarantine_threshold,
+            cooldown_ms=scfg.cooldown_ms)
+
+        # route degradation ladder: the direct-route twin config this
+        # engine falls back to per bucket after repeated datapath failures
+        # (None when the model has no route knobs or already runs direct)
+        uw = getattr(cfg, "use_winograd", None)
+        if uw is None:
+            self._primary_route, self._cfg_direct = "n/a", None
+        else:
+            self._primary_route = (
+                "pallas" if getattr(cfg, "use_pallas", False)
+                else ("winograd" if uw else "direct"))
+            self._cfg_direct = (
+                dataclasses.replace(cfg, use_winograd=False,
+                                    use_pallas=False)
+                if self._primary_route != "direct" else None)
+        self._degraded: Set[int] = set()
+        self._bucket_failures: Dict[int, int] = {}
+        self.degradations: List[dict] = []
+
         # tuned launch plans from the measured autotuner's persisted cache
         # (results/plans/) — loaded at build, keyed to this config's layer
         # geometries on the current backend; {} runs the defaults.  Plans
@@ -148,7 +226,10 @@ class CnnEngine:
         mod, ccfg, plans = self.mod, cfg, self.plans
         self._hoist = hasattr(mod, "pack_serving_slabs")
         self._packed: Dict[int, dict] = {}
+        self._packed_direct: Dict[int, dict] = {}
         self._compiled: set = set()
+        self._compiled_direct: set = set()
+        self._apply_direct = None       # built lazily on first degradation
         donate = (2,) if jax.default_backend() in ("gpu", "tpu") else ()
         if self._hoist:
             self._apply = jax.jit(
@@ -161,12 +242,20 @@ class CnnEngine:
                 else (lambda p, x: mod.apply(p, ccfg, x)))
         self._staged: Deque[_Group] = deque()
         self._compute: Deque[_Group] = deque()
+        # retry holding pen: (ready_time, [reqs]) groups waiting out their
+        # exponential backoff before re-queueing at the queue front
+        self._retry: List[Tuple[float, List[ImageRequest]]] = []
         self.latency = LatencyTracker(window=scfg.latency_window)
+        self.images_submitted = 0
         self.images_completed = 0
         self.images_shed = 0
+        self.images_expired = 0
+        self.images_retried = 0
         self.images_within_slo = 0
         self.batches_run = 0
+        self.batches_failed = 0
         self.bucket_counts: Dict[int, int] = {}
+        self.shed_reasons: Dict[str, int] = {}
         self._t_serve = 0.0
 
     def arm_slo(self, slo_ms: Optional[float], *, dynamic_buckets: bool =
@@ -178,7 +267,6 @@ class CnnEngine:
         attachable after warmup.  Compiled buckets, packed slabs, and
         counters are all kept; only the policy objects are rebuilt.
         """
-        import dataclasses
         scfg = dataclasses.replace(self.scfg, slo_ms=slo_ms,
                                    dynamic_buckets=dynamic_buckets,
                                    admission=admission)
@@ -190,6 +278,12 @@ class CnnEngine:
         self.admission = (AdmissionController(
             scfg.slo_ms, slack=scfg.admission_slack)
             if scfg.slo_ms and scfg.admission else None)
+
+    def arm_faults(self, injector: Optional[FaultInjector]):
+        """Attach (or detach) a fault injector on a live engine — chaos
+        runs arm after jit warmup so the fault schedule's opportunity
+        indices count serving launches, not compiles."""
+        self.faults = injector
 
     # ------------------------------------------------------------------
     @property
@@ -211,26 +305,43 @@ class CnnEngine:
         and queues the request."""
         self._validate(req)
         req.t_submit = time.perf_counter()
+        self.images_submitted += 1
         self.sched.submit(req)
 
     def backlog_images(self) -> int:
-        """Images ahead of a newcomer: queued + staged + computing."""
+        """Images ahead of a newcomer: queued + staged + computing +
+        waiting out a retry backoff."""
         return (len(self.sched.queue)
                 + sum(len(g.reqs) for g in self._staged)
-                + sum(len(g.reqs) for g in self._compute))
+                + sum(len(g.reqs) for g in self._compute)
+                + self.retry_pending)
+
+    def shed(self, req: ImageRequest, reason: str = "admission"):
+        """Mark + count one shed request (reported, never dropped): the
+        request still figures in ``submitted`` so the accounting invariant
+        ``submitted == completed + shed + expired`` closes."""
+        req.shed = True
+        self.images_submitted += 1
+        self.images_shed += 1
+        self.shed_reasons[reason] = self.shed_reasons.get(reason, 0) + 1
 
     def try_submit(self, req: ImageRequest) -> bool:
         """Admission-controlled submit: returns False (and marks
-        ``req.shed``) when the SLO controller estimates the queue can no
-        longer absorb the request; shed requests are counted in
-        ``images_shed`` and never occupy a slot."""
+        ``req.shed``) when the engine is quarantined or the SLO controller
+        estimates the queue can no longer absorb the request before its
+        budget (SLO or the request's own deadline); shed requests are
+        counted in ``images_shed`` and never occupy a slot."""
         self._validate(req)
+        if self.health.state == QUARANTINED:
+            self.shed(req, "unhealthy")
+            return False
         if (self.admission is not None
-                and not self.admission.admit(self.backlog_images())):
-            req.shed = True
-            self.images_shed += 1
+                and not self.admission.admit(self.backlog_images(),
+                                             deadline_ms=req.deadline_ms)):
+            self.shed(req, "admission")
             return False
         req.t_submit = time.perf_counter()
+        self.images_submitted += 1
         self.sched.submit(req)
         return True
 
@@ -267,15 +378,169 @@ class CnnEngine:
             self._packed[bucket] = packed
         return self._packed[bucket]
 
+    # -- fault-tolerance internals -------------------------------------
+    def _is_expired(self, req: ImageRequest, now: float) -> bool:
+        return (req.deadline_ms is not None
+                and now >= req.t_submit + req.deadline_ms / 1e3)
+
+    def _retire_expired(self, req: ImageRequest, reason: str):
+        """Terminal non-success retirement: reported via ``req.expired``
+        and ``images_expired`` — never silently dropped."""
+        req.expired = True
+        req.expire_reason = reason
+        self.images_expired += 1
+
+    def _schedule_retry(self, reqs: List[ImageRequest], now: float):
+        if not reqs:
+            return
+        attempt = min(r.attempts for r in reqs)
+        delay_s = (self.scfg.retry_backoff_ms
+                   * (2 ** max(attempt - 1, 0))) / 1e3
+        self._retry.append((now + delay_s, reqs))
+        self.images_retried += len(reqs)
+
+    def _fail_one(self, slot: int, req: ImageRequest, now: float,
+                  retry: List[ImageRequest]):
+        """Disposition one request after a failed attempt: slot freed
+        (no completion counted), then retry / expire by budget."""
+        self.sched.release(slot)
+        req.attempts += 1
+        if self._is_expired(req, now):
+            self._retire_expired(req, "deadline")
+        elif req.attempts > req.retries:
+            self._retire_expired(req, "retries")
+        else:
+            retry.append(req)
+
+    def _requeue_group(self, g: _Group):
+        """A whole-group launch failure: free the slots and send every
+        request through the retry/expiry disposition with backoff."""
+        now = time.perf_counter()
+        retry: List[ImageRequest] = []
+        for slot, req in zip(g.slots, g.reqs):
+            self._fail_one(slot, req, now, retry)
+        self._schedule_retry(retry, now)
+
+    def _pump_retries(self):
+        """Move retry groups whose backoff has elapsed to the queue front
+        (they keep FIFO seniority); expire any that ran out of deadline
+        while waiting."""
+        if not self._retry:
+            return
+        now = time.perf_counter()
+        ready = [e for e in self._retry if e[0] <= now]
+        if not ready:
+            return
+        self._retry = [e for e in self._retry if e[0] > now]
+        for _, reqs in sorted(ready, key=lambda e: e[0], reverse=True):
+            live = []
+            for r in reqs:
+                if self._is_expired(r, now):
+                    self._retire_expired(r, "deadline")
+                else:
+                    live.append(r)
+            if live:
+                self.sched.requeue(live)
+
+    def _note_datapath_failure(self, bucket: int, kind: str):
+        """Count per-bucket datapath failures toward the degradation
+        ladder: ``degrade_threshold`` repeated failures flip that bucket's
+        forward onto the direct route (recorded, not an outage)."""
+        if self._cfg_direct is None or bucket in self._degraded:
+            return
+        n = self._bucket_failures.get(bucket, 0) + 1
+        self._bucket_failures[bucket] = n
+        if n >= self.scfg.degrade_threshold:
+            self._degraded.add(bucket)
+            self.degradations.append({
+                "bucket": bucket, "reason": kind, "failures": n,
+                "from": self._primary_route, "to": "direct"})
+
+    def _direct_apply(self):
+        """The degraded-bucket forward: same model, direct route (the
+        bit-checked reference datapath), no tuned plans — compiled lazily
+        on the first degradation."""
+        if self._apply_direct is None:
+            mod, cfg_d = self.mod, self._cfg_direct
+            if self._hoist:
+                self._apply_direct = jax.jit(
+                    lambda p, slabs, x: mod.apply(p, cfg_d, x, packed=slabs))
+            else:
+                self._apply_direct = jax.jit(
+                    lambda p, x: mod.apply(p, cfg_d, x))
+        return self._apply_direct
+
+    def _slabs_direct(self, bucket: int):
+        if bucket not in self._packed_direct:
+            packed = self.mod.pack_serving_slabs(self.params,
+                                                 self._cfg_direct, bucket)
+            if self.mesh is not None:
+                packed = jax.device_put(packed,
+                                        replicated_sharding(self.mesh))
+            self._packed_direct[bucket] = packed
+        return self._packed_direct[bucket]
+
+    def _screen(self, logits: np.ndarray) -> np.ndarray:
+        """Sampled finiteness screen on retired logits: True = row may be
+        served.  ``screen_sample`` rows are checked (all rows when the
+        sample covers the group); a NaN/Inf row is never served — the
+        request retries from its pristine host image instead."""
+        n = len(logits)
+        ok = np.ones(n, bool)
+        k = self.scfg.screen_sample
+        if not n or k <= 0:
+            return ok
+        idx = (np.arange(n) if k >= n
+               else np.unique(np.linspace(0, n - 1, k).astype(int)))
+        ok[idx] = np.isfinite(logits[idx].astype(np.float32)).all(axis=1)
+        return ok
+
+    def _quarantine_purge(self):
+        """While the circuit is open: unstage held groups (slots freed,
+        requests back to the queue front — they re-stage after recovery)
+        and expire overdue queued requests so a quarantined engine still
+        drains instead of hoarding work."""
+        now = time.perf_counter()
+        while self._staged:
+            g = self._staged.popleft()
+            live = []
+            for slot, req in zip(g.slots, g.reqs):
+                self.sched.release(slot)
+                if self._is_expired(req, now):
+                    self._retire_expired(req, "deadline")
+                else:
+                    live.append(req)
+            if live:
+                self.sched.requeue(live)
+        q = self.sched.queue
+        for _ in range(len(q)):         # stable full rotation
+            r = q.popleft()
+            if self._is_expired(r, now):
+                self._retire_expired(r, "deadline")
+            else:
+                q.append(r)
+
+    # -- pipeline ------------------------------------------------------
     def _stage(self):
-        """Admit queued requests into free slots and start their H2D copies."""
+        """Admit queued requests into free slots and start their H2D copies.
+        Requests already past their deadline at admission retire as
+        expired instead of burning a forward."""
         while (self.sched.queue and
                len(self._staged) + len(self._compute) < self.scfg.staging_depth):
             group = self.sched.admit(limit=self.scfg.max_batch)
             if not group:
                 break                                   # no free slots
-            slots = [s for s, _ in group]
-            reqs = [r for _, r in group]
+            now = time.perf_counter()
+            slots, reqs = [], []
+            for s, r in group:
+                if self._is_expired(r, now):
+                    self.sched.release(s)
+                    self._retire_expired(r, "deadline")
+                else:
+                    slots.append(s)
+                    reqs.append(r)
+            if not reqs:
+                continue
             if self.policy is not None:
                 self.policy.observe_admit(len(reqs))
             bucket = self.bucket_for(len(reqs))
@@ -283,31 +548,88 @@ class CnnEngine:
             buf = np.zeros((bucket, h, w, c), self._buf_dtype)
             for i, r in enumerate(reqs):
                 buf[i] = r.image
+            if self.faults is not None and self.faults.fire("stage.corrupt"):
+                # corrupt only the staged copy — req.image stays pristine,
+                # so the retry after the finiteness screen re-stages clean
+                buf[0] = np.nan
             self._staged.append(_Group(slots, reqs, bucket, self._put(buf)))
 
     def _launch(self):
-        """Dispatch the forward pass for the oldest staged group (async)."""
-        if self._staged:
-            g = self._staged.popleft()
-            g.first_compile = g.bucket not in self._compiled
-            self._compiled.add(g.bucket)
-            g.t_launch = time.perf_counter()
-            if self._hoist:
+        """Dispatch the forward pass for the oldest staged group (async).
+        Launch failures — injected or real — never escape: the group
+        re-queues with backoff and the health monitor is fed."""
+        if not self._staged:
+            return
+        g = self._staged.popleft()
+        degraded = g.bucket in self._degraded
+        compiled = self._compiled_direct if degraded else self._compiled
+        g.first_compile = g.bucket not in compiled
+        g.t_launch = time.perf_counter()
+        try:
+            if self.faults is not None:
+                if self.faults.fire("launch.crash"):
+                    raise EngineCrash("injected hard engine crash")
+                if self.faults.fire("launch.transient"):
+                    raise TransientLaunchError(
+                        "injected transient launch failure "
+                        "(RESOURCE_EXHAUSTED)")
+            if degraded:
+                if self._hoist:
+                    g.logits = self._direct_apply()(
+                        self.params, self._slabs_direct(g.bucket), g.images)
+                else:
+                    g.logits = self._direct_apply()(self.params, g.images)
+            elif self._hoist:
                 g.logits = self._apply(self.params, self._slabs(g.bucket),
                                        g.images)
             else:
                 g.logits = self._apply(self.params, g.images)
-            self._compute.append(g)
+        except EngineCrash as e:
+            self.batches_failed += 1
+            self.health.force_quarantine(f"crash: {e}")
+            self._note_datapath_failure(g.bucket, "crash")
+            self._requeue_group(g)
+            return
+        except Exception:       # transient injected or real launch error
+            self.batches_failed += 1
+            self.health.record_failure("launch")
+            self._note_datapath_failure(g.bucket, "launch")
+            self._requeue_group(g)
+            return
+        compiled.add(g.bucket)
+        self._compute.append(g)
 
     def _finish_oldest(self):
-        """Block on the oldest computed group and retire its requests."""
+        """Block on the oldest computed group and retire its requests.
+        Retired logits pass the sampled finiteness screen; bad rows retry
+        (never served), clean rows retire normally."""
         if not self._compute:
             return
         g = self._compute.popleft()
-        logits = np.asarray(jax.device_get(g.logits))[: len(g.reqs)]
+        try:
+            logits = np.asarray(jax.device_get(g.logits))[: len(g.reqs)]
+        except Exception:       # async device error surfaces at fetch
+            self.batches_failed += 1
+            self.health.record_failure("device")
+            self._note_datapath_failure(g.bucket, "device")
+            self._requeue_group(g)
+            return
+        if self.faults is not None:
+            spec = self.faults.fire("retire.latency")
+            if spec is not None and spec.delay_ms:
+                time.sleep(spec.delay_ms / 1e3)
+            if self.faults.fire("retire.nonfinite"):
+                logits = np.array(logits)       # own the buffer
+                logits[0] = np.nan
+        ok = self._screen(logits)
         now = time.perf_counter()
         slo_s = (self.scfg.slo_ms or 0.0) / 1e3
-        for slot, req, row in zip(g.slots, g.reqs, logits):
+        n_good = 0
+        retry: List[ImageRequest] = []
+        for slot, req, row, good in zip(g.slots, g.reqs, logits, ok):
+            if not good:
+                self._fail_one(slot, req, now, retry)
+                continue
             req.logits = row
             req.label = int(row.argmax())
             req.done = True
@@ -319,41 +641,103 @@ class CnnEngine:
             if self.policy is not None:
                 self.policy.observe_latency(lat)
             self.sched.retire(slot)
+            n_good += 1
+        self._schedule_retry(retry, now)
+        if n_good == len(g.reqs):
+            self.health.record_ok()
+            self._bucket_failures[g.bucket] = 0
+        else:
+            self.health.record_failure("nonfinite")
+            self._note_datapath_failure(g.bucket, "nonfinite")
         # service-time EWMA feeds load shedding; a first-compile batch
         # carries the jit trace and would poison the estimate
-        if self.admission is not None and not g.first_compile:
-            self.admission.observe_batch(len(g.reqs), now - g.t_launch)
+        if self.admission is not None and not g.first_compile and n_good:
+            self.admission.observe_batch(n_good, now - g.t_launch)
         if self.policy is not None:
             self.policy.maybe_resize()
-        self.images_completed += len(g.reqs)
+        self.images_completed += n_good
         self.batches_run += 1
         self.bucket_counts[g.bucket] = self.bucket_counts.get(g.bucket, 0) + 1
 
     def step(self):
-        """One tick: stage ahead (H2D), launch oldest staged, retire oldest
-        computed — so transfer, compute, and host retirement overlap."""
+        """One tick: pump elapsed retries, stage ahead (H2D), launch the
+        oldest staged, retire the oldest computed — transfer, compute, and
+        host retirement overlap.  Under quarantine the circuit is open:
+        nothing launches except the half-open probe after ``cooldown_ms``,
+        and queued work drains via deadline expiry.  No Python exception
+        escapes this method for launch/device failures — they feed the
+        retry + health machinery instead."""
         t0 = time.perf_counter()
-        self._stage()
-        self._launch()
+        self._pump_retries()
+        if self.health.state == QUARANTINED:
+            self._quarantine_purge()
+            if (self.sched.queue
+                    and len(self._staged) + len(self._compute)
+                    < self.scfg.staging_depth
+                    and self.health.allow_launch()):
+                self._stage()
+                if self._staged:
+                    self._launch()              # the half-open probe
+                else:
+                    self.health.cancel_probe()  # nothing admissible
+        else:
+            self._stage()
+            self._launch()
         self._finish_oldest()
         self._t_serve += time.perf_counter() - t0
 
-    def run_until_done(self, max_steps: int = 100_000):
+    @property
+    def retry_pending(self) -> int:
+        return sum(len(rs) for _, rs in self._retry)
+
+    @property
+    def drained(self) -> bool:
+        """No queued, staged, computing, or backoff-pending work."""
+        return (self.sched.idle and not self._staged and not self._compute
+                and not self._retry)
+
+    def drain_report(self) -> dict:
+        return {
+            "drained": self.drained,
+            "queued": len(self.sched.queue),
+            "staged": sum(len(g.reqs) for g in self._staged),
+            "computing": sum(len(g.reqs) for g in self._compute),
+            "retry_pending": self.retry_pending,
+            "occupancy": self.sched.occupancy,
+            "health": self.health.state,
+        }
+
+    def run_until_done(self, max_steps: int = 100_000) -> dict:
+        """Step until drained; returns the (empty) drain report.  Raises
+        :class:`DrainTimeout` — with the report attached — if ``max_steps``
+        elapse with work still in flight, so a hung engine fails loudly
+        instead of silently vanishing requests."""
         for _ in range(max_steps):
-            if self.sched.idle and not self._staged and not self._compute:
-                break
+            if self.drained:
+                return self.drain_report()
             self.step()
+        if self.drained:
+            return self.drain_report()
+        report = self.drain_report()
+        raise DrainTimeout(
+            f"engine not drained after {max_steps} steps: {report}", report)
 
     def reset_metrics(self):
         """Zero throughput/latency counters (e.g. after jit warmup) without
-        touching queue, slots, compiled buckets, or the packed-slab and
-        admission state (a warmed service-time estimate is kept)."""
+        touching queue, slots, compiled buckets, health state, or the
+        packed-slab and admission state (a warmed service-time estimate is
+        kept)."""
         self.latency = LatencyTracker(window=self.scfg.latency_window)
+        self.images_submitted = 0
         self.images_completed = 0
         self.images_shed = 0
+        self.images_expired = 0
+        self.images_retried = 0
         self.images_within_slo = 0
         self.batches_run = 0
+        self.batches_failed = 0
         self.bucket_counts = {}
+        self.shed_reasons = {}
         self._t_serve = 0.0
 
     # ------------------------------------------------------------------
@@ -371,13 +755,35 @@ class CnnEngine:
                 else self.images_completed)
         return good / self._t_serve
 
+    def accounting(self) -> dict:
+        """The fault-tolerance invariant, live: every submitted image is
+        completed, shed, expired, or still in flight — nothing vanishes.
+        Once drained, ``submitted == completed + shed + expired``."""
+        in_flight = (len(self.sched.queue)
+                     + sum(len(g.reqs) for g in self._staged)
+                     + sum(len(g.reqs) for g in self._compute)
+                     + self.retry_pending)
+        accounted = (self.images_completed + self.images_shed
+                     + self.images_expired + in_flight)
+        return {
+            "submitted": self.images_submitted,
+            "completed": self.images_completed,
+            "shed": self.images_shed,
+            "expired": self.images_expired,
+            "in_flight": in_flight,
+            "balanced": self.images_submitted == accounted,
+        }
+
     def stats(self) -> dict:
         return {
             "images_completed": self.images_completed,
             "images_shed": self.images_shed,
+            "images_expired": self.images_expired,
+            "images_retried": self.images_retried,
             "images_within_slo": (self.images_within_slo
                                   if self.scfg.slo_ms else None),
             "batches_run": self.batches_run,
+            "batches_failed": self.batches_failed,
             "avg_occupancy": (self.images_completed / self.batches_run
                               if self.batches_run else 0.0),
             "bucket_counts": dict(sorted(self.bucket_counts.items())),
@@ -387,4 +793,10 @@ class CnnEngine:
             "goodput_imgs_per_s": self.goodput_imgs_per_s,
             "latency_ms": self.latency.percentiles_ms(),
             "tuned_layers": sorted(self.plans),
+            "health": self.health.stats(),
+            "shed_reasons": dict(self.shed_reasons),
+            "degraded_buckets": sorted(self._degraded),
+            "degradations": list(self.degradations),
+            "faults": self.faults.summary() if self.faults else None,
+            "accounting": self.accounting(),
         }

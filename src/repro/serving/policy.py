@@ -144,6 +144,14 @@ class AdmissionController:
             return 0.0
         return backlog_images * self.t_img_ms
 
-    def admit(self, backlog_images: int) -> bool:
-        return (self.estimated_wait_ms(backlog_images)
-                <= self.slo_ms * self.slack)
+    def admit(self, backlog_images: int,
+              deadline_ms: Optional[float] = None) -> bool:
+        """Admit unless the estimated queue wait already busts the budget.
+        A request-level ``deadline_ms`` tightens the budget to
+        ``min(slo * slack, deadline)``: a request that would expire just
+        waiting is shed at the door (reported) instead of burning a slot
+        and retiring as expired after wasting service time."""
+        budget = self.slo_ms * self.slack
+        if deadline_ms is not None:
+            budget = min(budget, deadline_ms)
+        return self.estimated_wait_ms(backlog_images) <= budget

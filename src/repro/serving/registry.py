@@ -13,15 +13,21 @@ the models' transfers and forwards interleave on the shared device queue.
 
 Front-door semantics: ``submit(model, req)`` routes through the target
 engine's admission control (``try_submit``) — a shed request is reported to
-the caller (False + ``req.shed``), never dropped on the floor.  ``stats()``
-reports the per-model Tables 5-6 metrics plus fleet aggregates (img/s,
-goodput, shed counts, worst-model p99).
+the caller (False + ``req.shed``), never dropped on the floor, and a
+*quarantined* engine (health circuit open) sheds at the front door rather
+than queueing work it cannot launch.  ``stats()`` reports the per-model
+Tables 5-6 metrics plus fleet aggregates (img/s, goodput, shed/expired
+counts, worst-model p99, per-model health states).  ``run_until_done``
+raises :class:`~repro.serving.scheduler.DrainTimeout` with a per-engine
+drain report when the fleet cannot drain within its step budget.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional
 
 from .cnn import CnnEngine, CnnServeConfig, ImageRequest
+from .faults import FaultInjector
+from .scheduler import DrainTimeout
 
 
 class ModelRegistry:
@@ -38,7 +44,8 @@ class ModelRegistry:
         return sum(e.sched.n_slots for e in self.engines.values())
 
     def register(self, name: str, cfg, scfg: CnnServeConfig, *, params=None,
-                 seed: int = 0) -> CnnEngine:
+                 seed: int = 0,
+                 faults: Optional[FaultInjector] = None) -> CnnEngine:
         """Build and register one model's engine under ``name``.  Raises
         when the engine's slot pool (``max_batch * staging_depth``) would
         exceed the fleet's remaining device budget — oversubscription must
@@ -53,7 +60,7 @@ class ModelRegistry:
                 f"{self.slot_budget - self.slots_used} of "
                 f"{self.slot_budget} remain; shrink max_batch or "
                 f"staging_depth")
-        eng = CnnEngine(cfg, scfg, params=params, seed=seed)
+        eng = CnnEngine(cfg, scfg, params=params, seed=seed, faults=faults)
         self.engines[name] = eng
         return eng
 
@@ -61,17 +68,19 @@ class ModelRegistry:
         return name in self.engines
 
     def __getitem__(self, name: str) -> CnnEngine:
+        if name not in self.engines:
+            raise KeyError(f"unknown model {name!r}; "
+                           f"registered: {sorted(self.engines)}")
         return self.engines[name]
 
     # -- front door ---------------------------------------------------------
     def submit(self, model: str, req: ImageRequest) -> bool:
         """Route one request to its model's engine through admission
         control; False means shed (``req.shed`` is set and the engine's
-        ``images_shed`` counter incremented)."""
-        if model not in self.engines:
-            raise KeyError(f"unknown model {model!r}; "
-                           f"registered: {sorted(self.engines)}")
-        return self.engines[model].try_submit(req)
+        ``images_shed`` counter incremented).  A quarantined engine sheds
+        at the front door (reason ``"unhealthy"``) — the registry never
+        admits work the health circuit says cannot launch."""
+        return self[model].try_submit(req)
 
     def step(self):
         """One fleet tick: every engine stages, launches, and retires —
@@ -82,14 +91,28 @@ class ModelRegistry:
 
     @property
     def idle(self) -> bool:
-        return all(e.sched.idle and not e._staged and not e._compute
-                   for e in self.engines.values())
+        return all(e.drained for e in self.engines.values())
 
-    def run_until_done(self, max_steps: int = 100_000):
+    def drain_report(self) -> dict:
+        return {name: eng.drain_report()
+                for name, eng in self.engines.items()}
+
+    def run_until_done(self, max_steps: int = 100_000) -> dict:
+        """Step the fleet until every engine drains; returns the per-engine
+        drain report.  Raises :class:`DrainTimeout` (report attached) when
+        requests are still in flight after ``max_steps`` — a hung fleet
+        must fail loudly, not return as if the work vanished."""
         for _ in range(max_steps):
             if self.idle:
-                break
+                return self.drain_report()
             self.step()
+        if self.idle:
+            return self.drain_report()
+        report = self.drain_report()
+        stuck = sorted(n for n, r in report.items() if not r["drained"])
+        raise DrainTimeout(
+            f"fleet not drained after {max_steps} steps; stuck engines: "
+            f"{stuck}", report)
 
     def reset_metrics(self):
         for eng in self.engines.values():
@@ -101,11 +124,20 @@ class ModelRegistry:
         per = {name: eng.stats() for name, eng in self.engines.items()}
         completed = sum(s["images_completed"] for s in per.values())
         shed = sum(s["images_shed"] for s in per.values())
+        expired = sum(s["images_expired"] for s in per.values())
         return {
             "models": per,
             "fleet": {
                 "images_completed": completed,
                 "images_shed": shed,
+                "images_expired": expired,
+                "health": {name: s["health"]["state"]
+                           for name, s in per.items()},
+                "degraded_buckets": {name: s["degraded_buckets"]
+                                     for name, s in per.items()
+                                     if s["degraded_buckets"]},
+                "accounting_balanced": all(s["accounting"]["balanced"]
+                                           for s in per.values()),
                 "imgs_per_s": sum(s["imgs_per_s"] for s in per.values()),
                 "goodput_imgs_per_s": sum(s["goodput_imgs_per_s"]
                                           for s in per.values()),

@@ -16,6 +16,17 @@ from typing import Deque, List, Optional, Tuple
 import numpy as np
 
 
+class DrainTimeout(RuntimeError):
+    """``run_until_done`` exhausted its step budget with work still in
+    flight.  Carries a ``report`` dict (queued/staged/computing/retrying
+    counts per engine) so a hung fleet fails loudly with its state instead
+    of silently vanishing the in-flight requests."""
+
+    def __init__(self, message: str, report: dict):
+        super().__init__(message)
+        self.report = report
+
+
 class SlotScheduler:
     """Fixed slot pool + FIFO admission queue (no device state)."""
 
@@ -34,6 +45,12 @@ class SlotScheduler:
     def submit(self, req) -> None:
         self.queue.append(req)
         self.submitted += 1
+
+    def requeue(self, reqs) -> None:
+        """Return previously admitted requests to the *front* of the queue
+        (retry path: they keep their FIFO seniority) without re-counting
+        them as submitted — each request is submitted exactly once."""
+        self.queue.extendleft(reversed(list(reqs)))
 
     # -- slots --------------------------------------------------------------
     @property
@@ -71,6 +88,15 @@ class SlotScheduler:
         assert req is not None, f"retire of empty slot {slot}"
         self.slot_req[slot] = None
         self.completed += 1
+        return req
+
+    def release(self, slot: int):
+        """Free a slot *without* counting a completion — the retry/expiry
+        path: the request either re-queues or retires as expired, and the
+        completed counter must only ever count served results."""
+        req = self.slot_req[slot]
+        assert req is not None, f"release of empty slot {slot}"
+        self.slot_req[slot] = None
         return req
 
 

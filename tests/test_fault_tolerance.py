@@ -1,0 +1,422 @@
+"""Fault-tolerant serving: seeded injection, deadlines/retries, health
+gating, route degradation, crash/recovery.
+
+The adversarial core mirrors the bit-exactness contract of the serving
+tests: whatever the chaos does — corrupted staging buffers, transient
+launch failures, NaN logits — a request that completes must carry logits
+bit-identical to the fault-free oracle (retries re-stage from the
+pristine host image; degraded buckets serve the bit-checked direct
+route), and a request that cannot complete must retire *reported* (shed
+or expired), never vanish: ``submitted == completed + shed + expired``
+on every drained engine.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint
+from repro.configs import get_config
+from repro.models import alexnet
+from repro.serving import (DEGRADED, HEALTHY, QUARANTINED, AdmissionController,
+                           CnnEngine, CnnServeConfig, DrainTimeout,
+                           EngineCrash, FaultInjector, FaultSpec,
+                           HealthMonitor, ImageRequest, ModelRegistry,
+                           TransientLaunchError, derive_seed)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One reduced config + params + jitted direct-apply oracle."""
+    cfg = get_config("alexnet").reduced()
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    ref = jax.jit(lambda p, x: alexnet.apply(p, cfg, x))
+    return cfg, params, lambda x: np.asarray(ref(params, x))
+
+
+def _images(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(
+        (n, cfg.image_size, cfg.image_size, cfg.in_channels)
+    ).astype(np.float32)
+
+
+def _engine(cfg, params, *, faults=None, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("retry_backoff_ms", 0.01)   # keep test retries snappy
+    return CnnEngine(cfg, CnnServeConfig(**kw), params=params, faults=faults)
+
+
+def _balanced(eng):
+    acc = eng.accounting()
+    return acc["balanced"] and acc["in_flight"] == 0
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: determinism, independence, validation
+# ---------------------------------------------------------------------------
+def test_injector_rejects_unknown_point():
+    with pytest.raises(ValueError, match="unknown fault points"):
+        FaultInjector(0, {"launch.meteor": FaultSpec(rate=1.0)})
+    with pytest.raises(AssertionError):
+        FaultSpec(rate=1.5)
+
+
+def test_injector_explicit_schedule_and_limit():
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(at=(1, 3),
+                                                          limit=1)})
+    hits = [inj.fire("launch.transient") is not None for _ in range(5)]
+    assert hits == [False, True, False, False, False]     # limit=1 capped
+    assert inj.summary()["launch.transient"] == {"opportunities": 5,
+                                                 "fired": 1}
+
+
+def test_injector_streams_independent_of_interleaving():
+    """A point's firing pattern is a pure function of (seed, its own
+    opportunity count) — calls at other points must not perturb it."""
+    spec = {"retire.nonfinite": FaultSpec(rate=0.3),
+            "launch.transient": FaultSpec(rate=0.5)}
+    a, b = FaultInjector(7, spec), FaultInjector(7, spec)
+    pat_a = []
+    for i in range(64):
+        if i % 3 == 0:                       # extra traffic on another point
+            a.fire("launch.transient")
+        pat_a.append(a.fire("retire.nonfinite") is not None)
+    pat_b = [b.fire("retire.nonfinite") is not None for _ in range(64)]
+    assert pat_a == pat_b
+
+
+def test_injector_idle_never_draws_rng():
+    inj = FaultInjector(3, {})               # armed but idle
+    state = inj._rng["stage.corrupt"].bit_generator.state
+    for _ in range(100):
+        assert inj.fire("stage.corrupt") is None
+    assert inj._rng["stage.corrupt"].bit_generator.state == state
+    assert inj.total_fired == 0
+
+
+def test_derive_seed_stable_and_distinct():
+    assert derive_seed(0, "alexnet") == derive_seed(0, "alexnet")
+    assert derive_seed(0, "alexnet") != derive_seed(0, "vgg16")
+    assert derive_seed(0, "alexnet") != derive_seed(1, "alexnet")
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor state machine
+# ---------------------------------------------------------------------------
+def test_health_ladder_and_recovery():
+    h = HealthMonitor(fail_threshold=2, quarantine_threshold=4,
+                      cooldown_ms=0.0)
+    assert h.state == HEALTHY and h.allow_launch()
+    h.record_failure(); h.record_failure()
+    assert h.state == DEGRADED and h.allow_launch()
+    h.record_ok()
+    assert h.state == HEALTHY                 # clean batch recovers
+    for _ in range(4):
+        h.record_failure()
+    assert h.state == QUARANTINED
+    assert h.allow_launch()                   # cooldown 0 -> half-open probe
+    assert not h.allow_launch()               # only ONE probe in flight
+    h.record_failure()                        # probe failed: re-armed
+    assert h.state == QUARANTINED
+    assert h.allow_launch()                   # next probe
+    h.record_ok()                             # probe succeeded
+    assert h.state == HEALTHY
+    assert any(e == (QUARANTINED, HEALTHY, "probe-ok") for e in h.events)
+
+
+def test_health_force_quarantine():
+    h = HealthMonitor(cooldown_ms=1e6)
+    h.force_quarantine("crash: boom")
+    assert h.state == QUARANTINED and not h.allow_launch()
+
+
+# ---------------------------------------------------------------------------
+# deadlines + retries on the engine
+# ---------------------------------------------------------------------------
+def test_transient_launch_retries_then_bitmatch(served):
+    """One injected launch failure: the group re-queues with backoff and
+    the retried serve returns logits bit-identical to the oracle."""
+    cfg, params, ref = served
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(at=(0,))})
+    eng = _engine(cfg, params, faults=inj)
+    imgs = _images(cfg, 3, seed=1)
+    reqs = [ImageRequest(image=imgs[i]) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done and r.attempts == 1 for r in reqs)
+    assert np.array_equal(np.stack([r.logits for r in reqs]), ref(imgs))
+    assert eng.images_retried == 3 and eng.batches_failed == 1
+    assert _balanced(eng)
+
+
+def test_retry_budget_exhaustion_expires_reported(served):
+    """Permanent launch failure + bounded retries: every request retires
+    as expired (reason recorded), nothing vanishes, no exception escapes
+    step()."""
+    cfg, params, _ = served
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(rate=1.0)})
+    eng = _engine(cfg, params, faults=inj, quarantine_threshold=10 ** 6)
+    reqs = [ImageRequest(image=im, retries=1) for im in _images(cfg, 3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.expired and r.expire_reason == "retries" and not r.done
+               for r in reqs)
+    assert eng.images_expired == 3 and eng.images_completed == 0
+    assert _balanced(eng)
+
+
+def test_deadline_expiry_at_admission(served):
+    """A request already past its deadline when admitted never burns a
+    forward — it retires expired with reason 'deadline'."""
+    cfg, params, _ = served
+    eng = _engine(cfg, params)
+    late = ImageRequest(image=_images(cfg, 1)[0], deadline_ms=0.0)
+    ok = ImageRequest(image=_images(cfg, 1, seed=2)[0])
+    eng.submit(late)
+    eng.submit(ok)
+    eng.run_until_done()
+    assert late.expired and late.expire_reason == "deadline" and not late.done
+    assert ok.done
+    assert eng.images_expired == 1 and eng.images_completed == 1
+    assert _balanced(eng)
+
+
+def test_nonfinite_logits_screened_and_retried(served):
+    """Injected NaN in retired logits: the bad row is never served —
+    it retries and the final logits bit-match the oracle."""
+    cfg, params, ref = served
+    inj = FaultInjector(0, {"retire.nonfinite": FaultSpec(at=(0,))})
+    eng = _engine(cfg, params, faults=inj)
+    imgs = _images(cfg, 3, seed=3)
+    reqs = [ImageRequest(image=imgs[i]) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    # rows 1-2 retired from the original clean batch-3 forward; row 0
+    # retried alone, so its oracle is the single-image forward (batch
+    # *size* changes vectorization — only padding within a bucket is
+    # bit-stable)
+    assert np.array_equal(np.stack([r.logits for r in reqs[1:]]),
+                          ref(imgs)[1:])
+    assert np.array_equal(reqs[0].logits, ref(imgs[:1])[0])
+    assert reqs[0].attempts == 1              # only row 0 was corrupted
+    assert eng.images_retried == 1
+    assert _balanced(eng)
+
+
+def test_staging_corruption_recovers_from_pristine_image(served):
+    """stage.corrupt NaNs the staged copy only; req.image survives, the
+    screen catches the poisoned logits, and the retry re-stages clean."""
+    cfg, params, ref = served
+    inj = FaultInjector(0, {"stage.corrupt": FaultSpec(at=(0,))})
+    eng = _engine(cfg, params, faults=inj)
+    imgs = _images(cfg, 2, seed=4)
+    reqs = [ImageRequest(image=imgs[i]) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    # row 1 survived the corrupted batch (batch rows are independent in
+    # AlexNet); row 0 re-staged alone from the pristine req.image
+    assert np.array_equal(reqs[1].logits, ref(imgs)[1])
+    assert np.array_equal(reqs[0].logits, ref(imgs[:1])[0])
+    assert np.isfinite(reqs[0].logits).all()
+    assert _balanced(eng)
+
+
+def test_crash_quarantines_then_probe_recovers(served):
+    """A hard crash opens the circuit: front-door submits shed while
+    quarantined, the half-open probe closes it, queued work completes."""
+    cfg, params, ref = served
+    inj = FaultInjector(0, {"launch.crash": FaultSpec(at=(0,), limit=1)})
+    eng = _engine(cfg, params, faults=inj, cooldown_ms=0.0)
+    imgs = _images(cfg, 2, seed=5)
+    reqs = [ImageRequest(image=imgs[i]) for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.step()                                # crash -> quarantined
+    assert eng.health.state == QUARANTINED
+    shed = ImageRequest(image=imgs[0])
+    assert not eng.try_submit(shed) and shed.shed
+    assert eng.shed_reasons == {"unhealthy": 1}
+    eng.run_until_done()                      # probe launch recovers
+    assert eng.health.state == HEALTHY
+    assert all(r.done for r in reqs)
+    assert np.array_equal(np.stack([r.logits for r in reqs]), ref(imgs))
+    assert any(e["reason"] == "probe-ok"
+               for e in eng.health.stats()["events"])
+    assert _balanced(eng)
+
+
+def test_quarantined_engine_expires_queued_deadlines(served):
+    """While the circuit is open (long cooldown), queued deadline-bearing
+    work drains via expiry instead of hoarding forever."""
+    cfg, params, _ = served
+    inj = FaultInjector(0, {"launch.crash": FaultSpec(at=(0,), limit=1)})
+    eng = _engine(cfg, params, faults=inj, cooldown_ms=1e6)
+    reqs = [ImageRequest(image=im, deadline_ms=5.0, retries=10)
+            for im in _images(cfg, 3, seed=6)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.expired for r in reqs)
+    assert eng.health.state == QUARANTINED
+    assert _balanced(eng)
+
+
+def test_run_until_done_raises_drain_timeout(served):
+    """Work still in flight after max_steps must raise (with a report),
+    never return as if the requests evaporated."""
+    cfg, params, _ = served
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(rate=1.0)})
+    eng = _engine(cfg, params, faults=inj, quarantine_threshold=10 ** 6)
+    for im in _images(cfg, 2, seed=7):
+        eng.submit(ImageRequest(image=im, retries=10 ** 6))
+    with pytest.raises(DrainTimeout) as ei:
+        eng.run_until_done(max_steps=50)
+    assert ei.value.report["retry_pending"] + ei.value.report["queued"] == 2
+    assert not ei.value.report["drained"]
+
+
+# ---------------------------------------------------------------------------
+# route degradation ladder
+# ---------------------------------------------------------------------------
+def test_bucket_degrades_to_direct_route_bitmatch(served):
+    """degrade_threshold repeated datapath failures flip the bucket onto
+    the direct route; served logits bit-match the direct-route oracle and
+    the event is recorded (not an outage)."""
+    cfg, params, _ = served
+    assert cfg.use_winograd                  # primary route is not direct
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(at=(0, 1))})
+    eng = _engine(cfg, params, faults=inj, degrade_threshold=2,
+                  quarantine_threshold=10)
+    imgs = _images(cfg, 3, seed=8)
+    reqs = [ImageRequest(image=imgs[i], retries=3) for i in range(3)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done()
+    assert all(r.done for r in reqs)
+    assert eng.stats()["degraded_buckets"] == [4]
+    ev, = eng.degradations
+    assert ev["from"] == "winograd" and ev["to"] == "direct"
+    cfg_d = dataclasses.replace(cfg, use_winograd=False, use_pallas=False)
+    ref_d = jax.jit(lambda p, x: alexnet.apply(p, cfg_d, x))
+
+    def direct_oracle(ims):
+        # oracle must mirror the serving path: *jitted* direct apply at
+        # the engine's padded bucket shape (eager XLA fuses differently,
+        # and only padding within one compiled shape is bit-stable)
+        padded = np.zeros((4, *ims.shape[1:]), np.float32)
+        padded[: len(ims)] = ims
+        return np.asarray(ref_d(params, padded))[: len(ims)]
+
+    assert np.array_equal(np.stack([r.logits for r in reqs]),
+                          direct_oracle(imgs))
+    # later traffic on the degraded bucket stays on the direct route
+    more = [ImageRequest(image=im) for im in _images(cfg, 3, seed=9)]
+    for r in more:
+        eng.submit(r)
+    eng.run_until_done()
+    assert np.array_equal(np.stack([r.logits for r in more]),
+                          direct_oracle(np.stack([r.image for r in more])))
+    assert _balanced(eng)
+
+
+# ---------------------------------------------------------------------------
+# armed-but-idle parity
+# ---------------------------------------------------------------------------
+def test_armed_idle_injector_bit_identical(served):
+    cfg, params, _ = served
+    imgs = _images(cfg, 5, seed=10)
+    eng = _engine(cfg, params)
+
+    def serve():
+        reqs = [ImageRequest(image=imgs[i]) for i in range(len(imgs))]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        return np.stack([r.logits for r in reqs])
+
+    plain = serve()
+    eng.arm_faults(FaultInjector(seed=11, specs={}))
+    armed = serve()
+    assert np.array_equal(plain, armed)
+
+
+# ---------------------------------------------------------------------------
+# registry: KeyError, health gating, fleet drain report
+# ---------------------------------------------------------------------------
+def test_registry_getitem_unknown_model_lists_registered(served):
+    cfg, params, _ = served
+    reg = ModelRegistry()
+    reg.register("alexnet", cfg, CnnServeConfig(max_batch=2), params=params)
+    with pytest.raises(KeyError, match=r"unknown model 'nope'.*alexnet"):
+        reg["nope"]
+    with pytest.raises(KeyError, match="unknown model"):
+        reg.submit("nope", ImageRequest(image=_images(cfg, 1)[0]))
+
+
+def test_registry_drain_timeout_and_fleet_health(served):
+    cfg, params, _ = served
+    inj = FaultInjector(0, {"launch.transient": FaultSpec(rate=1.0)})
+    reg = ModelRegistry()
+    reg.register("sick", cfg,
+                 CnnServeConfig(max_batch=2, retry_backoff_ms=0.01,
+                                quarantine_threshold=10 ** 6),
+                 params=params, faults=inj)
+    reg.submit("sick", ImageRequest(image=_images(cfg, 1)[0],
+                                    retries=10 ** 6))
+    with pytest.raises(DrainTimeout) as ei:
+        reg.run_until_done(max_steps=40)
+    assert not ei.value.report["sick"]["drained"]
+    assert reg.stats()["fleet"]["health"]["sick"] in (HEALTHY, DEGRADED,
+                                                      QUARANTINED)
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware admission
+# ---------------------------------------------------------------------------
+def test_admission_tightens_budget_to_request_deadline():
+    adm = AdmissionController(slo_ms=100.0)
+    adm.observe_batch(1, 0.010)               # 10 ms per image
+    assert adm.admit(5)                       # 50 ms wait < 100 ms SLO
+    assert not adm.admit(5, deadline_ms=20.0)  # but busts a 20 ms deadline
+    assert adm.admit(1, deadline_ms=20.0)
+
+
+# ---------------------------------------------------------------------------
+# crash/recovery: checkpointed params -> fresh engine -> bit-identical
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_req", [1, 3, 4])
+def test_checkpoint_recovery_bit_identical_serving(served, tmp_path, n_req):
+    """Serve, checkpoint the params, rebuild a *fresh* engine from the
+    restored checkpoint, and assert served logits are bit-identical for
+    every bucket padding — crash recovery must not perturb results."""
+    cfg, params, _ = served
+    imgs = _images(cfg, n_req, seed=20 + n_req)
+
+    def serve(p):
+        eng = _engine(cfg, p)
+        reqs = [ImageRequest(image=imgs[i]) for i in range(n_req)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_done()
+        return np.stack([r.logits for r in reqs])
+
+    before = serve(params)
+    checkpoint.save(str(tmp_path), {"step": 0, "params": params})
+    restored = checkpoint.restore(str(tmp_path),
+                                  {"step": 0, "params": params})
+    after = serve(restored["params"])
+    assert np.array_equal(before, after)
+
+
+def test_error_types_exported():
+    assert issubclass(TransientLaunchError, RuntimeError)
+    assert issubclass(EngineCrash, RuntimeError)
+    assert TransientLaunchError.code == "RESOURCE_EXHAUSTED"
