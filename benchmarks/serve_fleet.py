@@ -625,6 +625,141 @@ def chaos_rows(out: dict) -> list:
 
 
 # ---------------------------------------------------------------------------
+# supervised fleet: multi-process workers, seeded mid-trace kill
+# ---------------------------------------------------------------------------
+def run_supervised(fast: bool, seed: int = 0) -> dict:
+    """Supervised multi-process fleet chaos run: the identical seeded
+    bursty trace served twice by a 2-worker process fleet — once
+    undisturbed, once with a deterministic ``worker.crash`` (SIGKILL of
+    worker w0 at a seeded pump opportunity mid-trace).  The artifact
+    reports goodput and p99 for both, the fleet accounting invariant, and
+    the failover bit-parity check (every failed-over request's logits vs
+    a jitted direct forward at its exact padded bucket shape)."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.serving import (CnnServeConfig, FaultSpec, ImageRequest,
+                               Supervisor, SupervisorConfig, WorkerModel)
+
+    cfg = dataclasses.replace(get_config("alexnet").reduced(), image_size=35)
+    scfg = CnnServeConfig(max_batch=4, retry_backoff_ms=0.5)
+    slo_ms = 300.0                      # process fleet: RPC + pump overhead
+    deadline_ms = 2000.0
+    n_bursts = 8 if fast else 24
+    kill_at = 2 if fast else 8          # w0 pump-opportunity index
+    trace = bursty_trace(n_bursts, 3, 0.015,
+                         np.random.default_rng(seed + 11))
+
+    def run(kill: bool) -> dict:
+        chaos = ({"worker.crash": FaultSpec(at=(kill_at,), limit=1)}
+                 if kill else None)
+        sup = Supervisor(
+            (WorkerModel("alexnet", cfg, scfg, seed=seed),),
+            SupervisorConfig(n_workers=2, max_restarts=2,
+                             checkpoint_on_start=False),
+            seed=seed, chaos=chaos, chaos_workers=("w0",))
+        with sup:
+            reqs = []
+
+            def submit(_):
+                r = ImageRequest(image=image(), deadline_ms=deadline_ms,
+                                 retries=3)
+                reqs.append(r)
+                sup.submit("alexnet", r)
+
+            image = _image_fn(cfg, seed)
+            t0 = time.perf_counter()
+            drive_open_loop([(t, None) for t in trace], submit, sup.step,
+                            lambda: sup.drained, max_wall_s=300.0)
+            sup.run_until_done()
+            wall = time.perf_counter() - t0
+            acc = sup.accounting()
+            lat = _lat_percentiles_ms(reqs)
+            within = sum(1 for r in reqs if r.done
+                         and (r.t_done - r.t_submit) * 1e3 <= slo_ms)
+            parity = (sup.verify_bit_parity() if sup.failover_uids
+                      else {"checked": 0, "mismatched": 0, "bad_uids": []})
+            deaths = [e for e in sup.events if e["event"] == "death"]
+            respawns = [e for e in sup.events
+                        if e["event"] == "spawn" and e["restarts"] > 0]
+            return {
+                "accounting": acc,
+                "imgs_per_s": acc["completed"] / wall if wall else 0.0,
+                "goodput_imgs_per_s": within / wall if wall else 0.0,
+                "latency_ms": lat,
+                "wall_s": wall,
+                "deaths": [{"worker": e["worker"], "reason": e["reason"]}
+                           for e in deaths],
+                "respawns": len(respawns),
+                "failover_parity": parity,
+                "worker_stats": {n: {"restarts": w["restarts"],
+                                     "deaths": w["deaths"],
+                                     "health": w["health"]["state"]}
+                                 for n, w in sup.stats()["workers"].items()},
+            }
+
+    baseline = run(kill=False)
+    killed = run(kill=True)
+    gp = baseline["goodput_imgs_per_s"]
+    return {
+        "meta": {"fast": fast, "seed": seed, "n_workers": 2,
+                 "slo_ms": slo_ms, "deadline_ms": deadline_ms,
+                 "kill_at_opportunity": kill_at,
+                 "trace": {"kind": "bursty", "n_bursts": n_bursts,
+                           "burst": 3}},
+        "baseline": baseline,
+        "killed": killed,
+        "goodput_under_kill_ratio": (
+            killed["goodput_imgs_per_s"] / gp if gp else 0.0),
+    }
+
+
+def check_supervised(out: dict):
+    """CI supervisor-smoke gates: zero lost requests fleet-wide across the
+    worker kill, goodput survives, failed-over logits bit-match."""
+    for name in ("baseline", "killed"):
+        acc = out[name]["accounting"]
+        assert acc["balanced"] and acc["in_flight"] == 0, \
+            f"{name}: fleet accounting does not balance ({acc})"
+        assert acc["submitted"] == (acc["completed"] + acc["shed"]
+                                    + acc["expired"]), \
+            f"{name}: lost requests ({acc})"
+        assert out[name]["goodput_imgs_per_s"] > 0, f"{name}: zero goodput"
+    k = out["killed"]
+    assert k["deaths"], "seeded worker.crash never fired"
+    assert k["accounting"]["failed_over"] > 0, \
+        "kill run failed over no requests (kill landed on an idle worker)"
+    p = k["failover_parity"]
+    assert p["checked"] > 0 and p["mismatched"] == 0, \
+        f"failover bit-parity violated: {p}"
+    print("serve_fleet/SUPERVISED_OK,0,all-gates-passed")
+
+
+def supervised_rows(out: dict) -> list:
+    b, k = out["baseline"], out["killed"]
+    p = k["failover_parity"]
+    return [
+        {"name": "serve_fleet/supervised_baseline",
+         "us_per_call": 1e6 / max(b["imgs_per_s"], 1e-9),
+         "derived": (f"goodput={b['goodput_imgs_per_s']:.1f}"
+                     f";completed={b['accounting']['completed']}"
+                     f";p99_ms={b['latency_ms']['p99']:.1f}")},
+        {"name": "serve_fleet/supervised_killed",
+         "us_per_call": 1e6 / max(k["imgs_per_s"], 1e-9),
+         "derived": (f"goodput={k['goodput_imgs_per_s']:.1f}"
+                     f";completed={k['accounting']['completed']}"
+                     f";failed_over={k['accounting']['failed_over']}"
+                     f";deaths={len(k['deaths'])}"
+                     f";respawns={k['respawns']}"
+                     f";p99_ms={k['latency_ms']['p99']:.1f}"
+                     f";ratio={out['goodput_under_kill_ratio']:.3f}")},
+        {"name": "serve_fleet/supervised_failover_parity", "us_per_call": 0,
+         "derived": (f"checked={p['checked']}"
+                     f";mismatched={p['mismatched']}")},
+    ]
+
+
+# ---------------------------------------------------------------------------
 def check(out: dict):
     """CI gates: goodput flowed, everything drained, accounting closed.
     (The p99 A/B delta is reported in the artifact, not gated — shared CI
@@ -693,12 +828,18 @@ def main(argv=None):
     ap.add_argument("--chaos", action="store_true",
                     help="run the seeded fault-injection harness instead "
                          "(artifact: BENCH_chaos.json)")
+    ap.add_argument("--supervised", action="store_true",
+                    help="run the supervised multi-process fleet chaos "
+                         "harness instead (artifact: BENCH_supervisor.json)")
     ap.add_argument("--out", default=None,
                     help="write the JSON artifact (BENCH_serve_fleet.json)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if args.chaos:
+    if args.supervised:
+        out = run_supervised(args.fast, args.seed)
+        emit(supervised_rows(out))
+    elif args.chaos:
         out = run_chaos(args.fast, args.seed)
         emit(chaos_rows(out))
     else:
@@ -709,7 +850,8 @@ def main(argv=None):
             json.dump(out, f, indent=1, sort_keys=True)
         print(f"serve_fleet/ARTIFACT,0,wrote={args.out}")
     if args.check:
-        (check_chaos if args.chaos else check)(out)
+        (check_supervised if args.supervised else
+         check_chaos if args.chaos else check)(out)
 
 
 if __name__ == "__main__":

@@ -1,2 +1,3 @@
-from .checkpoint import (AsyncCheckpointer, latest_step, restore,  # noqa: F401
-                         save)
+from .checkpoint import (AsyncCheckpointer, CheckpointCorrupt,  # noqa: F401
+                         latest_intact_step, latest_step, restore, save,
+                         verify_step)

@@ -1,10 +1,21 @@
 """Sharded, atomic, async-capable checkpointing.
 
 Layout: <dir>/step_<N>/ with one .npy per pytree leaf + manifest.json
-(tree structure, shapes, dtypes, step).  Writes go to a tmp dir + os.replace
-(atomic on POSIX): a killed writer never corrupts the latest checkpoint.
-Restore re-places leaves onto provided shardings (elastic restarts: the new
-mesh may differ from the one that saved).
+(tree structure, shapes, dtypes, step, per-file crc32).  Writes go to a
+tmp dir + os.replace (atomic on POSIX): a killed writer never corrupts the
+latest checkpoint.  Restore re-places leaves onto provided shardings
+(elastic restarts: the new mesh may differ from the one that saved).
+
+Integrity: every leaf file's crc32 is recorded in the manifest at save
+time, and :func:`restore` verifies it on load (``verify=True``).  A torn
+or bit-rotted *latest* checkpoint — crc mismatch, missing leaf, unreadable
+manifest — makes restore fall back to the newest step that verifies
+intact instead of loading bad weights (the crash-consistent-restart
+contract of the supervised serving fleet); an *explicitly requested* step
+that fails verification raises :class:`CheckpointCorrupt` (the caller
+named it, so silently substituting another step would be worse than
+failing).  Manifests written before checksums existed verify by presence
++ loadability only.
 """
 from __future__ import annotations
 
@@ -14,10 +25,16 @@ import queue
 import re
 import shutil
 import threading
-from typing import Optional
+import warnings
+import zlib
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """An explicitly requested checkpoint step failed integrity checks."""
 
 
 def _leaf_name(path) -> str:
@@ -42,9 +59,11 @@ def save(ckpt_dir: str, state, *, keep: int = 3) -> str:
     for path, leaf in leaves:
         name = _leaf_name(path)
         arr = np.asarray(jax.device_get(leaf))
-        np.save(os.path.join(tmp, name + ".npy"), arr)
+        fpath = os.path.join(tmp, name + ".npy")
+        np.save(fpath, arr)
         manifest["leaves"].append({
-            "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+            "name": name, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "crc32": _file_crc32(fpath)})
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -77,14 +96,80 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _file_crc32(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(chunk)
+            if not buf:
+                return crc
+            crc = zlib.crc32(buf, crc)
+
+
+def verify_step(ckpt_dir: str, step: int) -> Tuple[bool, List[str]]:
+    """Integrity-check one checkpoint step against its manifest.
+
+    Returns ``(ok, problems)``: a readable manifest, every leaf file
+    present, and — when the manifest records checksums — every file's
+    crc32 matching.  Legacy manifests (no ``crc32`` fields) verify by
+    presence only, so old checkpoints remain restorable.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:010d}")
+    problems: List[str] = []
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return False, [f"manifest unreadable: {e}"]
+    for leaf in manifest.get("leaves", []):
+        fpath = os.path.join(d, leaf["name"] + ".npy")
+        if not os.path.exists(fpath):
+            problems.append(f"missing leaf file {leaf['name']}.npy")
+            continue
+        want = leaf.get("crc32")
+        if want is not None and _file_crc32(fpath) != want:
+            problems.append(f"crc mismatch on {leaf['name']}.npy")
+    return not problems, problems
+
+
+def latest_intact_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step that passes :func:`verify_step`, scanning backward past
+    torn/corrupt checkpoints (each skip is warned, never silent)."""
+    for step in sorted(_list_steps(ckpt_dir), reverse=True):
+        ok, problems = verify_step(ckpt_dir, step)
+        if ok:
+            return step
+        warnings.warn(
+            f"checkpoint step {step} under {ckpt_dir} failed integrity "
+            f"checks ({'; '.join(problems)}); falling back to the previous "
+            f"step", stacklevel=2)
+    return None
+
+
 def restore(ckpt_dir: str, state_like, *, step: Optional[int] = None,
-            shardings=None):
+            shardings=None, verify: bool = True):
     """Restore into the structure of ``state_like``.  ``shardings``: optional
-    matching pytree of NamedShardings (elastic reshard on load)."""
+    matching pytree of NamedShardings (elastic reshard on load).
+
+    With ``verify`` (default), leaf files are checked against the
+    manifest's crc32 before any load: when ``step`` is None the newest
+    *intact* checkpoint is restored (a torn latest falls back to the
+    previous step, with a warning); an explicitly requested corrupt step
+    raises :class:`CheckpointCorrupt`.
+    """
     if step is None:
-        step = latest_step(ckpt_dir)
+        step = latest_intact_step(ckpt_dir) if verify else latest_step(
+            ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+            raise FileNotFoundError(
+                f"no {'intact ' if verify else ''}checkpoints under "
+                f"{ckpt_dir}")
+    elif verify:
+        ok, problems = verify_step(ckpt_dir, step)
+        if not ok:
+            raise CheckpointCorrupt(
+                f"checkpoint step {step} under {ckpt_dir} failed integrity "
+                f"checks: {'; '.join(problems)}")
     d = os.path.join(ckpt_dir, f"step_{step:010d}")
     paths, tdef = jax.tree_util.tree_flatten_with_path(state_like)
     shard_leaves = (jax.tree_util.tree_leaves(shardings)

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import json
 import os
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -111,12 +112,40 @@ class PlanCache:
 
     @classmethod
     def load(cls, path) -> "PlanCache":
+        """Load a persisted cache; tolerate a broken one.
+
+        A corrupt/truncated JSON file, an unknown schema version, or a
+        malformed entries table must never take down model build — the
+        cache is a performance hint, and every plan is bit-equal to the
+        default anyway.  Such a file loads as an *empty* cache with a
+        warning (the next autotune run rewrites it atomically).
+        """
         path = os.fspath(path)
         cache = cls(path=path)
-        if os.path.exists(path):
+        if not os.path.exists(path):
+            return cache
+        try:
             with open(path) as f:
                 data = json.load(f)
-            cache.entries = data.get("entries", {})
+        except (OSError, ValueError) as e:
+            warnings.warn(f"plan cache {path} is unreadable ({e}); "
+                          f"falling back to default plans", stacklevel=2)
+            return cache
+        version = data.get("version") if isinstance(data, dict) else None
+        if version != 1:
+            warnings.warn(f"plan cache {path} has unknown schema version "
+                          f"{version!r} (expected 1); falling back to "
+                          f"default plans", stacklevel=2)
+            return cache
+        entries = data.get("entries", {})
+        if not (isinstance(entries, dict)
+                and all(isinstance(e, dict) and "plan" in e and "key" in e
+                        for e in entries.values())):
+            warnings.warn(f"plan cache {path} has a malformed entries "
+                          f"table; falling back to default plans",
+                          stacklevel=2)
+            return cache
+        cache.entries = entries
         return cache
 
     def save(self, path=None) -> str:

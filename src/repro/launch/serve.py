@@ -17,6 +17,7 @@ import numpy as np
 from ..configs import ASSIGNED, CNN_ARCHS, get_config
 from ..serving import (CnnEngine, CnnServeConfig, Engine, FaultInjector,
                        FaultSpec, ImageRequest, Request, ServeConfig,
+                       Supervisor, SupervisorConfig, WorkerModel,
                        derive_seed)
 
 CNN_ROUTES = ("auto", "direct", "winograd", "pallas")
@@ -35,6 +36,63 @@ def apply_cnn_route(cfg, route: str):
         return cfg
     return dataclasses.replace(cfg, use_winograd=route != "direct",
                                use_pallas=route == "pallas")
+
+
+def serve_supervised(cfg, args) -> int:
+    """Supervised multi-process path: N worker processes behind one
+    :class:`Supervisor` (heartbeats, failover re-dispatch, crash-consistent
+    restart).  ``--kill-worker`` SIGKILLs worker w0 mid-run to demonstrate
+    zero-loss failover; ``--chaos`` arms seeded per-worker process chaos."""
+    cfg = apply_cnn_route(cfg, getattr(args, "route", "auto"))
+    scfg = CnnServeConfig(max_batch=args.max_batch,
+                          slo_ms=getattr(args, "slo_ms", None))
+    chaos = None
+    if getattr(args, "chaos", False):
+        chaos = {"worker.crash": FaultSpec(rate=0.02, limit=1),
+                 "worker.stall": FaultSpec(rate=0.05, delay_ms=50.0,
+                                           limit=3)}
+    sup = Supervisor((WorkerModel(cfg.name, cfg, scfg, seed=args.seed),),
+                     SupervisorConfig(n_workers=args.workers,
+                                      checkpoint_on_start=False),
+                     seed=args.seed, chaos=chaos)
+    rng = np.random.default_rng(args.seed)
+    deadline_ms = getattr(args, "deadline_ms", None)
+    reqs = [ImageRequest(image=rng.standard_normal(
+                (cfg.image_size, cfg.image_size, cfg.in_channels))
+                .astype(np.float32),
+                deadline_ms=deadline_ms,
+                retries=getattr(args, "retries", 2))
+            for _ in range(args.requests)]
+    # kill right after an even-indexed submit: round-robin puts those on
+    # w0, so the SIGKILL demonstrably orphans an in-flight request
+    kill_at = ((len(reqs) // 2) & ~1 if getattr(args, "kill_worker", False)
+               else None)
+    with sup:
+        for i, r in enumerate(reqs):
+            sup.submit(cfg.name, r)
+            if kill_at is not None and i == kill_at:
+                sup.kill_worker("w0", "operator:--kill-worker")
+                kill_at = None
+            sup.step()
+        sup.run_until_done()
+        acc = sup.accounting()
+        lat = sup.latency.percentiles_ms()
+        print(f"supervised fleet: {args.workers} workers, "
+              f"completed {acc['completed']}/{acc['submitted']} "
+              f"(shed={acc['shed']} expired={acc['expired']} "
+              f"failed_over={acc['failed_over']}) "
+              f"balanced={'yes' if acc['balanced'] else 'NO'}")
+        print(f"latency p50={lat['p50']:.1f}ms p90={lat['p90']:.1f}ms "
+              f"p99={lat['p99']:.1f}ms")
+        if sup.failover_uids:
+            par = sup.verify_bit_parity()
+            print(f"failover bit-parity: {par['checked']} checked, "
+                  f"{par['mismatched']} mismatched")
+        deaths = [e for e in sup.events if e["event"] == "death"]
+        if deaths:
+            print("worker deaths: " + "; ".join(
+                f"{e['worker']}({e['reason']})" for e in deaths))
+    return acc["completed"]
 
 
 def serve_images(cfg, args) -> int:
@@ -145,6 +203,13 @@ def main():
                     help="CNN path: arm a seeded FaultInjector (transient "
                          "launch failures + non-finite logits) to exercise "
                          "the retry/screen/health machinery")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="CNN path: >0 serves through a Supervisor owning "
+                         "this many worker processes (heartbeats, failover "
+                         "re-dispatch, crash-consistent restart)")
+    ap.add_argument("--kill-worker", action="store_true",
+                    help="CNN path (--workers): SIGKILL worker w0 mid-run "
+                         "to demonstrate zero-loss failover")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -153,7 +218,10 @@ def main():
         cfg = cfg.reduced()
 
     if cfg.family == "cnn":
-        serve_images(cfg, args)
+        if args.workers > 0:
+            serve_supervised(cfg, args)
+        else:
+            serve_images(cfg, args)
         return
 
     scfg = ServeConfig(max_batch=args.max_batch, max_len=args.max_len,

@@ -1,3 +1,5 @@
+from .clock import (MONOTONIC, Clock, MonotonicClock,  # noqa: F401
+                    VirtualClock)
 from .cnn import (CnnEngine, CnnServeConfig, ImageRequest,  # noqa: F401
                   bucket_sizes)
 from .engine import Engine, Request, ServeConfig  # noqa: F401
@@ -9,3 +11,6 @@ from .policy import AdmissionController, DynamicBucketPolicy  # noqa: F401
 from .registry import ModelRegistry  # noqa: F401
 from .scheduler import (DrainTimeout, LatencyTracker,  # noqa: F401
                         SlotScheduler)
+from .supervisor import (Supervisor, SupervisorConfig,  # noqa: F401
+                         WorkerDead, WorkerTimeout)
+from .worker import WorkerModel, WorkerSpec  # noqa: F401

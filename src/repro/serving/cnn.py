@@ -84,7 +84,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Set, Tuple
@@ -96,6 +95,7 @@ import numpy as np
 from ..models import model_for
 from ..parallel.sharding import (batch_sharding, data_parallel_mesh,
                                  replicated_sharding)
+from .clock import MONOTONIC, Clock
 from .faults import EngineCrash, FaultInjector, TransientLaunchError
 from .health import QUARANTINED, HealthMonitor
 from .policy import AdmissionController, DynamicBucketPolicy, bucket_sizes
@@ -143,6 +143,14 @@ class ImageRequest:
     expire_reason: Optional[str] = None   # "deadline" | "retries"
     t_submit: float = 0.0
     t_done: float = 0.0
+    # serving provenance (set at retirement): the padded bucket shape this
+    # request was served at, its row in that batch, and the uids of every
+    # request in the group (row order).  A failover verifier rebuilds the
+    # exact staged buffer from these and bit-checks against the jitted
+    # direct forward at the same padded shape.
+    served_bucket: Optional[int] = None
+    served_row: Optional[int] = None
+    served_group: Optional[Tuple[int, ...]] = None
 
 
 @dataclass
@@ -159,8 +167,13 @@ class _Group:
 
 class CnnEngine:
     def __init__(self, cfg, scfg: CnnServeConfig, *, params=None,
-                 seed: int = 0, faults: Optional[FaultInjector] = None):
+                 seed: int = 0, faults: Optional[FaultInjector] = None,
+                 clock: Optional[Clock] = None):
         self.cfg, self.scfg = cfg, scfg
+        # injectable time source: deadlines, retry backoff, cooldowns, and
+        # the injected latency spike all read this clock, so chaos replays
+        # and timing tests run deterministic + sleep-free on VirtualClock
+        self.clock = clock or MONOTONIC
         self.mod = model_for(cfg)
         if params is None:
             params = self.mod.init(jax.random.PRNGKey(seed), cfg)
@@ -190,7 +203,8 @@ class CnnEngine:
         self.health = HealthMonitor(
             fail_threshold=scfg.fail_threshold,
             quarantine_threshold=scfg.quarantine_threshold,
-            cooldown_ms=scfg.cooldown_ms)
+            cooldown_ms=scfg.cooldown_ms,
+            clock=self.clock)
 
         # route degradation ladder: the direct-route twin config this
         # engine falls back to per bucket after repeated datapath failures
@@ -304,7 +318,7 @@ class CnnEngine:
         """Unconditional submit (no admission control) — validates shape
         and queues the request."""
         self._validate(req)
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.clock.now()
         self.images_submitted += 1
         self.sched.submit(req)
 
@@ -340,7 +354,7 @@ class CnnEngine:
                                              deadline_ms=req.deadline_ms)):
             self.shed(req, "admission")
             return False
-        req.t_submit = time.perf_counter()
+        req.t_submit = self.clock.now()
         self.images_submitted += 1
         self.sched.submit(req)
         return True
@@ -415,7 +429,7 @@ class CnnEngine:
     def _requeue_group(self, g: _Group):
         """A whole-group launch failure: free the slots and send every
         request through the retry/expiry disposition with backoff."""
-        now = time.perf_counter()
+        now = self.clock.now()
         retry: List[ImageRequest] = []
         for slot, req in zip(g.slots, g.reqs):
             self._fail_one(slot, req, now, retry)
@@ -427,7 +441,7 @@ class CnnEngine:
         while waiting."""
         if not self._retry:
             return
-        now = time.perf_counter()
+        now = self.clock.now()
         ready = [e for e in self._retry if e[0] <= now]
         if not ready:
             return
@@ -500,7 +514,7 @@ class CnnEngine:
         requests back to the queue front — they re-stage after recovery)
         and expire overdue queued requests so a quarantined engine still
         drains instead of hoarding work."""
-        now = time.perf_counter()
+        now = self.clock.now()
         while self._staged:
             g = self._staged.popleft()
             live = []
@@ -530,7 +544,7 @@ class CnnEngine:
             group = self.sched.admit(limit=self.scfg.max_batch)
             if not group:
                 break                                   # no free slots
-            now = time.perf_counter()
+            now = self.clock.now()
             slots, reqs = [], []
             for s, r in group:
                 if self._is_expired(r, now):
@@ -564,7 +578,7 @@ class CnnEngine:
         degraded = g.bucket in self._degraded
         compiled = self._compiled_direct if degraded else self._compiled
         g.first_compile = g.bucket not in compiled
-        g.t_launch = time.perf_counter()
+        g.t_launch = self.clock.now()
         try:
             if self.faults is not None:
                 if self.faults.fire("launch.crash"):
@@ -617,16 +631,18 @@ class CnnEngine:
         if self.faults is not None:
             spec = self.faults.fire("retire.latency")
             if spec is not None and spec.delay_ms:
-                time.sleep(spec.delay_ms / 1e3)
+                self.clock.sleep(spec.delay_ms / 1e3)
             if self.faults.fire("retire.nonfinite"):
                 logits = np.array(logits)       # own the buffer
                 logits[0] = np.nan
         ok = self._screen(logits)
-        now = time.perf_counter()
+        now = self.clock.now()
         slo_s = (self.scfg.slo_ms or 0.0) / 1e3
         n_good = 0
         retry: List[ImageRequest] = []
-        for slot, req, row, good in zip(g.slots, g.reqs, logits, ok):
+        group_uids = tuple(r.uid for r in g.reqs)
+        for i, (slot, req, row, good) in enumerate(
+                zip(g.slots, g.reqs, logits, ok)):
             if not good:
                 self._fail_one(slot, req, now, retry)
                 continue
@@ -634,6 +650,11 @@ class CnnEngine:
             req.label = int(row.argmax())
             req.done = True
             req.t_done = now
+            # serving provenance: enough to rebuild the exact padded batch
+            # this row came from (failover bit-parity verification)
+            req.served_bucket = g.bucket
+            req.served_row = i
+            req.served_group = group_uids
             lat = now - req.t_submit
             self.latency.record(lat)
             if slo_s and lat <= slo_s:
@@ -667,7 +688,7 @@ class CnnEngine:
         and queued work drains via deadline expiry.  No Python exception
         escapes this method for launch/device failures — they feed the
         retry + health machinery instead."""
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         self._pump_retries()
         if self.health.state == QUARANTINED:
             self._quarantine_purge()
@@ -684,7 +705,7 @@ class CnnEngine:
             self._stage()
             self._launch()
         self._finish_oldest()
-        self._t_serve += time.perf_counter() - t0
+        self._t_serve += self.clock.now() - t0
 
     @property
     def retry_pending(self) -> int:
@@ -721,6 +742,12 @@ class CnnEngine:
         report = self.drain_report()
         raise DrainTimeout(
             f"engine not drained after {max_steps} steps: {report}", report)
+
+    def export_state(self) -> dict:
+        """Host-side snapshot of what a process-level restart must
+        persist: the params (everything else — compiled buckets, packed
+        slabs, plan cache — is rebuilt deterministically from them)."""
+        return {"params": jax.device_get(self.params)}
 
     def reset_metrics(self):
         """Zero throughput/latency counters (e.g. after jit warmup) without

@@ -31,6 +31,15 @@ Fault points (wired through ``CnnEngine._stage/_launch/_finish_oldest``):
 ``retire.latency``  host-side latency spike (``delay_ms`` sleep) during
                     retirement — exercises deadline expiry and SLO
                     accounting without corrupting data
+``worker.crash``    process-level chaos (fired by the *supervisor*, one
+                    injector per worker): SIGKILL the worker process at
+                    this pump opportunity — exercises heartbeat death
+                    detection, failover re-dispatch, and crash-consistent
+                    restart (``serving/supervisor.py``)
+``worker.stall``    process-level chaos: the worker's command loop sleeps
+                    ``delay_ms`` before replying, so the supervisor's
+                    heartbeat deadline trips — exercises the liveness
+                    ladder without killing the process
 ==================  ======================================================
 
 Arming is zero-overhead when idle: the engine guards every hook with
@@ -50,8 +59,11 @@ import numpy as np
 __all__ = ["FAULT_POINTS", "FaultSpec", "FaultInjector",
            "TransientLaunchError", "EngineCrash", "derive_seed"]
 
+# order matters: each point's RNG stream is keyed by its index, so new
+# points append (existing committed chaos schedules stay bit-reproducible)
 FAULT_POINTS = ("stage.corrupt", "launch.transient", "launch.crash",
-                "retire.nonfinite", "retire.latency")
+                "retire.nonfinite", "retire.latency",
+                "worker.crash", "worker.stall")
 
 
 class TransientLaunchError(RuntimeError):

@@ -30,8 +30,9 @@ on.  Both are reported in ``stats()``.
 """
 from __future__ import annotations
 
-import time
 from typing import List, Optional, Tuple
+
+from .clock import MONOTONIC, Clock
 
 __all__ = ["HEALTHY", "DEGRADED", "QUARANTINED", "HealthMonitor"]
 
@@ -43,9 +44,11 @@ QUARANTINED = "quarantined"
 class HealthMonitor:
     def __init__(self, *, fail_threshold: int = 3,
                  quarantine_threshold: int = 6,
-                 cooldown_ms: float = 250.0):
+                 cooldown_ms: float = 250.0,
+                 clock: Optional[Clock] = None):
         assert 1 <= fail_threshold <= quarantine_threshold
         assert cooldown_ms >= 0
+        self.clock = clock or MONOTONIC
         self.fail_threshold = fail_threshold
         self.quarantine_threshold = quarantine_threshold
         self.cooldown_ms = cooldown_ms
@@ -82,12 +85,12 @@ class HealthMonitor:
         if self.state == QUARANTINED:
             if self._probe_inflight:            # half-open probe failed
                 self._probe_inflight = False
-                self._t_quarantined = time.perf_counter()
+                self._t_quarantined = self.clock.now()
                 self.events.append((QUARANTINED, QUARANTINED,
                                     f"probe-failed:{kind}"))
             return
         if self.consecutive_failures >= self.quarantine_threshold:
-            self._t_quarantined = time.perf_counter()
+            self._t_quarantined = self.clock.now()
             self._probe_inflight = False
             self._move(QUARANTINED, f"{kind} x{self.consecutive_failures}")
         elif self.consecutive_failures >= self.fail_threshold:
@@ -97,7 +100,7 @@ class HealthMonitor:
         """Immediate circuit-open (hard crash path) — no ladder."""
         self.consecutive_failures = max(self.consecutive_failures,
                                         self.quarantine_threshold)
-        self._t_quarantined = time.perf_counter()
+        self._t_quarantined = self.clock.now()
         self._probe_inflight = False
         self._move(QUARANTINED, reason)
 
@@ -111,7 +114,7 @@ class HealthMonitor:
             return True
         if self._probe_inflight:
             return False
-        now = time.perf_counter() if now is None else now
+        now = self.clock.now() if now is None else now
         if (self._t_quarantined is not None
                 and (now - self._t_quarantined) * 1e3 >= self.cooldown_ms):
             self._probe_inflight = True         # half-open: one probe

@@ -45,7 +45,8 @@ class ModelRegistry:
 
     def register(self, name: str, cfg, scfg: CnnServeConfig, *, params=None,
                  seed: int = 0,
-                 faults: Optional[FaultInjector] = None) -> CnnEngine:
+                 faults: Optional[FaultInjector] = None,
+                 clock=None) -> CnnEngine:
         """Build and register one model's engine under ``name``.  Raises
         when the engine's slot pool (``max_batch * staging_depth``) would
         exceed the fleet's remaining device budget — oversubscription must
@@ -60,9 +61,16 @@ class ModelRegistry:
                 f"{self.slot_budget - self.slots_used} of "
                 f"{self.slot_budget} remain; shrink max_batch or "
                 f"staging_depth")
-        eng = CnnEngine(cfg, scfg, params=params, seed=seed, faults=faults)
+        eng = CnnEngine(cfg, scfg, params=params, seed=seed, faults=faults,
+                        clock=clock)
         self.engines[name] = eng
         return eng
+
+    def export_state(self) -> dict:
+        """Per-model host-side state a process-level restart needs to
+        rebuild this fleet (checkpointing hook for ``serving/worker.py``)."""
+        return {name: eng.export_state()
+                for name, eng in self.engines.items()}
 
     def __contains__(self, name: str) -> bool:
         return name in self.engines

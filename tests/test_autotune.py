@@ -122,6 +122,40 @@ def test_plan_cache_roundtrip(tmp_path):
     assert data["version"] == 1 and len(data["entries"]) == 1
 
 
+def test_plan_cache_load_corrupt_falls_back(tmp_path):
+    """A corrupt/truncated/alien cache file must never crash engine
+    construction: load warns and returns an empty cache (default plans)."""
+    key = plan_key(ConvSpec(kernel=3, route="pallas"), (2, 13, 13, 32),
+                   interpret=True)
+    bad = [
+        ("garbage.json", "{not json at all"),
+        ("truncated.json",
+         '{"version": 1, "entries": {"k": {"plan": {"batch_bl'),
+        ("wrong_version.json", json.dumps({"version": 99, "entries": {}})),
+        ("no_version.json", json.dumps({"entries": {}})),
+        ("alien_schema.json", json.dumps({"version": 1, "entries": "nope"})),
+        ("bad_entry.json",
+         json.dumps({"version": 1, "entries": {"k": {"no_plan": 1}}})),
+    ]
+    for name, text in bad:
+        p = tmp_path / name
+        p.write_text(text)
+        with pytest.warns(UserWarning, match="plan cache"):
+            cache = PlanCache.load(p)
+        assert cache.get(key) is None, name        # falls back to defaults
+        assert not cache.entries, name
+
+
+def test_plan_cache_load_missing_file_is_silent(tmp_path):
+    """A missing cache file is the normal never-tuned state — empty cache,
+    no warning."""
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")
+        cache = PlanCache.load(tmp_path / "nope.json")
+    assert not cache.entries
+
+
 # ---------------------------------------------------------------------------
 # candidate enumeration: validity + bit-equality
 # ---------------------------------------------------------------------------

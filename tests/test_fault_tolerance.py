@@ -416,6 +416,62 @@ def test_checkpoint_recovery_bit_identical_serving(served, tmp_path, n_req):
     assert np.array_equal(before, after)
 
 
+# ---------------------------------------------------------------------------
+# accounting invariant property: mixed chaos x bucket paddings x seeds
+# ---------------------------------------------------------------------------
+def test_registry_accounting_property_mixed_chaos(served):
+    """Property: ``submitted == completed + shed + expired`` holds on every
+    drained engine — and fleet-wide — under mixed seeded chaos (transient
+    launches, NaN retirements, staging corruption, a hard crash) over
+    traffic that exercises every bucket padding (group sizes 1..max_batch)
+    with a mix of deadline-bearing and unbounded requests."""
+    cfg, params, _ = served
+    chaos = {
+        "launch.transient": FaultSpec(rate=0.25),
+        "retire.nonfinite": FaultSpec(rate=0.15),
+        "stage.corrupt": FaultSpec(rate=0.10),
+        "launch.crash": FaultSpec(rate=0.05, limit=1),
+    }
+    buckets_seen = set()
+    for seed in range(3):
+        reg = ModelRegistry()
+        for name in ("a", "b"):
+            reg.register(name, cfg,
+                         CnnServeConfig(max_batch=4, retry_backoff_ms=0.01,
+                                        cooldown_ms=0.0),
+                         params=params,
+                         faults=FaultInjector(derive_seed(seed, name),
+                                              chaos))
+        rng = np.random.default_rng(seed)
+        counts = {"a": 0, "b": 0}
+        for burst in (1, 2, 3, 4, 3, 1, 4, 2):
+            model = "a" if rng.uniform() < 0.5 else "b"
+            for _ in range(burst):
+                dl = 5.0 if rng.uniform() < 0.25 else None
+                reg.submit(model, ImageRequest(
+                    image=_images(cfg, 1, seed=counts[model])[0],
+                    deadline_ms=dl, retries=2))
+                counts[model] += 1
+            reg.step()          # interleave serving with arrivals
+        reg.run_until_done(max_steps=5000)
+        fleet = {"submitted": 0, "completed": 0, "shed": 0, "expired": 0}
+        for name in ("a", "b"):
+            acc = reg[name].accounting()
+            assert acc["balanced"] and acc["in_flight"] == 0, (seed, name,
+                                                               acc)
+            assert acc["submitted"] == counts[name]
+            assert acc["submitted"] == (acc["completed"] + acc["shed"]
+                                        + acc["expired"])
+            for k in fleet:
+                fleet[k] += acc[k]
+            buckets_seen |= set(reg[name].bucket_counts)
+        assert fleet["submitted"] == sum(counts.values()) == 20
+        assert fleet["submitted"] == (fleet["completed"] + fleet["shed"]
+                                      + fleet["expired"])
+    # the sweep exercised every compiled padding shape in the ladder
+    assert buckets_seen == {1, 2, 4}
+
+
 def test_error_types_exported():
     assert issubclass(TransientLaunchError, RuntimeError)
     assert issubclass(EngineCrash, RuntimeError)

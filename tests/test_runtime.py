@@ -96,6 +96,52 @@ def test_checkpoint_atomic_and_gc(tmp_path):
                                   np.arange(8.0))
 
 
+def test_checkpoint_integrity_manifest_and_verify(tmp_path):
+    """save() records per-leaf crc32s; verify_step catches bit-rot and
+    missing leaves."""
+    d = str(tmp_path / "ck")
+    ckpt.save(d, {"step": jnp.int32(1), "w": jnp.arange(8.0)})
+    ok, problems = ckpt.verify_step(d, 1)
+    assert ok and not problems
+    # flip a byte in a leaf -> crc mismatch
+    leaf = os.path.join(d, "step_0000000001", "w.npy")
+    with open(leaf, "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_END)
+        f.write(bytes([b[0] ^ 0xFF]))
+    ok, problems = ckpt.verify_step(d, 1)
+    assert not ok and any("crc mismatch" in p for p in problems)
+    # a missing leaf is also caught
+    os.remove(leaf)
+    ok, problems = ckpt.verify_step(d, 1)
+    assert not ok and any("missing leaf" in p for p in problems)
+
+
+def test_checkpoint_restore_falls_back_past_torn_latest(tmp_path):
+    """A torn/corrupt *latest* checkpoint must not be restored: the loader
+    warns and falls back to the previous intact step; naming the corrupt
+    step explicitly raises CheckpointCorrupt."""
+    d = str(tmp_path / "ck")
+    for s in (1, 2):
+        ckpt.save(d, {"step": jnp.int32(s), "w": jnp.full((4,), float(s))})
+    # tear step 2 (as a crash mid-write that beat the manifest would)
+    os.remove(os.path.join(d, "step_0000000002", "w.npy"))
+    assert ckpt.latest_step(d) == 2
+    with pytest.warns(UserWarning, match="failed integrity"):
+        assert ckpt.latest_intact_step(d) == 1
+    with pytest.warns(UserWarning, match="failed integrity"):
+        r = ckpt.restore(d, {"step": jnp.int32(0), "w": jnp.zeros(4)})
+    assert int(r["step"]) == 1
+    np.testing.assert_array_equal(np.asarray(r["w"]), 1.0)
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.restore(d, {"step": jnp.int32(0), "w": jnp.zeros(4)}, step=2)
+    # verify=False preserves the old trusting behavior (explicit opt-out)
+    r = ckpt.restore(d, {"step": jnp.int32(0), "w": jnp.zeros(4)}, step=1,
+                     verify=False)
+    assert int(r["step"]) == 1
+
+
 def test_async_checkpointer(tmp_path):
     d = str(tmp_path / "ck")
     ac = ckpt.AsyncCheckpointer(d, keep=3)
