@@ -32,6 +32,16 @@ degraded outputs are gated bit-identical to the direct-route oracle.
 under the seeded schedule, idle-parity bit-identical, and the degraded
 bucket serving bit-correct logits.
 
+``--chaos --sdc`` (or just ``--sdc``) switches to the silent-data-
+corruption defense harness (``BENCH_sdc.json``): the ABFT weight-stream
+checksums, pre-dispatch slab fingerprints, and magnitude-bounded logit
+screen measured against injected slab bit flips, stale-slab reuse, and
+finite (isfinite-defeating) logit corruption, plus the clean-path
+wall-clock overhead of arming the defense.  ``--sdc --check`` gates:
+detection rate 1.0 on injected flips, zero false positives and
+bit-identical logits on the clean trace, and every request completing via
+repack-and-retry.
+
 Traces are seeded and host-generated; arrival timestamps are wall-clock
 offsets so queue-wait latency is real.  ``--fast`` shrinks everything for
 the CI smoke, which gates goodput > 0, full drain (zero unretired slots),
@@ -625,6 +635,219 @@ def chaos_rows(out: dict) -> list:
 
 
 # ---------------------------------------------------------------------------
+# SDC harness (--sdc): ABFT + slab-integrity defense vs injected corruption
+# ---------------------------------------------------------------------------
+def run_sdc(fast: bool, seed: int = 0) -> dict:
+    """Silent-data-corruption defense harness (artifact: BENCH_sdc.json).
+
+    Four measured scenarios against one AlexNet engine (pallas route, the
+    datapath the ABFT checksum row actually protects):
+
+    1. *clean overhead* — the identical probe set served with the defense
+       off vs fully armed (ABFT + slab fingerprints + magnitude screen):
+       logits must be bit-identical, zero detections (false-positive rate
+       0.0), and the wall-clock ratio is the price of the defense.
+    2. *bitflip detection* — a seeded ``slab.bitflip`` schedule against
+       the ABFT verdict gate (fingerprint check off, so the in-kernel
+       checksums are the detector): every fired flip must be detected
+       before its batch retires and every request must still complete via
+       repack-and-retry (detection_rate == 1.0, accounting balanced).
+    3. *pre-dispatch integrity* — ``verify_slabs`` against ``slab.bitflip``
+       + ``slab.stale``: both corruption classes caught by the host-side
+       fingerprint check before a forward is burned (the stale-slab class
+       is *only* catchable here — a wrong-shape slab would otherwise be
+       silently repacked in-trace).
+    4. *plausible corruption* — ``retire.plausible`` (finite,
+       bounded-magnitude logit perturbation that defeats the isfinite
+       screen) against ``screen_abs_max``: the row is screened out and
+       retried, never served.
+    """
+    import dataclasses
+
+    import jax
+    from repro.configs import get_config
+    from repro.models import alexnet
+    from repro.serving import (CnnEngine, CnnServeConfig, FaultInjector,
+                               FaultSpec, ImageRequest, derive_seed)
+
+    cfg_off = dataclasses.replace(get_config("alexnet").reduced(),
+                                  image_size=35, use_pallas=True)
+    cfg_abft = dataclasses.replace(cfg_off, sdc_abft=True)
+    params = alexnet.init(jax.random.PRNGKey(seed), cfg_off)
+    image = _image_fn(cfg_off, seed)
+    scfg = CnnServeConfig(max_batch=4, retry_backoff_ms=0.5,
+                          screen_sample=4)
+
+    def serve(eng, imgs, retries=3):
+        rs = [ImageRequest(image=im, retries=retries) for im in imgs]
+        for r in rs:
+            eng.submit(r)
+        eng.run_until_done()
+        return rs
+
+    # -- 1. clean-path parity + overhead ---------------------------------
+    n_clean = 16 if fast else 48
+    probe = [image() for _ in range(n_clean)]
+
+    def run_clean(cfg_run, scfg_run):
+        e = CnnEngine(cfg_run, scfg_run, params=params)
+        _warm_buckets(e, image)
+        e.reset_metrics()
+        t0 = time.perf_counter()
+        rs = serve(e, probe)
+        return e, rs, time.perf_counter() - t0
+
+    scfg_armed = dataclasses.replace(scfg, verify_slabs=True,
+                                     screen_abs_max=1e6)
+    e_off, rs_off, wall_off = run_clean(cfg_off, scfg)
+    e_on, rs_on, wall_on = run_clean(cfg_abft, scfg_armed)
+    clean = {
+        "requests": n_clean,
+        "bit_identical": bool(all(
+            np.array_equal(np.asarray(a.logits), np.asarray(b.logits))
+            for a, b in zip(rs_off, rs_on))),
+        "detections": e_on.sdc_detections,
+        "slab_integrity_failures": e_on.slab_integrity_failures,
+        "screen_magnitude": e_on.screen_magnitude,
+        "false_positive_rate": (
+            (e_on.sdc_detections + e_on.slab_integrity_failures
+             + e_on.screen_magnitude) / max(e_on.batches_run, 1)),
+        "wall_off_s": wall_off,
+        "wall_armed_s": wall_on,
+        "overhead_ratio": wall_on / wall_off if wall_off else 0.0,
+        "accounting_balanced": (e_off.accounting()["balanced"]
+                                and e_on.accounting()["balanced"]),
+    }
+
+    # -- 2. ABFT bitflip detection + repack-and-retry recovery -----------
+    flips_at = tuple(range(0, 6, 2)) if fast else tuple(range(0, 16, 2))
+    inj = FaultInjector(seed=derive_seed(seed, "sdc-bitflip"),
+                        specs={"slab.bitflip": FaultSpec(at=flips_at)})
+    e = CnnEngine(cfg_abft, scfg, params=params)   # fingerprints off:
+    _warm_buckets(e, image)                        # ABFT is the detector
+    e.arm_faults(inj)
+    e.reset_metrics()
+    n_flip_reqs = 4 * (max(flips_at) + 2)
+    rs = serve(e, [image() for _ in range(n_flip_reqs)])
+    fired = inj.summary()["slab.bitflip"]["fired"]
+    bitflip = {
+        "requests": n_flip_reqs,
+        "flips_fired": fired,
+        "detections": e.sdc_detections,
+        "detection_rate": e.sdc_detections / fired if fired else 0.0,
+        "completed": int(sum(r.done for r in rs)),
+        "retried": e.images_retried,
+        "batches_failed": e.batches_failed,
+        "accounting_balanced": e.accounting()["balanced"],
+        "faults": e.faults.summary(),
+    }
+
+    # -- 3. pre-dispatch slab fingerprint verification -------------------
+    inj_v = FaultInjector(seed=derive_seed(seed, "sdc-verify"),
+                          specs={"slab.bitflip": FaultSpec(at=(0,)),
+                                 "slab.stale": FaultSpec(at=(1,))})
+    e_v = CnnEngine(cfg_abft, scfg_armed, params=params)
+    _warm_buckets(e_v, image)
+    e_v.arm_faults(inj_v)
+    e_v.reset_metrics()
+    rs_v = serve(e_v, [image() for _ in range(12)])
+    fired_v = sum(v["fired"] for p, v in inj_v.summary().items()
+                  if p.startswith("slab."))
+    verify = {
+        "requests": 12,
+        "faults_fired": fired_v,
+        "slab_integrity_failures": e_v.slab_integrity_failures,
+        "abft_detections": e_v.sdc_detections,
+        "completed": int(sum(r.done for r in rs_v)),
+        "accounting_balanced": e_v.accounting()["balanced"],
+        "faults": e_v.faults.summary(),
+    }
+
+    # -- 4. plausible (finite) corruption vs the magnitude screen --------
+    inj_p = FaultInjector(
+        seed=derive_seed(seed, "sdc-plausible"),
+        specs={"retire.plausible": FaultSpec(at=(0,), magnitude=1e8)})
+    e_p = CnnEngine(cfg_abft, scfg_armed, params=params)
+    _warm_buckets(e_p, image)
+    e_p.arm_faults(inj_p)
+    e_p.reset_metrics()
+    rs_p = serve(e_p, [image() for _ in range(8)])
+    plausible = {
+        "requests": 8,
+        "fired": inj_p.summary()["retire.plausible"]["fired"],
+        "screen_magnitude": e_p.screen_magnitude,
+        "screen_nonfinite": e_p.screen_nonfinite,
+        "completed": int(sum(r.done for r in rs_p)),
+        "retried": e_p.images_retried,
+        "accounting_balanced": e_p.accounting()["balanced"],
+    }
+
+    return {
+        "meta": {"fast": fast, "seed": seed, "image_size": 35,
+                 "route": "pallas",
+                 "defense": {"sdc_abft": True, "verify_slabs": True,
+                             "screen_abs_max": 1e6}},
+        "clean": clean,
+        "bitflip": bitflip,
+        "verify": verify,
+        "plausible": plausible,
+    }
+
+
+def check_sdc(out: dict):
+    """CI sdc-smoke gates: detection rate 1.0 on injected flips, zero
+    false positives and bit-identical logits on the clean trace, both
+    slab corruption classes caught pre-dispatch, the plausible-corruption
+    row screened, and no engine losing a request."""
+    c = out["clean"]
+    assert c["bit_identical"], "armed clean serving diverged from unarmed"
+    assert c["detections"] == 0 and c["false_positive_rate"] == 0.0, \
+        f"false positives on a clean run ({c})"
+    b = out["bitflip"]
+    assert b["flips_fired"] > 0, "bitflip schedule never fired"
+    assert b["detection_rate"] == 1.0, \
+        f"missed injected bit flips ({b})"
+    assert b["completed"] == b["requests"], \
+        "bitflip run lost requests (repack-and-retry must complete them)"
+    v = out["verify"]
+    assert v["slab_integrity_failures"] == v["faults_fired"] > 0, \
+        f"fingerprint check missed slab corruption ({v})"
+    assert v["completed"] == v["requests"]
+    p = out["plausible"]
+    assert p["screen_magnitude"] >= p["fired"] > 0, \
+        f"magnitude screen missed plausible corruption ({p})"
+    assert p["completed"] == p["requests"]
+    for name in ("clean", "bitflip", "verify", "plausible"):
+        assert out[name]["accounting_balanced"], f"{name}: lost requests"
+    print("serve_fleet/SDC_OK,0,all-gates-passed")
+
+
+def sdc_rows(out: dict) -> list:
+    c, b = out["clean"], out["bitflip"]
+    v, p = out["verify"], out["plausible"]
+    return [
+        {"name": "serve_fleet/sdc_clean_overhead",
+         "us_per_call": 1e6 * c["wall_armed_s"] / max(c["requests"], 1),
+         "derived": (f"ratio={c['overhead_ratio']:.3f}"
+                     f";bit_identical={int(c['bit_identical'])}"
+                     f";fp_rate={c['false_positive_rate']:.3f}")},
+        {"name": "serve_fleet/sdc_bitflip", "us_per_call": 0,
+         "derived": (f"detection_rate={b['detection_rate']:.3f}"
+                     f";fired={b['flips_fired']}"
+                     f";completed={b['completed']}/{b['requests']}"
+                     f";retried={b['retried']}")},
+        {"name": "serve_fleet/sdc_verify_slabs", "us_per_call": 0,
+         "derived": (f"integrity_failures={v['slab_integrity_failures']}"
+                     f";fired={v['faults_fired']}"
+                     f";completed={v['completed']}/{v['requests']}")},
+        {"name": "serve_fleet/sdc_plausible", "us_per_call": 0,
+         "derived": (f"screen_magnitude={p['screen_magnitude']}"
+                     f";fired={p['fired']}"
+                     f";completed={p['completed']}/{p['requests']}")},
+    ]
+
+
+# ---------------------------------------------------------------------------
 # supervised fleet: multi-process workers, seeded mid-trace kill
 # ---------------------------------------------------------------------------
 def run_supervised(fast: bool, seed: int = 0) -> dict:
@@ -828,6 +1051,12 @@ def main(argv=None):
     ap.add_argument("--chaos", action="store_true",
                     help="run the seeded fault-injection harness instead "
                          "(artifact: BENCH_chaos.json)")
+    ap.add_argument("--sdc", action="store_true",
+                    help="run the silent-data-corruption defense harness "
+                         "instead: ABFT/fingerprint/screen detection vs "
+                         "injected slab bit flips, stale slabs, and "
+                         "plausible logit corruption (artifact: "
+                         "BENCH_sdc.json)")
     ap.add_argument("--supervised", action="store_true",
                     help="run the supervised multi-process fleet chaos "
                          "harness instead (artifact: BENCH_supervisor.json)")
@@ -839,6 +1068,9 @@ def main(argv=None):
     if args.supervised:
         out = run_supervised(args.fast, args.seed)
         emit(supervised_rows(out))
+    elif args.sdc:                  # --chaos --sdc runs the SDC harness
+        out = run_sdc(args.fast, args.seed)
+        emit(sdc_rows(out))
     elif args.chaos:
         out = run_chaos(args.fast, args.seed)
         emit(chaos_rows(out))
@@ -851,6 +1083,7 @@ def main(argv=None):
         print(f"serve_fleet/ARTIFACT,0,wrote={args.out}")
     if args.check:
         (check_supervised if args.supervised else
+         check_sdc if args.sdc else
          check_chaos if args.chaos else check)(out)
 
 

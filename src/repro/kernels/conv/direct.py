@@ -103,6 +103,7 @@ class DirectPlan:
     ncb: int
     Kb: int
     nkb: int
+    checksum: bool = False  # ABFT checksum row on every weight tile
 
     @property
     def Kfull(self) -> int:
@@ -112,13 +113,15 @@ class DirectPlan:
     def weights(self) -> dma.WeightPlan:
         return dma.WeightPlan(g=self.g, nkb=self.nkb, ncb=self.ncb,
                               Cb=self.Cb, Kb=self.Kb,
-                              spatial=(self.r, self.r))
+                              spatial=(self.r, self.r),
+                              checksum=self.checksum)
 
 
 def plan(x_shape, w_shape, *, stride: int = 1, padding: str = "SAME",
          pool=None, groups: int = 1, row_block: int = 8,
          pool_row_block: int | None = None, c_block: int | None = None,
-         k_block: int = 128, batch_block: int = 8) -> DirectPlan:
+         k_block: int = 128, batch_block: int = 8,
+         checksum: bool = False) -> DirectPlan:
     """Derive the full launch plan from shapes + static params."""
     r, s, g = w_shape[0], stride, groups
     assert w_shape[0] == w_shape[1], "square filters only"
@@ -171,7 +174,7 @@ def plan(x_shape, w_shape, *, stride: int = 1, padding: str = "SAME",
                       Rc=Rc, step_in=step_in, in_rows=in_rows, npr=npr,
                       rows_out=rows_out, w_out=w_out, Hp=Hp, Wp=Wp,
                       Bb=Bb, Bp=Bp, Cb=Cb, Cp=Cp, ncb=Cp // Cb,
-                      Kb=Kb, nkb=K // Kb)
+                      Kb=Kb, nkb=K // Kb, checksum=checksum)
 
 
 def pack_weights(w, p: DirectPlan):
@@ -183,10 +186,14 @@ def pack_weights(w, p: DirectPlan):
     return dma.pack_weight_tiles(wg, p.weights)
 
 
-def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
-                   sem, *, stride: int, relu: bool, lrn, pool, step_in: int,
+def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, *refs, stride: int,
+                   relu: bool, checksum: bool, lrn, pool, step_in: int,
                    in_rows: int, prefetch: bool, single: bool,
                    row_parallel: bool):
+    if checksum:
+        sdc_ref, acc_ref, y_ref, wbuf, sem = refs
+    else:
+        acc_ref, y_ref, wbuf, sem = refs
     s = stride
     _, Rc, wo, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -196,8 +203,13 @@ def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     w = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single,
-                              row_parallel=row_parallel).astype(jnp.float32)
+                              single=single, row_parallel=row_parallel)
+    if checksum:
+        # ABFT: verify the resident tile's checksum row, then strip it —
+        # the GEMMs consume the same Cb rows as an unarmed launch
+        dma.verify_tile_checksum(sdc_ref, w)
+        w = w[..., :-1, :]
+    w = w.astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -240,14 +252,16 @@ def _direct_kernel(x_ref, w_tiles, b_ref, out_ref, acc_ref, y_ref, wbuf,
                                              "row_block", "pool_row_block",
                                              "c_block", "k_block",
                                              "batch_block", "weight_prefetch",
-                                             "row_parallel", "interpret"))
+                                             "row_parallel", "checksum",
+                                             "interpret"))
 def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
                   padding: str = "SAME", relu: bool = False, groups: int = 1,
                   lrn=None, pool=None, row_block: int = 8,
                   pool_row_block: int | None = None,
                   c_block: int | None = None, k_block: int = 128,
                   batch_block: int = 8, weight_prefetch: bool = True,
-                  row_parallel: bool = False, interpret: bool = True):
+                  row_parallel: bool = False, checksum: bool = False,
+                  interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); any r/stride/groups, fused layer.
 
     Same contract as the Winograd kernel (``winograd.conv2d_winograd``):
@@ -275,11 +289,17 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
     row grid dimension runs ``parallel`` instead of ``arbitrary``
     (bit-equal; one extra exposed warmup tile per row block) — the
     row-parallel regime the autotuner searches.
+
+    ABFT (``checksum=True``): the packed slab carries one extra bit-pattern
+    checksum row per tile; the kernel verifies each resident tile after the
+    DMA slot swap and the call returns ``(y, verdict)`` — verdict 0 means
+    every tile streamed intact.  Clean armed output is bit-identical to
+    unarmed (the GEMMs read the same Cb rows either way).
     """
     p = plan(x.shape, w.shape, stride=stride, padding=padding, pool=pool,
              groups=groups, row_block=row_block,
              pool_row_block=pool_row_block, c_block=c_block,
-             k_block=k_block, batch_block=batch_block)
+             k_block=k_block, batch_block=batch_block, checksum=checksum)
     B, H, W, _ = x.shape
     s, r, g = p.s, p.r, p.g
 
@@ -300,11 +320,22 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
 
     single = p.weights.n_tiles == 1
     row_par = bool(row_parallel) and not single
-    kernel = functools.partial(_direct_kernel, stride=s, relu=relu, lrn=lrn,
+    kernel = functools.partial(_direct_kernel, stride=s, relu=relu,
+                               checksum=p.checksum, lrn=lrn,
                                pool=pool, step_in=p.step_in,
                                in_rows=p.in_rows, prefetch=weight_prefetch,
                                single=single, row_parallel=row_par)
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
+                              lambda bo, i, k, c, bi: (bo, i, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype)]
+    if p.checksum:
+        # per-(batch, row) ABFT verdict (0 everywhere == clean launch)
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda bo, i, k, c, bi: (bo, i)))
+        out_shape.append(jax.ShapeDtypeStruct((p.Bp // p.Bb, p.npr),
+                                              jnp.int32))
+    res = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
@@ -318,10 +349,8 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
              else pl.BlockSpec(memory_space=pltpu.ANY)),
             pl.BlockSpec((1, p.Kb), lambda bo, i, k, c, bi: (k, 0)),
         ],
-        out_specs=pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
-                               lambda bo, i, k, c, bi: (bo, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(
-            (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((p.Bb, p.Rc, p.out_w, p.Kb), jnp.float32),
             pltpu.VMEM((p.Bb, p.Rc, p.out_w, p.Kfull), jnp.float32),
@@ -333,6 +362,6 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
         interpret=interpret,
     )(xg, w_tiles, bg)
 
-    if pool is not None:
-        return out[:B, :p.ph_out]
-    return out[:B, :p.out_h]
+    out = res[0]
+    y = out[:B, :p.ph_out] if pool is not None else out[:B, :p.out_h]
+    return (y, jnp.sum(res[1])) if p.checksum else y

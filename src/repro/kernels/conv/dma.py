@@ -52,6 +52,12 @@ class WeightPlan:
     ``spatial`` is the per-tile filter extent — ``(n, n)`` Winograd-domain
     or ``(r, r)`` direct.  The packed array is
     ``(n_tiles, *spatial, Cb, Kb)`` with tile ``lin = k * ncb + c``.
+
+    ``checksum`` arms the ABFT weight stream: every tile carries one extra
+    ``Cb`` row holding the bit-pattern column checksum of the rows above it
+    (:func:`append_checksum_row`), so ``tile_shape`` grows to
+    ``(*spatial, Cb + 1, Kb)`` and the kernels can verify each resident
+    tile after the DMA slot swap (:func:`verify_tile_checksum`).
     """
     g: int                  # groups
     nkb: int                # K blocks per group
@@ -59,6 +65,7 @@ class WeightPlan:
     Cb: int                 # channel block
     Kb: int                 # output-channel block
     spatial: tuple          # per-tile filter dims
+    checksum: bool = False  # ABFT checksum row appended to every tile
 
     @property
     def n_tiles(self) -> int:
@@ -66,7 +73,8 @@ class WeightPlan:
 
     @property
     def tile_shape(self) -> tuple:
-        return (*self.spatial, self.Cb, self.Kb)
+        return (*self.spatial, self.Cb + (1 if self.checksum else 0),
+                self.Kb)
 
 
 def pack_weight_tiles(wg, plan: WeightPlan):
@@ -83,7 +91,81 @@ def pack_weight_tiles(wg, plan: WeightPlan):
     w7 = wg.reshape(g, *plan.spatial, ncb, Cb, nkb, Kb)
     # (g, *spatial, ncb, Cb, nkb, Kb) -> (g, nkb, ncb, *spatial, Cb, Kb)
     perm = (0, ns + 3, ns + 1, *range(1, ns + 1), ns + 2, ns + 4)
-    return w7.transpose(perm).reshape(plan.n_tiles, *plan.tile_shape)
+    tiles = w7.transpose(perm).reshape(plan.n_tiles, *plan.spatial, Cb, Kb)
+    if plan.checksum:
+        tiles = append_checksum_row(tiles)
+    assert tiles.shape == (plan.n_tiles, *plan.tile_shape)
+    return tiles
+
+
+# ---------------------------------------------------------------------------
+# ABFT tile checksums (SDC defense)
+# ---------------------------------------------------------------------------
+# Checksums are computed over the *bit patterns* of the packed tile, not its
+# float values: bitcast each lane to a same-width integer and take the
+# wraparound column sum (mod 2**width) along the Cb axis.  A float sum
+# cannot guarantee detection of a low-mantissa-bit flip (the delta is
+# absorbed by rounding); an integer wraparound sum changes by exactly
+# +/- 2**k mod 2**width != 0 for any single flipped bit, so every 1-bit
+# corruption anywhere in the tile — weight rows, zero padding, or the
+# checksum row itself — is detected, with zero false positives on clean
+# data (integer addition is exact and order-independent).
+_CHECKSUM_INT = {4: jnp.int32, 2: jnp.int16}
+
+
+def checksum_int_dtype(dtype):
+    """Same-width integer dtype the ABFT checksum runs in."""
+    return _CHECKSUM_INT[jnp.dtype(dtype).itemsize]
+
+
+def tile_checksum(tiles):
+    """Bit-pattern column checksum of ``(..., Cb, Kb)`` tiles: bitcast to
+    same-width int, wraparound-sum along the Cb axis (sub-32-bit dtypes
+    accumulate in int32 and truncate back — consistent at pack and verify
+    time, so the comparison is exact)."""
+    itype = checksum_int_dtype(tiles.dtype)
+    bits = jax.lax.bitcast_convert_type(tiles, itype)
+    return jnp.sum(bits.astype(jnp.int32), axis=-2,
+                   dtype=jnp.int32).astype(itype)
+
+
+def append_checksum_row(tiles):
+    """Append the checksum as one extra Cb row, bitcast back into the tile
+    dtype so the slab stays a single homogeneous array for DMA (the GEMMs
+    never read it — kernels slice ``[..., :-1, :]``)."""
+    row = tile_checksum(tiles)[..., None, :]
+    row = jax.lax.bitcast_convert_type(row, tiles.dtype)
+    return jnp.concatenate([tiles, row], axis=-2)
+
+
+def checksum_mismatches(tile):
+    """int32 count of checksum lanes disagreeing with a recomputed sum in
+    one ``(..., Cb + 1, Kb)`` checksummed tile (0 == intact)."""
+    itype = checksum_int_dtype(tile.dtype)
+    want = jax.lax.bitcast_convert_type(tile[..., -1:, :], itype)
+    got = tile_checksum(tile[..., :-1, :])[..., None, :]
+    return jnp.sum((want != got).astype(jnp.int32), dtype=jnp.int32)
+
+
+def verify_tile_checksum(sdc_ref, tile):
+    """Accumulate the resident tile's checksum mismatches into the
+    per-(batch, row) corruption-verdict ref on the shared conv grid.
+
+    Runs once per weight tile (first image slot only), off the GEMM
+    critical path — one bitcast + integer reduction per (k, c) transition.
+    The verdict block is initialised on the first tile of each (batch,
+    row) block, so the output is total mismatched checksum lanes seen by
+    that block's weight stream (0 == clean launch).
+    """
+    k, c, bi = pl.program_id(2), pl.program_id(3), pl.program_id(4)
+
+    @pl.when((k == 0) & (c == 0) & (bi == 0))
+    def _init():
+        sdc_ref[0, 0] = 0
+
+    @pl.when(bi == 0)
+    def _count():
+        sdc_ref[0, 0] += checksum_mismatches(tile)
 
 
 def weight_dma_scratch(plan: WeightPlan, dtype, *, single: bool = False):
@@ -271,18 +353,41 @@ class WeightStager:
     Tracer-safe: under ``jax.jit`` the packed value would be a tracer, so
     staging computes inline and caches nothing (XLA already schedules the
     inlined pack; caching tracers across traces would be unsound).
+
+    ``verify=True`` arms slab-integrity checking on the cache-hit path:
+    instead of trusting the cache key, a hit whose value carries a
+    pack-time fingerprint (``nn/conv.py::SlabFingerprint``) is re-verified
+    — shape, dtype, content crc32, and (when the caller passes ``expect``)
+    the pack context the slab was built under.  A mismatch counts in
+    ``integrity_failures``, evicts the entry, and repacks through the miss
+    path — so a corrupted cached slab, or a stale one reused after the
+    layer was repacked under different fusion flags, never reaches a
+    kernel.
     """
 
-    def __init__(self):
+    def __init__(self, *, verify: bool = False):
         self._cache: dict = {}
         self.hits = 0
         self.misses = 0
+        self.verify = verify
+        self.integrity_failures = 0
 
-    def stage(self, key, fn, *args, **kwargs):
+    @staticmethod
+    def _intact(val, expect) -> bool:
+        """Duck-typed fingerprint check: values without one (plain arrays,
+        slabs packed unfingerprinted) have nothing to verify against."""
+        fp = getattr(val, "fingerprint", None)
+        return fp is None or fp.matches(val, expect=expect)
+
+    def stage(self, key, fn, *args, expect=None, **kwargs):
         """Compute (or recall) ``fn(*args)`` for ``key``; returns the value."""
         if key in self._cache:
-            self.hits += 1
-            return self._cache[key]
+            val = self._cache[key]
+            if not self.verify or self._intact(val, expect):
+                self.hits += 1
+                return val
+            self.integrity_failures += 1
+            del self._cache[key]        # fall through: repack from pristine
         val = fn(*args, **kwargs)
         self.misses += 1
         if key is not None and not _has_tracer((args, kwargs, val)):

@@ -80,7 +80,8 @@ def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
            c_block: int | None = None, pool_row_block: int | None = None,
            k_block: int = 128, batch_block: int = 8,
            weight_prefetch: bool = True, row_parallel: bool = False,
-           pallas: bool = True, interpret: bool | None = None):
+           checksum: bool = False, pallas: bool = True,
+           interpret: bool | None = None):
     """Fused stride-1 Winograd conv layer: bias, ReLU, groups, LRN, pool.
 
     Both routes share one signature so they stay numerically
@@ -92,6 +93,11 @@ def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
     is a (window, stride) pair for a VALID max-pool (or None).
     ``w_packed``/``weight_prefetch`` reach the Pallas weight pipeline only
     (the jnp route has no weight stream to stage).
+
+    ``checksum=True`` arms the ABFT weight-stream verification and both
+    routes return ``(y, verdict)`` — the jnp route has no DMA stream to
+    corrupt, so its verdict is the constant 0 (the contract stays uniform
+    for ``nn.conv.dispatch_conv``).
     """
     if pallas:
         return _k.conv2d_winograd(x, w, b, w_packed, m=m, padding=padding,
@@ -102,9 +108,11 @@ def conv2d(x, w, b=None, w_packed=None, *, m: int = 4, padding: str = "SAME",
                                   batch_block=batch_block,
                                   weight_prefetch=weight_prefetch,
                                   row_parallel=row_parallel,
+                                  checksum=checksum,
                                   interpret=_interp(interpret))
-    return wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
-                              groups=groups, lrn=lrn, pool=pool)
+    y = wg.conv2d_winograd(x, w, b, m=m, padding=padding, relu=relu,
+                           groups=groups, lrn=lrn, pool=pool)
+    return (y, jnp.zeros((), jnp.int32)) if checksum else y
 
 
 def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
@@ -113,14 +121,15 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
                   pool_row_block: int | None = None, k_block: int = 128,
                   batch_block: int = 8,
                   weight_prefetch: bool = True, row_parallel: bool = False,
-                  pallas: bool = True,
+                  checksum: bool = False, pallas: bool = True,
                   interpret: bool | None = None):
     """Fused direct conv layer for any kernel/stride geometry.
 
     ``pallas=True`` runs the strided stream-buffered kernel (``direct.py``)
     — AlexNet's conv1/conv2 datapath on the ``pallas`` route;
     ``pallas=False`` is the ``lax.conv_general_dilated`` oracle with the
-    same fused-layer signature (``ref.conv2d_ref``).
+    same fused-layer signature (``ref.conv2d_ref``).  ``checksum=True``
+    returns ``(y, verdict)`` on both routes (constant 0 off-Pallas).
     """
     if pallas:
         return _d.conv2d_direct(x, w, b, w_packed, stride=stride,
@@ -131,6 +140,8 @@ def conv2d_direct(x, w, b=None, w_packed=None, *, stride: int = 1,
                                 batch_block=batch_block,
                                 weight_prefetch=weight_prefetch,
                                 row_parallel=row_parallel,
+                                checksum=checksum,
                                 interpret=_interp(interpret))
-    return conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
-                      relu=relu, lrn=lrn, pool=pool)
+    y = conv2d_ref(x, w, b, stride=stride, padding=padding, groups=groups,
+                   relu=relu, lrn=lrn, pool=pool)
+    return (y, jnp.zeros((), jnp.int32)) if checksum else y

@@ -174,6 +174,7 @@ class WinogradPlan:
     nkb: int
     ph_out: int             # pooled rows (== out_h when no pool)
     pw_out: int
+    checksum: bool = False  # ABFT checksum row on every weight tile
 
     @property
     def n(self) -> int:
@@ -187,13 +188,15 @@ class WinogradPlan:
     def weights(self) -> dma.WeightPlan:
         return dma.WeightPlan(g=self.g, nkb=self.nkb, ncb=self.ncb,
                               Cb=self.Cb, Kb=self.Kb,
-                              spatial=(self.n, self.n))
+                              spatial=(self.n, self.n),
+                              checksum=self.checksum)
 
 
 def plan(x_shape, w_shape, *, m: int = 4, padding: str = "SAME",
          groups: int = 1, lrn=None, pool=None, row_block: int = 8,
          pool_row_block: int | None = None, c_block: int | None = None,
-         k_block: int = 128, batch_block: int = 8) -> WinogradPlan:
+         k_block: int = 128, batch_block: int = 8,
+         checksum: bool = False) -> WinogradPlan:
     """Derive the full launch plan from shapes + static params."""
     r = w_shape[0]
     t = winograd_transform(m, r)
@@ -259,7 +262,8 @@ def plan(x_shape, w_shape, *, m: int = 4, padding: str = "SAME",
                         row_step=row_step, npr=npr, rows_out=rows_out,
                         w_out=w_out, thp=thp, Hp=Hp, Wp=Wp, Bb=Bb, Bp=Bp,
                         Cb=Cb, Cp=Cp, ncb=Cp // Cb, Kb=Kb, Kp=Kp,
-                        nkb=Kp // Kb, ph_out=ph_out, pw_out=pw_out)
+                        nkb=Kp // Kb, ph_out=ph_out, pw_out=pw_out,
+                        checksum=checksum)
 
 
 def pack_weights(w, p: WinogradPlan):
@@ -290,9 +294,13 @@ def _tiles_from_rows(rows, n: int, mm: int, nr: int, nw: int):
          for di in range(n)], axis=0).astype(jnp.float32)
 
 
-def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
-                   wbuf, sem, *, relu: bool, prefetch: bool, single: bool,
+def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, *refs,
+                   relu: bool, checksum: bool, prefetch: bool, single: bool,
                    row_parallel: bool):
+    if checksum:
+        sdc_ref, acc_ref, wbuf, sem = refs
+    else:
+        acc_ref, wbuf, sem = refs
     mm, n = at_ref.shape
     _, _, _, Rb, tw, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -300,8 +308,14 @@ def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single,
-                              row_parallel=row_parallel).astype(jnp.float32)
+                              single=single, row_parallel=row_parallel)
+    if checksum:
+        # ABFT: verify the resident tile's checksum row, then strip it —
+        # the GEMMs below consume exactly the same Cb rows as an unarmed
+        # launch, so clean armed output is bit-identical
+        dma.verify_tile_checksum(sdc_ref, v)
+        v = v[..., :-1, :]
+    v = v.astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -328,7 +342,7 @@ def _conv2d_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref, acc_ref,
 
 
 def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
-                         acc_ref, y_ref, wbuf, sem, *, relu: bool, lrn,
+                         *refs, relu: bool, checksum: bool, lrn,
                          pool, row_step: int, prefetch: bool, single: bool,
                          row_parallel: bool):
     """Layer-fused variant: conv + bias + ReLU + LRN + max-pool in VMEM.
@@ -340,6 +354,10 @@ def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
     only the pooled, normalized slab to HBM — the conv-resolution feature
     map never leaves VMEM (§3.5).
     """
+    if checksum:
+        sdc_ref, acc_ref, y_ref, wbuf, sem = refs
+    else:
+        acc_ref, y_ref, wbuf, sem = refs
     mm, n = at_ref.shape
     _, _, _, Rt, tw, Kb = acc_ref.shape
     ib = pl.program_id(1)
@@ -349,8 +367,11 @@ def _conv2d_fused_kernel(x_ref, w_tiles, b_ref, bt_ref, at_ref, out_ref,
     nc = pl.num_programs(3)
     bi = pl.program_id(4)                           # filter-cache image slot
     v = dma.fetch_weight_tile(w_tiles, wbuf, sem, prefetch=prefetch,
-                              single=single,
-                              row_parallel=row_parallel).astype(jnp.float32)
+                              single=single, row_parallel=row_parallel)
+    if checksum:
+        dma.verify_tile_checksum(sdc_ref, v)
+        v = v[..., :-1, :]
+    v = v.astype(jnp.float32)
 
     @pl.when(c == 0)
     def _init():
@@ -416,11 +437,23 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
 
     single = p.weights.n_tiles == 1
     row_par = bool(row_parallel) and not single
-    kernel = functools.partial(_conv2d_fused_kernel, relu=relu, lrn=lrn,
+    kernel = functools.partial(_conv2d_fused_kernel, relu=relu,
+                               checksum=p.checksum, lrn=lrn,
                                pool=pool, row_step=p.row_step,
                                prefetch=weight_prefetch, single=single,
                                row_parallel=row_par)
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
+                              lambda bo, i, k, c, bi: (bo, i, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype)]
+    if p.checksum:
+        # per-(batch, row) ABFT verdict: mismatched checksum lanes seen by
+        # that block's weight stream (0 everywhere == clean launch)
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda bo, i, k, c, bi: (bo, i)))
+        out_shape.append(jax.ShapeDtypeStruct((p.Bp // p.Bb, p.npr),
+                                              jnp.int32))
+    res = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
@@ -436,10 +469,8 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
             pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
             pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((p.Bb, p.rows_out, p.w_out, p.Kfull),
-                               lambda bo, i, k, c, bi: (bo, i, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct(
-            (p.Bp, p.npr * p.rows_out, p.w_out, p.Kfull), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((p.Bb, t.n, t.n, p.Rt, p.tw, p.Kb), jnp.float32),
             pltpu.VMEM((p.Bb, p.Rt * mm, p.tw * mm, p.Kfull), jnp.float32),
@@ -452,9 +483,12 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
     )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
+    out = res[0]
     if pool is not None:
-        return out[:B, :p.ph_out]
-    return out[:B, :p.out_h, :p.out_w]
+        y = out[:B, :p.ph_out]
+    else:
+        y = out[:B, :p.out_h, :p.out_w]
+    return (y, jnp.sum(res[1])) if p.checksum else y
 
 
 @functools.partial(jax.jit, static_argnames=("m", "padding", "relu", "groups",
@@ -462,14 +496,15 @@ def _conv2d_fused_call(x, w, b, w_packed, *, t, p: WinogradPlan, relu,
                                              "c_block", "k_block",
                                              "pool_row_block", "batch_block",
                                              "weight_prefetch", "row_parallel",
-                                             "interpret"))
+                                             "checksum", "interpret"))
 def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
                     padding: str = "SAME", relu: bool = False,
                     groups: int = 1, lrn=None, pool=None, row_block: int = 8,
                     pool_row_block: int | None = None,
                     c_block: int | None = None, k_block: int = 128,
                     batch_block: int = 8, weight_prefetch: bool = True,
-                    row_parallel: bool = False, interpret: bool = True):
+                    row_parallel: bool = False, checksum: bool = False,
+                    interpret: bool = True):
     """x (B,H,W,C); w (r,r,C//groups,K); stride-1 conv via F(m,r) x F(m,r).
 
     Fused pipeline: raw (halo-padded) feature map slabs stream HBM->VMEM via
@@ -501,13 +536,20 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
     budget (AlexNet layers get all of C resident — no slab re-fetch over the
     channel-block reduction), and ``row_block`` tiles the *compute*
     (tiles/scratch), not input residency (see ``conv2d_hbm_bytes``).
+
+    ABFT (``checksum=True``): the packed slab carries one extra bit-pattern
+    checksum row per tile (``dma.append_checksum_row``); the kernel verifies
+    each resident tile after the DMA slot swap and the call returns
+    ``(y, verdict)`` — verdict 0 means every tile streamed intact, > 0
+    counts mismatched checksum lanes.  The GEMMs consume the same Cb rows
+    either way, so a clean armed launch is bit-identical to unarmed.
     """
     r = w.shape[0]
     t = winograd_transform(m, r)
     p = plan(x.shape, w.shape, m=m, padding=padding, groups=groups,
              lrn=lrn, pool=pool, row_block=row_block,
              pool_row_block=pool_row_block, c_block=c_block,
-             k_block=k_block, batch_block=batch_block)
+             k_block=k_block, batch_block=batch_block, checksum=checksum)
     if p.fused:
         return _conv2d_fused_call(x, w, b, w_packed, t=t, p=p, relu=relu,
                                   lrn=lrn, pool=pool,
@@ -533,9 +575,19 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
     single = p.weights.n_tiles == 1
     row_par = bool(row_parallel) and not single
     kernel = functools.partial(_conv2d_kernel, relu=relu,
+                               checksum=p.checksum,
                                prefetch=weight_prefetch, single=single,
                                row_parallel=row_par)
-    out = pl.pallas_call(
+    out_specs = [pl.BlockSpec((p.Bb, p.Rt * t.m, p.tw * t.m, p.Kb),
+                              lambda bo, i, k, c, bi: (bo, i, 0, k))]
+    out_shape = [jax.ShapeDtypeStruct(
+        (p.Bp, p.thp * t.m, p.tw * t.m, g * p.Kp), x.dtype)]
+    if p.checksum:
+        out_specs.append(pl.BlockSpec((1, 1),
+                                      lambda bo, i, k, c, bi: (bo, i)))
+        out_shape.append(jax.ShapeDtypeStruct((p.Bp // p.Bb, p.npr),
+                                              jnp.int32))
+    res = pl.pallas_call(
         kernel,
         grid=(p.Bp // p.Bb, p.npr, g * p.nkb, p.ncb, p.Bb),
         in_specs=[
@@ -551,10 +603,8 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
             pl.BlockSpec((t.n, t.n), lambda bo, i, k, c, bi: (0, 0)),
             pl.BlockSpec((t.m, t.n), lambda bo, i, k, c, bi: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((p.Bb, p.Rt * t.m, p.tw * t.m, p.Kb),
-                               lambda bo, i, k, c, bi: (bo, i, 0, k)),
-        out_shape=jax.ShapeDtypeStruct(
-            (p.Bp, p.thp * t.m, p.tw * t.m, g * p.Kp), x.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((p.Bb, t.n, t.n, p.Rt, p.tw, p.Kb), jnp.float32),
             *dma.weight_dma_scratch(p.weights, w_tiles.dtype,
@@ -566,8 +616,8 @@ def conv2d_winograd(x, w, b=None, w_packed=None, *, m: int = 4,
     )(xg, w_tiles, bg, jnp.asarray(t.BT, jnp.float32),
       jnp.asarray(t.AT, jnp.float32))
 
-    y = out[:B, :p.out_h, :p.out_w]
+    y = res[0][:B, :p.out_h, :p.out_w]
     if p.Kp > p.K:
         y = y.reshape(B, p.out_h, p.out_w, g, p.Kp)[..., :p.K]
         y = y.reshape(B, p.out_h, p.out_w, g * p.K)
-    return y
+    return (y, jnp.sum(res[1])) if p.checksum else y

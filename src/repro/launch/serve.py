@@ -101,6 +101,11 @@ def serve_images(cfg, args) -> int:
     if hasattr(cfg, "weight_prefetch"):
         prefetch = getattr(args, "prefetch", "on") == "on"
         cfg = dataclasses.replace(cfg, weight_prefetch=prefetch)
+    sdc = getattr(args, "sdc", False) and hasattr(cfg, "sdc_abft")
+    if sdc:
+        # full SDC defense: ABFT checksums through the conv datapath,
+        # pre-dispatch slab fingerprints, magnitude-bounded screen
+        cfg = dataclasses.replace(cfg, sdc_abft=True)
     if hasattr(cfg, "conv_channels"):
         # per-layer resolved datapaths — `--route pallas` must show every
         # layer on a Pallas kernel, not a silent lax fallback — plus the
@@ -121,15 +126,23 @@ def serve_images(cfg, args) -> int:
                               slo_ms and getattr(args, "dynamic_buckets",
                                                  False)),
                           admission=bool(slo_ms and getattr(args, "admission",
-                                                            False)))
+                                                            False)),
+                          verify_slabs=sdc,
+                          screen_abs_max=1e6 if sdc else None)
     faults = None
     if getattr(args, "chaos", False):
         # light seeded schedule: transient launches + non-finite logits,
         # enough to exercise retry/screen/health without stalling the run
+        specs = {"launch.transient": FaultSpec(rate=0.1),
+                 "retire.nonfinite": FaultSpec(rate=0.05)}
+        if sdc:
+            # SDC chaos: slab bit flips + plausible (finite) logit
+            # corruption, exercised against the armed defense
+            specs["slab.bitflip"] = FaultSpec(rate=0.1)
+            specs["retire.plausible"] = FaultSpec(rate=0.05,
+                                                  magnitude=1e8)
         faults = FaultInjector(
-            seed=derive_seed(args.seed, cfg.name),
-            specs={"launch.transient": FaultSpec(rate=0.1),
-                   "retire.nonfinite": FaultSpec(rate=0.05)})
+            seed=derive_seed(args.seed, cfg.name), specs=specs)
     eng = CnnEngine(cfg, scfg, seed=args.seed, faults=faults)
     rng = np.random.default_rng(args.seed)
     deadline_ms = getattr(args, "deadline_ms", None)
@@ -164,6 +177,19 @@ def serve_images(cfg, args) -> int:
           f"balanced={'yes' if acc['balanced'] else 'NO'} | "
           f"health={s['health']['state']} retried={s['images_retried']}"
           + (f" faults_fired={faults.total_fired}" if faults else ""))
+    if sdc:
+        d = s["sdc"]
+        print(f"sdc abft=on verify_slabs=on detections={d['detections']} "
+              f"slab_integrity_failures={d['slab_integrity_failures']} "
+              f"screen_nonfinite={d['screen_nonfinite']} "
+              f"screen_magnitude={d['screen_magnitude']}")
+    if faults is not None:
+        # per-point opportunity/fire audit — replays can be checked
+        # against this line without parsing the full stats dump
+        audit = " ".join(
+            f"{p}={c['fired']}/{c['opportunities']}"
+            for p, c in sorted(faults.summary().items()))
+        print(f"fault audit (fired/opportunities): {audit}")
     return done
 
 
@@ -203,6 +229,12 @@ def main():
                     help="CNN path: arm a seeded FaultInjector (transient "
                          "launch failures + non-finite logits) to exercise "
                          "the retry/screen/health machinery")
+    ap.add_argument("--sdc", action="store_true",
+                    help="CNN path: arm the silent-data-corruption defense "
+                         "(ABFT checksums on the conv weight stream, "
+                         "pre-dispatch slab fingerprints, magnitude-bounded "
+                         "logit screen); with --chaos also injects slab bit "
+                         "flips and plausible logit corruption")
     ap.add_argument("--workers", type=int, default=0,
                     help="CNN path: >0 serves through a Supervisor owning "
                          "this many worker processes (heartbeats, failover "

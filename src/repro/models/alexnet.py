@@ -22,8 +22,8 @@ import jax.numpy as jnp
 
 from ..kernels.bfp_matmul.ops import bfp_linear, fc_block, quantize_weights
 from ..kernels.conv.dma import WeightStager
-from ..nn.conv import ConvSpec, dispatch_conv, pack_conv_weights, \
-    resolve_kernel
+from ..nn.conv import ConvSpec, dispatch_conv, expected_pack_context, \
+    pack_conv_weights, resolve_kernel
 from ..nn.module import param, split
 from ..nn.pooling import LrnParams
 
@@ -51,6 +51,8 @@ class AlexNetConfig:
     fc_bfp: bool = False           # shared-exponent BFP FC weight stream §3.6
     conv_bfp: bool = False         # §3.6 BFP on the staged conv filter slabs
     weight_prefetch: bool = True   # §3.5 double-buffered in-kernel DMA stream
+    sdc_abft: bool = False         # ABFT checksum row on the filter stream;
+                                   # forward returns (logits, sdc_verdict)
     lrn_n: int = 5
     lrn_k: float = 2.0
     lrn_alpha: float = 1e-4
@@ -175,7 +177,7 @@ def load_tuned_plans(cfg: AlexNetConfig, batch: int, *, path=None):
 
 
 def pack_serving_slabs(params, cfg: AlexNetConfig, batch: int, *,
-                       plans=None) -> dict:
+                       plans=None, fingerprint: bool = False) -> dict:
     """Pack-once serving slabs for one compiled batch shape: every conv
     layer's :class:`~repro.nn.conv.PackedConvWeights` (tile-packed, plan-
     blocked, §3.6 BFP-quantized under ``cfg.conv_bfp``), plus fc6's
@@ -188,6 +190,15 @@ def pack_serving_slabs(params, cfg: AlexNetConfig, batch: int, *,
     which is what the eager-path :class:`WeightStager` could never give
     the compiled path.  Pure function of (params, config, batch), so an
     engine packs each bucket's slabs exactly once.
+
+    SDC defense: ``cfg.sdc_abft`` packs each slab with its per-tile ABFT
+    checksum row (the kernels verify it in-stream); ``fingerprint=True``
+    additionally stamps each slab with a pack-time
+    :class:`~repro.nn.conv.SlabFingerprint` so the engine can verify slab
+    integrity before every dispatch (``CnnServeConfig.verify_slabs``).
+    Fingerprinting crcs the packed bytes on the host — fine here (packing
+    is already a synchronous one-time cost per bucket), opt-in because the
+    eager prefetch path cannot afford the device sync.
     """
     plans = plans or {}
     route = _route(cfg)
@@ -198,7 +209,8 @@ def pack_serving_slabs(params, cfg: AlexNetConfig, batch: int, *,
         name = f"conv{i + 1}"
         packed[name] = pack_conv_weights(
             spec, (batch, h, h, c_in), params[name]["w"],
-            bfp_pack=cfg.conv_bfp, plan=plans.get(name))
+            bfp_pack=cfg.conv_bfp, abft=cfg.sdc_abft,
+            fingerprint=fingerprint, plan=plans.get(name))
         h, c_in = spec.out_hw(h), c_out
     if cfg.fc_bfp:
         packed["fc6"] = _stage_fc6(params, cfg)
@@ -237,9 +249,18 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
     or shape-stale entry falls back to in-trace packing — identical
     values) and the stager/prefetch hooks are skipped, since the §3.5
     staging already happened once on the host.
+
+    SDC defense: with ``cfg.sdc_abft`` each layer dispatches with
+    ``abft=True`` and the return becomes ``(flat_features, sdc)`` where
+    ``sdc`` is the summed int32 ABFT mismatch count across all conv layers
+    — 0 on a clean pass, positive iff some staged filter tile's bits
+    changed between pack and consumption.  The feature values themselves
+    stay bit-identical to the unarmed forward.
     """
     x = images.astype(jnp.dtype(cfg.dtype))
     route = _route(cfg)
+    abft = cfg.sdc_abft
+    sdc = jnp.zeros((), jnp.int32)
     stager = WeightStager() if stager is None else stager
     specs = [s.with_route(route) for s in layer_specs(cfg)]
 
@@ -250,9 +271,13 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
             plan = plans.get(f"conv{i + 1}")
             kw = ({"plan": plan} if plan is not None
                   else {"weight_prefetch": cfg.weight_prefetch})
-            x = dispatch_conv(spec, x, p["w"], p["b"],
+            x = dispatch_conv(spec, x, p["w"], p["b"], abft=abft,
                               w_packed=packed.get(f"conv{i + 1}"), **kw)
-        return x.reshape(x.shape[0], -1)
+            if abft:
+                x, v = x
+                sdc = sdc + v
+        flat = x.reshape(x.shape[0], -1)
+        return (flat, sdc) if abft else flat
 
     # the plan chain follows the *actual* input (the forward works for any
     # image size), so slabs staged here always match what dispatch resolves
@@ -272,11 +297,20 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
         # can never serve the wrong quantization or blocking
         plan = plans.get(f"conv{i+1}")
         key = (f"conv{i+1}:{shapes[i]}:bfp{int(cfg.conv_bfp)}"
+               f":abft{int(abft)}"
                + (f":plan{plan.to_dict()}" if plan is not None else ""))
         if key not in staged:
+            # a verifying stager gets fingerprinted slabs plus the pack
+            # context it should expect on cache hits, so a slab staged
+            # under different fusion flags/knobs is repacked, not reused
+            verify = getattr(stager, "verify", False)
+            expect = (expected_pack_context(
+                specs[i], shapes[i], bfp_pack=cfg.conv_bfp, abft=abft,
+                plan=plan) if verify else None)
             staged[key] = stager.stage(
                 key, pack_conv_weights, specs[i], shapes[i],
-                params[f"conv{i+1}"]["w"], bfp_pack=cfg.conv_bfp, plan=plan)
+                params[f"conv{i+1}"]["w"], bfp_pack=cfg.conv_bfp,
+                abft=abft, fingerprint=verify, plan=plan, expect=expect)
         return staged[key]
 
     def stage_fc():
@@ -294,8 +328,12 @@ def features(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
         kw = ({"plan": plan} if plan is not None
               else {"weight_prefetch": cfg.weight_prefetch})
         x = dispatch_conv(spec, x, p["w"], p["b"], w_packed=stage(i),
-                          prefetch_next=nxt, **kw)
-    return x.reshape(x.shape[0], -1)
+                          abft=abft, prefetch_next=nxt, **kw)
+        if abft:
+            x, v = x
+            sdc = sdc + v
+    flat = x.reshape(x.shape[0], -1)
+    return (flat, sdc) if abft else flat
 
 
 def classifier(params, cfg: AlexNetConfig, feats, *, stager=None,
@@ -335,12 +373,17 @@ def apply(params, cfg: AlexNetConfig, images, *, stager=None, plans=None,
     the quantized fc6 stream (§3.5 prefetch across the conv/FC seam).
     ``plans`` carries tuned per-layer launch plans into :func:`features`;
     ``packed`` carries :func:`pack_serving_slabs` slabs hoisted across the
-    jit boundary (pack-once compiled serving)."""
+    jit boundary (pack-once compiled serving).  With ``cfg.sdc_abft`` the
+    return is ``(logits, sdc)`` — the summed ABFT verdict rides alongside
+    the logits through the classifier untouched."""
     stager = WeightStager() if stager is None else stager
-    return classifier(params, cfg,
-                      features(params, cfg, images, stager=stager,
-                               plans=plans, packed=packed),
-                      stager=stager, packed=packed)
+    feats = features(params, cfg, images, stager=stager, plans=plans,
+                     packed=packed)
+    sdc = None
+    if cfg.sdc_abft:
+        feats, sdc = feats
+    logits = classifier(params, cfg, feats, stager=stager, packed=packed)
+    return (logits, sdc) if cfg.sdc_abft else logits
 
 
 def loss_fn(params, cfg: AlexNetConfig, batch):

@@ -48,14 +48,17 @@ layer's compute (see ``models/alexnet.py`` and
 from __future__ import annotations
 
 import math
+import zlib
 from dataclasses import dataclass, replace
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import bfp
 from ..core.winograd import conv2d_winograd
 from ..kernels.conv import direct as _direct_k
+from ..kernels.conv import dma as _dma
 from ..kernels.conv import winograd as _winograd_k
 from ..kernels.conv.ops import conv2d as pallas_conv2d
 from ..kernels.conv.ops import conv2d_direct as pallas_conv2d_direct
@@ -235,6 +238,53 @@ def resolve_kernel(spec: ConvSpec, in_hw=None) -> str:
 
 
 @dataclass(frozen=True)
+class SlabFingerprint:
+    """Pack-time identity of one staged weight slab: shape, dtype, a crc32
+    of the packed bytes, and the pack *context* (the spec/fusion/knob
+    string the slab was built under).  Computed once when the slab is
+    packed; :meth:`matches` re-derives all four from the live array, so a
+    corrupted slab (crc), a stale one (context — e.g. the layer was
+    repacked under different fusion flags), or a mis-shaped one never
+    reaches a kernel when the staging path verifies before dispatch.
+    """
+    shape: tuple
+    dtype: str
+    crc32: int
+    context: str | None = None
+
+    def matches(self, pw, *, expect=None) -> bool:
+        """Verify a packed slab (or raw array) against this fingerprint;
+        ``expect`` additionally pins the pack context the caller wants."""
+        if expect is not None and self.context != expect:
+            return False
+        data = getattr(pw, "data", pw)
+        if data is None or isinstance(data, jax.core.Tracer):
+            return data is None     # a tracer can't be checked host-side
+        host = np.asarray(data)
+        return (tuple(host.shape) == tuple(self.shape)
+                and str(host.dtype) == self.dtype
+                and zlib.crc32(host.tobytes()) == self.crc32)
+
+
+def slab_fingerprint(data, context: str | None = None):
+    """Fingerprint one packed array (None/tracer -> no fingerprint; crc32
+    forces a host transfer, so callers opt in at pack time only)."""
+    if data is None or isinstance(data, jax.core.Tracer):
+        return None
+    host = np.asarray(data)
+    return SlabFingerprint(shape=tuple(host.shape), dtype=str(host.dtype),
+                           crc32=zlib.crc32(host.tobytes()), context=context)
+
+
+def verify_packed(pw, *, expect: str | None = None) -> bool:
+    """True iff ``pw`` (a :class:`PackedConvWeights` or anything duck-typed
+    like one) carries an intact slab.  Values without a fingerprint have
+    nothing to verify against and pass."""
+    fp = getattr(pw, "fingerprint", None)
+    return fp is None or fp.matches(pw, expect=expect)
+
+
+@dataclass(frozen=True)
 class PackedConvWeights:
     """A staged weight slab: the resolved datapath it was packed for plus
     the packed array (tile-packed DMA slab on the Pallas kernels, the
@@ -246,10 +296,16 @@ class PackedConvWeights:
     boundary as an *argument* — the serving engines hoist their pack-once
     slabs out of the compiled forward this way instead of re-packing
     in-trace every call (ROADMAP's donated-buffer serving refactor).
+
+    ``fingerprint`` (a :class:`SlabFingerprint`, or None) is host-side
+    integrity metadata, deliberately EXCLUDED from the pytree — it must
+    never change a jit cache key, and tree ops (device_put, tree_map)
+    drop it; re-attach with ``dataclasses.replace`` after moving a slab.
     """
     kernel: str                     # resolved datapath (KERNELS member)
     data: object                    # jnp array or None
     bfp: bool = False
+    fingerprint: object = None      # SlabFingerprint | None (not a pytree leaf)
 
 
 jax.tree_util.register_pytree_node(
@@ -266,25 +322,28 @@ def _spec_fusion(spec: ConvSpec):
 
 
 def _pallas_weight_plan(spec: ConvSpec, kernel: str, in_shape, w_shape, *,
-                        lrn, pool, knobs: ConvPlan):
+                        lrn, pool, knobs: ConvPlan, abft: bool = False):
     """The weight-blocking plan the resolved Pallas kernel will use for
     this (spec, input shape, fusion args, launch knobs) — the one source
     of truth for slab shapes.  ``lrn``/``pool`` are the values the kernel
     call actually receives (a deferred bias strips them even when the spec
-    fuses)."""
+    fuses).  ``abft`` arms the checksum row, so slab shapes grow one Cb
+    row per tile."""
     if kernel == "pallas-winograd":
         return _winograd_k.plan(in_shape, w_shape, m=spec.winograd_m,
                                 padding=spec.padding, groups=spec.groups,
                                 lrn=lrn, pool=pool, c_block=knobs.c_block,
                                 pool_row_block=knobs.pool_row_block,
                                 k_block=knobs.k_block,
-                                batch_block=knobs.batch_block)
+                                batch_block=knobs.batch_block,
+                                checksum=abft)
     return _direct_k.plan(in_shape, w_shape, stride=spec.stride,
                           padding=spec.padding, pool=pool,
                           groups=spec.groups, c_block=knobs.c_block,
                           pool_row_block=knobs.pool_row_block,
                           k_block=knobs.k_block,
-                          batch_block=knobs.batch_block)
+                          batch_block=knobs.batch_block,
+                          checksum=abft)
 
 
 def _pack_for_plan(kernel: str, w, p, bfp_pack: bool):
@@ -295,13 +354,51 @@ def _pack_for_plan(kernel: str, w, p, bfp_pack: bool):
             else _direct_k.pack_weights)
     tiles = pack(w, p)
     if bfp_pack:
-        # per-tile shared exponents along the Cb contraction axis
+        # per-tile shared exponents along the Cb contraction axis.  An
+        # ABFT checksum row must cover the *final* slab bits, so strip it
+        # before quantizing (the quantization blocks then still tile Cb
+        # exactly) and recompute it over the requantized rows.
+        if p.checksum:
+            tiles = tiles[..., :-1, :]
         tiles = bfp.quantize_dequantize(
             tiles, block=math.gcd(p.weights.Cb, 32), axis=-2)
+        if p.checksum:
+            tiles = _dma.append_checksum_row(tiles)
     return tiles
 
 
+def pack_context(spec: ConvSpec, kernel: str, *, bfp_pack: bool,
+                 abft: bool, knobs: ConvPlan) -> str:
+    """Canonical pack-context string — everything that changes the bytes a
+    slab holds.  Stored in the fingerprint so a cache hit can detect a
+    slab packed under *different* fusion flags or knobs (the silent
+    stale-slab reuse the WeightStager verify path closes)."""
+    return (f"{kernel}:k{spec.kernel}s{spec.stride}g{spec.groups}"
+            f":{spec.padding}:relu{int(spec.relu)}"
+            f":lrn{int(spec.fuse_lrn)}:pool{int(spec.fuse_pool)}"
+            f"w{spec.pool_window}s{spec.pool_stride}"
+            f":bfp{int(bfp_pack)}:abft{int(abft)}"
+            f":kb{knobs.k_block}:bb{knobs.batch_block}")
+
+
+def expected_pack_context(spec: ConvSpec, in_shape, *, bfp_pack: bool = False,
+                          abft: bool = False, plan: ConvPlan | None = None,
+                          k_block=UNSET, batch_block=UNSET) -> str:
+    """The :func:`pack_context` string :func:`pack_conv_weights` would stamp
+    for these arguments — resolved the same way (plan route override, then
+    shape-aware kernel resolution), so staging-path callers can assert a
+    cached slab was packed under the fusion flags and knobs they are about
+    to dispatch with (``WeightStager.stage(expect=...)``)."""
+    knobs = plan_knobs(plan, k_block=k_block, batch_block=batch_block)
+    if plan is not None and plan.route is not None:
+        spec = spec.with_route(plan.route)
+    kernel = resolve_kernel(spec, in_hw=(in_shape[1], in_shape[2]))
+    return pack_context(spec, kernel, bfp_pack=bfp_pack, abft=abft,
+                        knobs=knobs)
+
+
 def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
+                      abft: bool = False, fingerprint: bool = False,
                       plan: ConvPlan | None = None, k_block=UNSET,
                       batch_block=UNSET) -> PackedConvWeights:
     """Build the weight slab for one conv layer ahead of its input.
@@ -328,21 +425,33 @@ def pack_conv_weights(spec: ConvSpec, in_shape, w, *, bfp_pack: bool = False,
     ``plan`` is an optional tuned :class:`ConvPlan` — the slab is blocked
     for its knobs, so staging and dispatch agree when both receive the
     same plan.  Explicit ``k_block``/``batch_block`` kwargs override it.
+
+    SDC defense: ``abft=True`` packs the slab with the per-tile ABFT
+    checksum row the kernels verify in-stream (pass the same flag to
+    :func:`dispatch_conv`); ``fingerprint=True`` attaches a pack-time
+    :class:`SlabFingerprint` (shape/dtype/crc32/pack-context) for the
+    staging-path integrity checks.  Fingerprinting forces the packed bytes
+    to the host (crc32), so it is opt-in — it would otherwise serialize
+    the async cross-layer staging pipeline.
     """
     knobs = plan_knobs(plan, k_block=k_block, batch_block=batch_block)
     if plan is not None and plan.route is not None:
         spec = spec.with_route(plan.route)
     kernel = resolve_kernel(spec, in_hw=(in_shape[1], in_shape[2]))
+    ctx = pack_context(spec, kernel, bfp_pack=bfp_pack, abft=abft,
+                       knobs=knobs)
     if kernel.startswith("pallas"):
         lrn_p, pool = _spec_fusion(spec)
         p = _pallas_weight_plan(spec, kernel, tuple(in_shape), w.shape,
-                                lrn=lrn_p, pool=pool, knobs=knobs)
-        return PackedConvWeights(kernel=kernel,
-                                 data=_pack_for_plan(kernel, w, p, bfp_pack),
-                                 bfp=bfp_pack)
-    data = (bfp.quantize_dequantize(w, block=math.gcd(w.shape[2], 32),
-                                    axis=2) if bfp_pack else None)
-    return PackedConvWeights(kernel=kernel, data=data, bfp=bfp_pack)
+                                lrn=lrn_p, pool=pool, knobs=knobs,
+                                abft=abft)
+        data = _pack_for_plan(kernel, w, p, bfp_pack)
+    else:
+        data = (bfp.quantize_dequantize(w, block=math.gcd(w.shape[2], 32),
+                                        axis=2) if bfp_pack else None)
+    return PackedConvWeights(
+        kernel=kernel, data=data, bfp=bfp_pack,
+        fingerprint=slab_fingerprint(data, ctx) if fingerprint else None)
 
 
 def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
@@ -350,7 +459,7 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
                   plan: ConvPlan | None = None, weight_prefetch=UNSET,
                   k_block=UNSET, batch_block=UNSET, c_block=UNSET,
                   pool_row_block=UNSET, row_parallel=UNSET,
-                  prefetch_next=None):
+                  abft: bool = False, prefetch_next=None):
     """Run one conv layer per its spec.  x (B,H,W,C), w (k,k,C//g,K), b (K,).
 
     Grouped convs are batched (``feature_group_count`` on the direct route,
@@ -376,6 +485,14 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
     ``route`` (when set) overrides the spec's route preference.  Explicit
     knob kwargs still win over the plan (see :func:`plan_knobs`), so call
     sites can pin single knobs on top of a tuned baseline.
+
+    ``abft=True`` arms the ABFT weight-stream verification and the return
+    becomes ``(y, verdict)`` uniformly across *all* routes: the Pallas
+    kernels verify each staged checksum tile after its DMA slot swap and
+    report the scalar int32 mismatch count; non-Pallas routes have no DMA
+    stream to corrupt, so their verdict is the constant 0.  The ``y``
+    values are bit-identical to the unarmed call (the GEMMs consume the
+    slab minus its checksum row).
     """
     assert w.shape[0] == w.shape[1] == spec.kernel, (w.shape, spec.kernel)
     knobs = plan_knobs(plan, batch_block=batch_block, k_block=k_block,
@@ -398,7 +515,8 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
     slab = None
     if w_packed is not None and kernel.startswith("pallas"):
         p = _pallas_weight_plan(spec, kernel, x.shape, w.shape,
-                                lrn=lrn_p, pool=pool, knobs=knobs)
+                                lrn=lrn_p, pool=pool, knobs=knobs,
+                                abft=abft)
         want = (p.weights.n_tiles, *p.weights.tile_shape)
         if (w_packed.kernel == kernel and w_packed.data is not None
                 and w_packed.data.shape == want):
@@ -424,7 +542,7 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
                           batch_block=knobs.batch_block,
                           weight_prefetch=knobs.weight_prefetch,
                           row_parallel=knobs.row_parallel,
-                          pallas=True, interpret=interpret)
+                          checksum=abft, pallas=True, interpret=interpret)
     elif kernel == "pallas-direct":
         y = pallas_conv2d_direct(x, w, bias, slab, stride=spec.stride,
                                  padding=spec.padding, relu=relu,
@@ -435,11 +553,18 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
                                  batch_block=knobs.batch_block,
                                  weight_prefetch=knobs.weight_prefetch,
                                  row_parallel=knobs.row_parallel,
-                                 pallas=True, interpret=interpret)
+                                 checksum=abft, pallas=True,
+                                 interpret=interpret)
     else:  # winograd (pure-jnp, differentiable)
         y = conv2d_winograd(x, w, bias, m=spec.winograd_m,
                             padding=spec.padding, relu=relu,
                             groups=spec.groups, lrn=lrn_p, pool=pool)
+    verdict = None
+    if abft:
+        if kernel.startswith("pallas"):
+            y, verdict = y
+        else:
+            verdict = jnp.zeros((), jnp.int32)
     if prefetch_next is not None:
         prefetch_next()             # stage layer N+1 behind this dispatch
     if defer_bias:
@@ -450,4 +575,4 @@ def dispatch_conv(spec: ConvSpec, x, w, b=None, *, interpret=None,
                            spec.lrn if spec.fuse_lrn else None,
                            (spec.pool_window, spec.pool_stride)
                            if spec.fuse_pool else None)
-    return y
+    return (y, verdict) if abft else y

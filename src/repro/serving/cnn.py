@@ -67,6 +67,21 @@ Fault tolerance (the chaos layer — ``serving/faults.py`` +
   datapath every Pallas kernel is bit-checked against), recorded as a
   degradation event rather than an outage; other buckets keep the fast
   route.
+* **Silent-data-corruption defense** — with the model's ``sdc_abft`` the
+  compiled forward returns ``(logits, sdc)``: the kernels verify an ABFT
+  checksum row on every staged filter tile as it streams through the
+  §3.5 DMA pipe, and a positive verdict at retirement means some weight
+  bits changed between pack and consumption — the batch is *never
+  served*; the engine repacks the bucket's slabs from the pristine
+  params and retries the group (counted in ``sdc_detections``, fed to
+  the health monitor / degradation ladder like any datapath failure).
+  ``verify_slabs`` adds a host-side pre-dispatch fingerprint check
+  (shape/dtype/crc32/pack-context) on the staged slabs — the layer that
+  catches corruption *and* stale-slab reuse before a forward is burned —
+  and ``screen_abs_max`` arms a magnitude bound on the retirement screen
+  for finite-but-implausible logits the isfinite screen cannot see.
+  Injected via the ``slab.bitflip`` / ``slab.stale`` /
+  ``retire.plausible`` fault points.
 
 No Python exception escapes :meth:`step`: injected and real launch/device
 errors are converted into the retry/health machinery above.
@@ -124,6 +139,9 @@ class CnnServeConfig:
     quarantine_threshold: int = 6   # consecutive failures -> quarantined
     cooldown_ms: float = 250.0      # circuit-breaker half-open cooldown
     degrade_threshold: int = 3      # per-bucket failures -> direct-route flip
+    # -- SDC defense (ABFT verdicts ride the model's sdc_abft flag) -----
+    verify_slabs: bool = False      # pre-dispatch slab fingerprint check
+    screen_abs_max: Optional[float] = None  # |logit| bound on the screen
 
 
 @dataclass
@@ -161,6 +179,7 @@ class _Group:
     bucket: int
     images: object              # device array (bucket, H, W, C), H2D async
     logits: object = None       # device array once compute is dispatched
+    sdc: object = None          # device scalar ABFT verdict (sdc_abft only)
     t_launch: float = 0.0       # forward dispatch time (service-time EWMA)
     first_compile: bool = False  # first time this bucket shape was launched
 
@@ -239,6 +258,15 @@ class CnnEngine:
         # one forward).
         mod, ccfg, plans = self.mod, cfg, self.plans
         self._hoist = hasattr(mod, "pack_serving_slabs")
+        # SDC defense plane: when the model config arms sdc_abft the
+        # compiled forward returns (logits, verdict) and retirement gates
+        # on the verdict; verify_slabs adds the pre-dispatch fingerprint
+        # check on the hoisted slabs.
+        self._abft = bool(getattr(cfg, "sdc_abft", False))
+        self.sdc_detections = 0
+        self.slab_integrity_failures = 0
+        self.screen_nonfinite = 0
+        self.screen_magnitude = 0
         self._packed: Dict[int, dict] = {}
         self._packed_direct: Dict[int, dict] = {}
         self._compiled: set = set()
@@ -384,8 +412,10 @@ class CnnEngine:
         on first use, then reused as jit arguments for every forward of
         that bucket — the compiled-path twin of the eager WeightStager)."""
         if bucket not in self._packed:
+            kw = ({"fingerprint": True} if self.scfg.verify_slabs else {})
             packed = self.mod.pack_serving_slabs(self.params, self.cfg,
-                                                 bucket, plans=self.plans)
+                                                 bucket, plans=self.plans,
+                                                 **kw)
             if self.mesh is not None:
                 packed = jax.device_put(packed,
                                         replicated_sharding(self.mesh))
@@ -494,11 +524,83 @@ class CnnEngine:
             self._packed_direct[bucket] = packed
         return self._packed_direct[bucket]
 
+    # -- SDC defense internals -----------------------------------------
+    def _slab_entries(self, packed: dict) -> List[str]:
+        """Names of the packed entries that are injectable/verifiable conv
+        slabs (a device tile array behind a PackedConvWeights), sorted for
+        deterministic payload-RNG indexing."""
+        return sorted(k for k, v in packed.items()
+                      if hasattr(v, "kernel")
+                      and getattr(v, "data", None) is not None)
+
+    def _inject_bitflip(self, bucket: int):
+        """``slab.bitflip`` payload: flip one bit — layer, byte, and bit
+        position all drawn from the point's seeded payload stream — in the
+        bucket's staged slab cache.  The pristine params are untouched, so
+        the repack after detection restores a clean slab."""
+        packed = self._slabs(bucket)
+        names = self._slab_entries(packed)
+        if not names:
+            return
+        rng = self.faults.payload_rng("slab.bitflip")
+        name = names[int(rng.integers(len(names)))]
+        pw = packed[name]
+        host = np.array(jax.device_get(pw.data))
+        flat = host.view(np.uint8).reshape(-1)
+        flat[int(rng.integers(flat.size))] ^= np.uint8(
+            1 << int(rng.integers(8)))
+        self._packed[bucket] = {
+            **packed, name: dataclasses.replace(pw, data=jnp.asarray(host))}
+
+    def _inject_stale(self, bucket: int):
+        """``slab.stale`` payload: one layer's cache entry starts serving a
+        *different* layer's slab data (its pack-time fingerprint stays, so
+        only the fingerprint check can tell) — the silent stale-reuse bug
+        class the ``verify_slabs`` path exists to catch."""
+        packed = self._slabs(bucket)
+        names = self._slab_entries(packed)
+        if len(names) < 2:
+            return
+        rng = self.faults.payload_rng("slab.stale")
+        i = int(rng.integers(len(names)))
+        victim, donor = names[i], names[(i + 1) % len(names)]
+        self._packed[bucket] = {
+            **packed, victim: dataclasses.replace(
+                packed[victim], data=packed[donor].data)}
+
+    def _slabs_intact(self, bucket: int, degraded: bool) -> bool:
+        """Pre-dispatch fingerprint verification of the bucket's staged
+        slabs (shape/dtype/crc32 against pack time).  Unfingerprinted
+        entries pass — the check is opt-in per slab."""
+        cache = self._packed_direct if degraded else self._packed
+        packed = cache.get(bucket)
+        if packed is None:
+            return True
+        from ..nn.conv import verify_packed
+        return all(verify_packed(v) for v in packed.values()
+                   if hasattr(v, "kernel"))
+
+    def _fail_batch(self, g: _Group, kind: str, *, repack: bool = False):
+        """Common datapath-failure disposition: count, feed health and the
+        degradation ladder, optionally drop the bucket's staged slabs (so
+        the retry repacks from the pristine params), re-queue the group."""
+        self.batches_failed += 1
+        self.health.record_failure(kind)
+        self._note_datapath_failure(g.bucket, kind)
+        if repack:
+            self._packed.pop(g.bucket, None)
+            self._packed_direct.pop(g.bucket, None)
+        self._requeue_group(g)
+
     def _screen(self, logits: np.ndarray) -> np.ndarray:
-        """Sampled finiteness screen on retired logits: True = row may be
-        served.  ``screen_sample`` rows are checked (all rows when the
-        sample covers the group); a NaN/Inf row is never served — the
-        request retries from its pristine host image instead."""
+        """Sampled screen on retired logits: True = row may be served.
+        ``screen_sample`` rows are checked (all rows when the sample covers
+        the group).  Two verdicts, counted separately: a NaN/Inf row
+        (``screen_nonfinite``) and — with ``screen_abs_max`` — a finite row
+        whose magnitude busts the bound (``screen_magnitude``, the
+        plausible-corruption class ``retire.plausible`` injects).  A
+        screened-out row is never served; the request retries from its
+        pristine host image instead."""
         n = len(logits)
         ok = np.ones(n, bool)
         k = self.scfg.screen_sample
@@ -506,7 +608,16 @@ class CnnEngine:
             return ok
         idx = (np.arange(n) if k >= n
                else np.unique(np.linspace(0, n - 1, k).astype(int)))
-        ok[idx] = np.isfinite(logits[idx].astype(np.float32)).all(axis=1)
+        rows = logits[idx].astype(np.float32)
+        finite = np.isfinite(rows).all(axis=1)
+        self.screen_nonfinite += int((~finite).sum())
+        ok[idx] = finite
+        amax = self.scfg.screen_abs_max
+        if amax is not None:
+            bounded = (np.abs(np.where(np.isfinite(rows), rows, 0.0))
+                       .max(axis=1) <= amax)
+            self.screen_magnitude += int((finite & ~bounded).sum())
+            ok[idx] &= bounded
         return ok
 
     def _quarantine_purge(self):
@@ -578,6 +689,21 @@ class CnnEngine:
         degraded = g.bucket in self._degraded
         compiled = self._compiled_direct if degraded else self._compiled
         g.first_compile = g.bucket not in compiled
+        # slab chaos (hoisted primary-route path only — that is where a
+        # staged slab cache exists to corrupt) + the pre-dispatch
+        # fingerprint gate: a corrupted or stale slab never reaches a
+        # forward; the bucket repacks from pristine params and the group
+        # retries with backoff.
+        if self.faults is not None and self._hoist and not degraded:
+            if self.faults.fire("slab.bitflip"):
+                self._inject_bitflip(g.bucket)
+            if self.faults.fire("slab.stale"):
+                self._inject_stale(g.bucket)
+        if (self.scfg.verify_slabs and self._hoist
+                and not self._slabs_intact(g.bucket, degraded)):
+            self.slab_integrity_failures += 1
+            self._fail_batch(g, "slab", repack=True)
+            return
         g.t_launch = self.clock.now()
         try:
             if self.faults is not None:
@@ -598,6 +724,8 @@ class CnnEngine:
                                        g.images)
             else:
                 g.logits = self._apply(self.params, g.images)
+            if self._abft:
+                g.logits, g.sdc = g.logits
         except EngineCrash as e:
             self.batches_failed += 1
             self.health.force_quarantine(f"crash: {e}")
@@ -623,11 +751,21 @@ class CnnEngine:
         try:
             logits = np.asarray(jax.device_get(g.logits))[: len(g.reqs)]
         except Exception:       # async device error surfaces at fetch
-            self.batches_failed += 1
-            self.health.record_failure("device")
-            self._note_datapath_failure(g.bucket, "device")
-            self._requeue_group(g)
+            self._fail_batch(g, "device")
             return
+        # ABFT verdict gate: a positive in-kernel checksum mismatch count
+        # means the staged filter bits changed between pack and the DMA
+        # stream — the whole batch is tainted and is *never served*.  The
+        # bucket's slab cache is dropped (retry repacks from the pristine
+        # params) and the group re-queues with backoff, so detection feeds
+        # the same retry/health/degradation machinery as any datapath
+        # failure.  This runs before any retire-stage chaos: the verdict
+        # belongs to the forward that computed these logits.
+        if self._abft and g.sdc is not None:
+            if int(np.asarray(jax.device_get(g.sdc))) > 0:
+                self.sdc_detections += 1
+                self._fail_batch(g, "sdc", repack=True)
+                return
         if self.faults is not None:
             spec = self.faults.fire("retire.latency")
             if spec is not None and spec.delay_ms:
@@ -635,6 +773,14 @@ class CnnEngine:
             if self.faults.fire("retire.nonfinite"):
                 logits = np.array(logits)       # own the buffer
                 logits[0] = np.nan
+            spec = self.faults.fire("retire.plausible")
+            if spec is not None:
+                # finite, bounded-magnitude corruption — crafted to pass
+                # the isfinite screen; only screen_abs_max can catch it
+                logits = np.array(logits)
+                rng = self.faults.payload_rng("retire.plausible")
+                row = int(rng.integers(len(logits)))
+                logits[row] = logits[row] + (spec.magnitude or 1e8)
         ok = self._screen(logits)
         now = self.clock.now()
         slo_s = (self.scfg.slo_ms or 0.0) / 1e3
@@ -765,6 +911,10 @@ class CnnEngine:
         self.batches_failed = 0
         self.bucket_counts = {}
         self.shed_reasons = {}
+        self.sdc_detections = 0
+        self.slab_integrity_failures = 0
+        self.screen_nonfinite = 0
+        self.screen_magnitude = 0
         self._t_serve = 0.0
 
     # ------------------------------------------------------------------
@@ -799,6 +949,11 @@ class CnnEngine:
             "expired": self.images_expired,
             "in_flight": in_flight,
             "balanced": self.images_submitted == accounted,
+            # SDC screen verdicts, separated: rows rejected for
+            # non-finiteness vs for busting the magnitude bound (both
+            # retried, so neither breaks the balance above)
+            "screen_nonfinite": self.screen_nonfinite,
+            "screen_magnitude": self.screen_magnitude,
         }
 
     def stats(self) -> dict:
@@ -825,5 +980,13 @@ class CnnEngine:
             "degraded_buckets": sorted(self._degraded),
             "degradations": list(self.degradations),
             "faults": self.faults.summary() if self.faults else None,
+            "sdc": {
+                "abft_armed": self._abft,
+                "verify_slabs": self.scfg.verify_slabs,
+                "detections": self.sdc_detections,
+                "slab_integrity_failures": self.slab_integrity_failures,
+                "screen_nonfinite": self.screen_nonfinite,
+                "screen_magnitude": self.screen_magnitude,
+            },
             "accounting": self.accounting(),
         }

@@ -40,6 +40,19 @@ Fault points (wired through ``CnnEngine._stage/_launch/_finish_oldest``):
                     ``delay_ms`` before replying, so the supervisor's
                     heartbeat deadline trips — exercises the liveness
                     ladder without killing the process
+``slab.bitflip``    silent data corruption: one bit flipped in a staged
+                    weight slab before dispatch (position drawn from the
+                    point's payload RNG stream) — the SEU/DRAM-corruption
+                    model ABFT exists for; caught by the in-kernel
+                    checksum verdict and/or the slab fingerprint check
+``slab.stale``      staging-path confusion: a *different layer's* slab is
+                    served from the cache at dispatch — models the silent
+                    stale-reuse bug class; caught by fingerprint context
+                    verification (``CnnServeConfig.verify_slabs``)
+``retire.plausible``bounded-magnitude logit perturbation (``magnitude``
+                    added to one row) — *finite* corruption that defeats
+                    the isfinite screen; caught only by the magnitude
+                    bound (``CnnServeConfig.screen_abs_max``)
 ==================  ======================================================
 
 Arming is zero-overhead when idle: the engine guards every hook with
@@ -63,7 +76,8 @@ __all__ = ["FAULT_POINTS", "FaultSpec", "FaultInjector",
 # points append (existing committed chaos schedules stay bit-reproducible)
 FAULT_POINTS = ("stage.corrupt", "launch.transient", "launch.crash",
                 "retire.nonfinite", "retire.latency",
-                "worker.crash", "worker.stall")
+                "worker.crash", "worker.stall",
+                "slab.bitflip", "slab.stale", "retire.plausible")
 
 
 class TransientLaunchError(RuntimeError):
@@ -90,11 +104,14 @@ class FaultSpec:
                   tests and committed chaos runs.
     ``limit``     cap on total firings (None = unbounded).
     ``delay_ms``  payload for ``retire.latency`` (spike duration).
+    ``magnitude`` payload for ``retire.plausible`` (the finite offset
+                  added to one logit row; 0.0 = the point's default).
     """
     rate: float = 0.0
     at: Tuple[int, ...] = ()
     limit: Optional[int] = None
     delay_ms: float = 0.0
+    magnitude: float = 0.0
 
     def __post_init__(self):
         assert 0.0 <= self.rate <= 1.0, self.rate
@@ -154,6 +171,15 @@ class FaultInjector:
         self._fired[point] += 1
         self.events.append(FaultEvent(point, i))
         return spec
+
+    def payload_rng(self, point: str) -> np.random.Generator:
+        """The point's own RNG stream, for fault *payloads* (which bit to
+        flip, which row to perturb) — drawn from the same per-point stream
+        as the firing decisions, so payload positions replay from (seed,
+        specs) too.  Only call after :meth:`fire` returned a spec (a
+        payload draw advances the stream)."""
+        assert point in FAULT_POINTS, point
+        return self._rng[point]
 
     @property
     def total_fired(self) -> int:

@@ -1,0 +1,390 @@
+"""Silent-data-corruption defense: ABFT checksums, slab fingerprints,
+magnitude screen, and the detect -> repack -> retry recovery loop.
+
+The property under test is the ABFT guarantee: a *single bit flip at any
+position* in any packed weight slab is detected before the affected
+logits retire (the bit-pattern integer checksum changes by +-2^k mod
+2^width, never 0), and the armed clean path is bit-identical to the
+unarmed one with zero false positives (integer wraparound addition is
+exact and order-independent).  Swept across the five reduced-AlexNet
+layer geometries on their natural Pallas kernels (direct for conv1/2,
+Winograd for conv3-5) x weight_prefetch on/off x row_parallel.
+
+The serving half mirrors the fault-tolerance contract: an injected
+``slab.bitflip`` / ``slab.stale`` / ``retire.plausible`` never serves a
+tainted row — the request completes later with logits bit-identical to
+the fault-free oracle, and ``submitted == completed + shed + expired``
+on every drained engine.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.conv import dma
+from repro.models import alexnet
+from repro.nn.conv import (dispatch_conv, expected_pack_context,
+                           pack_conv_weights, resolve_kernel, verify_packed)
+from repro.serving import (CnnEngine, CnnServeConfig, FaultInjector,
+                           FaultSpec, ImageRequest, derive_seed)
+
+# ---------------------------------------------------------------------------
+# helpers / fixtures
+# ---------------------------------------------------------------------------
+
+
+def _layer_geometries(image_size):
+    """(name, pallas-routed spec, input shape, filter shape) for every
+    reduced-AlexNet conv layer, shapes threaded like the model does."""
+    cfg = dataclasses.replace(get_config("alexnet").reduced(),
+                              image_size=image_size, use_pallas=True)
+    geoms = []
+    h, c_in = cfg.image_size, cfg.in_channels
+    for i, (spec, c_out) in enumerate(zip(alexnet.layer_specs(cfg),
+                                          cfg.conv_channels)):
+        spec = spec.with_route("pallas")
+        k, g = spec.kernel, spec.groups
+        geoms.append((f"conv{i + 1}", spec, (2, h, h, c_in),
+                      (k, k, c_in // g, c_out)))
+        h, c_in = spec.out_hw(h), c_out
+    return geoms
+
+
+# image 67 keeps all five layers on a Pallas kernel (at smaller images
+# conv5's fused pool exceeds its output and falls back to lax)
+GEOMS = _layer_geometries(67)
+assert all(resolve_kernel(s, in_hw=shape[1]).startswith("pallas")
+           for _, s, shape, _ in GEOMS)
+
+
+def _filters(shape, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape) * 0.1, jnp.float32)
+
+
+def _flip_bit(pw, bit_index):
+    """One slab with exactly one bit flipped at ``bit_index`` (mod size)."""
+    host = np.array(np.asarray(pw.data))
+    flat = host.view(np.uint8).reshape(-1)
+    byte, bit = (bit_index // 8) % flat.size, bit_index % 8
+    flat[byte] ^= np.uint8(1 << bit)
+    return dataclasses.replace(pw, data=jnp.asarray(host))
+
+
+# ---------------------------------------------------------------------------
+# checksum math: any single bit flip is detected, at every position
+# ---------------------------------------------------------------------------
+def test_checksum_detects_single_flip_at_any_position():
+    rng = np.random.default_rng(0)
+    tiles = jnp.asarray(rng.standard_normal((3, 2, 2, 8, 16)) * 0.3,
+                        jnp.float32)
+    slab = dma.append_checksum_row(tiles)
+    assert slab.shape == (3, 2, 2, 9, 16)
+    host = np.asarray(slab)
+    assert int(jax.vmap(dma.checksum_mismatches)(slab).sum()) == 0
+    nbits = host.view(np.uint8).size * 8
+    # boundary bits + a seeded sample across the whole slab — including
+    # positions inside the checksum row itself
+    positions = [0, 7, 31, nbits - 1, nbits // 2]
+    positions += [int(p) for p in rng.integers(0, nbits, size=96)]
+    for pos in positions:
+        flat = host.copy().view(np.uint8).reshape(-1)
+        flat[pos // 8] ^= np.uint8(1 << (pos % 8))
+        bad = jnp.asarray(flat.view(np.float32).reshape(host.shape))
+        n = int(jax.vmap(dma.checksum_mismatches)(bad).sum())
+        assert n > 0, f"flip at bit {pos} undetected"
+
+
+def test_checksum_row_survives_shuffle_but_not_value_change():
+    """The checksum is order-independent along Cb (wraparound integer
+    add), so a row permutation alone is NOT flagged — it flags value
+    changes, which is exactly the ABFT contract (the kernel consumes
+    tiles whole; ordering is fixed by the layout)."""
+    rng = np.random.default_rng(1)
+    tiles = jnp.asarray(rng.standard_normal((1, 6, 6, 4, 8)), jnp.float32)
+    slab = np.asarray(dma.append_checksum_row(tiles))
+    shuffled = slab.copy()
+    shuffled[..., [0, 1], :] = shuffled[..., [1, 0], :]
+    assert int(jax.vmap(dma.checksum_mismatches)(
+        jnp.asarray(shuffled)).sum()) == 0
+    changed = slab.copy()
+    changed[0, 0, 0, 0, 0] *= 2.0
+    assert int(jax.vmap(dma.checksum_mismatches)(
+        jnp.asarray(changed)).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# kernel sweep: five geometries x both kernels x prefetch x row_parallel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("prefetch", [True, False],
+                         ids=["prefetch", "sync"])
+@pytest.mark.parametrize("row_parallel", [False, True],
+                         ids=["seq", "rowpar"])
+@pytest.mark.parametrize("name,spec,in_shape,w_shape", GEOMS,
+                         ids=[g[0] for g in GEOMS])
+def test_kernel_abft_clean_and_flip(name, spec, in_shape, w_shape,
+                                    prefetch, row_parallel):
+    rng = np.random.default_rng(hash(name) % 2 ** 31)
+    x = jnp.asarray(rng.standard_normal(in_shape), jnp.float32)
+    w = _filters(w_shape, seed=3)
+    b = jnp.asarray(rng.standard_normal((w_shape[-1],)) * 0.1, jnp.float32)
+    kw = dict(interpret=True, weight_prefetch=prefetch,
+              row_parallel=row_parallel)
+    pw = pack_conv_weights(spec, in_shape, w, abft=True, fingerprint=True)
+    assert pw.kernel.startswith("pallas"), (name, pw.kernel)
+
+    # clean: armed output bit-identical to unarmed, verdict exactly 0
+    y0 = dispatch_conv(spec, x, w, b, **kw)
+    y1, v = dispatch_conv(spec, x, w, b, w_packed=pw, abft=True, **kw)
+    assert jnp.array_equal(y0, y1), "armed clean path diverged"
+    assert int(v) == 0, "false positive on a clean slab"
+
+    # one seeded single-bit flip anywhere in the slab -> detected
+    nbits = np.asarray(pw.data).view(np.uint8).size * 8
+    pos = int(np.random.default_rng(17).integers(nbits))
+    _, v_bad = dispatch_conv(spec, x, w, b, w_packed=_flip_bit(pw, pos),
+                             abft=True, **kw)
+    assert int(v_bad) > 0, f"{name}: flip at bit {pos} undetected"
+
+
+def test_kernel_abft_bfp_slab_clean_and_flip():
+    """BFP-quantized slabs: the checksum row covers the *requantized*
+    bits (appended post-quantization), so clean verdicts stay 0 and
+    flips in the quantized slab are still caught."""
+    name, spec, in_shape, w_shape = GEOMS[2]          # conv3, winograd
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(in_shape), jnp.float32)
+    w = _filters(w_shape, seed=5)
+    pw = pack_conv_weights(spec, in_shape, w, bfp_pack=True, abft=True)
+    y0 = dispatch_conv(spec, x, w, None, interpret=True,
+                       w_packed=pack_conv_weights(spec, in_shape, w,
+                                                  bfp_pack=True))
+    y1, v = dispatch_conv(spec, x, w, None, interpret=True, w_packed=pw,
+                          abft=True)
+    assert jnp.array_equal(y0, y1) and int(v) == 0
+    _, v_bad = dispatch_conv(spec, x, w, None, interpret=True,
+                             w_packed=_flip_bit(pw, 12345), abft=True)
+    assert int(v_bad) > 0
+
+
+# ---------------------------------------------------------------------------
+# slab fingerprints + the WeightStager cache-hit verification
+# ---------------------------------------------------------------------------
+def test_fingerprint_catches_flip_shape_and_context():
+    name, spec, in_shape, w_shape = GEOMS[3]
+    w = _filters(w_shape, seed=7)
+    pw = pack_conv_weights(spec, in_shape, w, abft=True, fingerprint=True)
+    assert verify_packed(pw)
+    assert not verify_packed(_flip_bit(pw, 99))
+    # context mismatch: same bytes, wrong pack flags expected
+    ctx = expected_pack_context(spec, in_shape, abft=True)
+    assert pw.fingerprint.context == ctx
+    assert pw.fingerprint.matches(pw, expect=ctx)
+    other = expected_pack_context(spec, in_shape, abft=False)
+    assert not pw.fingerprint.matches(pw, expect=other)
+    # unfingerprinted slabs always pass (the check is opt-in)
+    assert verify_packed(pack_conv_weights(spec, in_shape, w, abft=True))
+
+
+def test_fingerprint_excluded_from_pytree():
+    """The fingerprint must not leak into jit cache keys or tree ops —
+    flatten/unflatten drops it (re-attach via dataclasses.replace)."""
+    name, spec, in_shape, w_shape = GEOMS[2]
+    pw = pack_conv_weights(spec, in_shape, _filters(w_shape, 11),
+                           abft=True, fingerprint=True)
+    leaves, treedef = jax.tree_util.tree_flatten(pw)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert rebuilt.fingerprint is None
+    assert rebuilt.kernel == pw.kernel
+    assert jnp.array_equal(rebuilt.data, pw.data)
+
+
+def test_stager_cache_hit_verification_repacks():
+    """A verifying WeightStager detects a corrupted or contextually stale
+    cached slab on the *hit* path and repacks instead of serving it —
+    the silent stale-slab reuse failure the fingerprint context closes."""
+    name, spec, in_shape, w_shape = GEOMS[2]
+    w = _filters(w_shape, seed=13)
+    stager = dma.WeightStager(verify=True)
+    ctx = expected_pack_context(spec, in_shape, abft=True)
+    pack = lambda: stager.stage("k", pack_conv_weights, spec, in_shape, w,
+                                abft=True, fingerprint=True, expect=ctx)
+    first = pack()
+    assert stager.misses == 1
+    assert pack() is first and stager.hits == 1     # intact hit
+    # corrupt the cached slab in place -> next hit repacks
+    stager._cache["k"] = _flip_bit(first, 4242)
+    again = pack()
+    assert stager.integrity_failures == 1 and stager.misses == 2
+    assert verify_packed(again) and jnp.array_equal(again.data, first.data)
+    # same bytes, wrong expected context (e.g. layer repacked under
+    # different fusion flags) -> also repacked, not reused
+    wrong = expected_pack_context(spec, in_shape, abft=False)
+    stager.stage("k", pack_conv_weights, spec, in_shape, w,
+                 abft=True, fingerprint=True, expect=wrong)
+    assert stager.integrity_failures == 2
+    # a non-verifying stager serves the corrupted hit untouched (the
+    # pre-PR behavior, kept for the zero-sync eager prefetch path)
+    plain = dma.WeightStager()
+    plain._cache["k"] = _flip_bit(first, 7)
+    assert plain.stage("k", pack_conv_weights, spec, in_shape, w,
+                       abft=True) is plain._cache["k"]
+
+
+def test_fault_points_appended_not_reordered():
+    """Per-point RNG streams are keyed by FAULT_POINTS index: committed
+    chaos schedules stay bit-reproducible only if new points append."""
+    from repro.serving.faults import FAULT_POINTS
+    assert FAULT_POINTS[:7] == (
+        "stage.corrupt", "launch.transient", "launch.crash",
+        "retire.nonfinite", "retire.latency", "worker.crash",
+        "worker.stall")
+    assert FAULT_POINTS[7:] == ("slab.bitflip", "slab.stale",
+                                "retire.plausible")
+
+
+# ---------------------------------------------------------------------------
+# serving engine: detect -> repack -> retry, never serve tainted rows
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sdc_served():
+    """Armed reduced config (35px keeps engine compiles cheap) + params
+    + the fault-free armed oracle logits for a fixed probe set."""
+    cfg = dataclasses.replace(get_config("alexnet").reduced(),
+                              image_size=35, use_pallas=True,
+                              sdc_abft=True)
+    params = alexnet.init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(42)
+    imgs = [rng.standard_normal((35, 35, 3)).astype(np.float32)
+            for _ in range(8)]
+    eng = CnnEngine(cfg, _scfg(), params=params)
+    oracle = _serve(eng, imgs)
+    assert all(r.done for r in oracle)
+    return cfg, params, imgs, [np.asarray(r.logits) for r in oracle]
+
+
+def _scfg(**kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("retry_backoff_ms", 0.01)
+    kw.setdefault("screen_sample", 4)
+    return CnnServeConfig(**kw)
+
+
+def _serve(eng, imgs, retries=5):
+    rs = [ImageRequest(image=im, retries=retries) for im in imgs]
+    for r in rs:
+        eng.submit(r)
+    eng.run_until_done()
+    return rs
+
+
+def _balanced(eng):
+    acc = eng.accounting()
+    return acc["balanced"] and acc["in_flight"] == 0
+
+
+def test_engine_bitflip_detected_before_retire_bitmatch(sdc_served):
+    cfg, params, imgs, oracle = sdc_served
+    eng = CnnEngine(cfg, _scfg(), params=params)
+    _serve(eng, imgs[:4])               # warm compiles before arming
+    eng.arm_faults(FaultInjector(
+        seed=derive_seed(0, "flip"),
+        specs={"slab.bitflip": FaultSpec(at=(0, 1))}))
+    eng.reset_metrics()
+    rs = _serve(eng, imgs)
+    fired = eng.faults.summary()["slab.bitflip"]["fired"]
+    assert fired == 2
+    assert eng.sdc_detections == fired  # every flip caught, none served
+    assert eng.images_retried > 0       # recovery = repack + retry
+    assert all(r.done for r in rs) and _balanced(eng)
+    # completed logits bit-match the fault-free armed oracle: the retry
+    # re-dispatched against a slab repacked from the pristine params
+    for r, want in zip(rs, oracle):
+        assert np.array_equal(np.asarray(r.logits), want)
+
+
+def test_engine_verify_slabs_catches_flip_and_stale(sdc_served):
+    cfg, params, imgs, oracle = sdc_served
+    eng = CnnEngine(cfg, _scfg(verify_slabs=True), params=params)
+    _serve(eng, imgs[:4])
+    eng.arm_faults(FaultInjector(
+        seed=derive_seed(0, "stale"),
+        specs={"slab.bitflip": FaultSpec(at=(0,)),
+               "slab.stale": FaultSpec(at=(1,))}))
+    eng.reset_metrics()
+    rs = _serve(eng, imgs)
+    # both corruption classes caught *pre-dispatch* by the fingerprint
+    # check — the stale slab is only catchable here (a wrong-shape slab
+    # would be silently repacked in-trace by the dispatch shape guard)
+    assert eng.slab_integrity_failures == 2
+    assert eng.sdc_detections == 0      # never reached a forward
+    assert all(r.done for r in rs) and _balanced(eng)
+    for r, want in zip(rs, oracle):
+        assert np.array_equal(np.asarray(r.logits), want)
+
+
+def test_engine_plausible_corruption_screened(sdc_served):
+    cfg, params, imgs, oracle = sdc_served
+    eng = CnnEngine(cfg, _scfg(screen_abs_max=1e4), params=params)
+    _serve(eng, imgs[:4])
+    eng.arm_faults(FaultInjector(
+        seed=derive_seed(0, "plausible"),
+        specs={"retire.plausible": FaultSpec(at=(0,), magnitude=1e6)}))
+    eng.reset_metrics()
+    rs = _serve(eng, imgs)
+    assert eng.screen_magnitude >= 1    # finite corruption caught by the
+    assert eng.screen_nonfinite == 0    # magnitude bound, not isfinite
+    assert eng.images_retried >= 1
+    assert all(r.done for r in rs) and _balanced(eng)
+    acc = eng.accounting()
+    assert acc["screen_magnitude"] == eng.screen_magnitude
+    for r, want in zip(rs, oracle):
+        assert np.array_equal(np.asarray(r.logits), want)
+
+
+def test_engine_armed_idle_sdc_bit_identical(sdc_served):
+    """Defense fully armed + injector attached but idle: serving must be
+    bit-identical to the unarmed engine (the no-overhead-when-clean
+    contract, extended to the SDC points)."""
+    cfg, params, imgs, oracle = sdc_served
+    eng = CnnEngine(cfg, _scfg(verify_slabs=True, screen_abs_max=1e6),
+                    params=params)
+    eng.arm_faults(FaultInjector(seed=derive_seed(0, "idle"), specs={}))
+    rs = _serve(eng, imgs)
+    assert eng.sdc_detections == 0 and eng.slab_integrity_failures == 0
+    assert eng.screen_magnitude == 0
+    for r, want in zip(rs, oracle):
+        assert np.array_equal(np.asarray(r.logits), want)
+
+
+def test_engine_repeated_sdc_failures_degrade_bucket(sdc_served):
+    """Consecutive detections on one bucket walk the degradation ladder:
+    the bucket flips to the direct route (no Pallas weight stream to
+    corrupt) and the pen still completes, reported as a degradation."""
+    cfg, params, imgs, _ = sdc_served
+    eng = CnnEngine(cfg, _scfg(degrade_threshold=3,
+                               quarantine_threshold=10), params=params)
+    _serve(eng, imgs[:4])
+    eng.arm_faults(FaultInjector(
+        seed=derive_seed(0, "degrade"),
+        specs={"slab.bitflip": FaultSpec(at=(0, 1, 2))}))
+    eng.reset_metrics()
+    rs = _serve(eng, imgs[:4], retries=6)
+    assert eng.sdc_detections == 3
+    assert eng.stats()["degraded_buckets"] == [4]
+    assert eng.stats()["degradations"][0]["reason"] == "sdc"
+    assert all(r.done for r in rs) and _balanced(eng)
+
+
+def test_engine_stats_surface_sdc_block(sdc_served):
+    cfg, params, imgs, _ = sdc_served
+    eng = CnnEngine(cfg, _scfg(verify_slabs=True, screen_abs_max=1e6),
+                    params=params)
+    _serve(eng, imgs[:2])
+    s = eng.stats()["sdc"]
+    assert s == {"abft_armed": True, "verify_slabs": True,
+                 "detections": 0, "slab_integrity_failures": 0,
+                 "screen_nonfinite": 0, "screen_magnitude": 0}
